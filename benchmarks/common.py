@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timing, CSV emission, TPU cost modeling."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+from repro.core.pump_plan import HBM_BW, PEAK_FLOPS_BF16
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (jax block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def tpu_step_model(block_bytes: int, flops: float, pump: int,
+                   fixed_overhead_s: float = 1e-6) -> float:
+    """Modeled TPU step time (s) for one wide transaction of `pump` blocks."""
+    dma = pump * block_bytes / HBM_BW + fixed_overhead_s
+    compute = pump * flops / PEAK_FLOPS_BF16
+    return max(dma, compute)

@@ -1,0 +1,36 @@
+"""Benchmark harness: one function per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [table2|table3|table45|table6|roofline]
+
+Prints ``name,us_per_call,derived`` CSV rows.  The roofline table (per
+arch × shape) reads the dry-run JSON if present and is also runnable
+standalone via ``python -m benchmarks.roofline``.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    print("name,us_per_call,derived")
+
+    if which in ("all", "table2"):
+        from . import vecadd_table2
+        vecadd_table2.main()
+    if which in ("all", "table3"):
+        from . import matmul_table3
+        matmul_table3.main()
+    if which in ("all", "table45"):
+        from . import stencil_table45
+        stencil_table45.main()
+    if which in ("all", "table6"):
+        from . import floyd_table6
+        floyd_table6.main()
+    if which in ("all", "roofline"):
+        from . import roofline
+        roofline.summary_rows()
+
+
+if __name__ == "__main__":
+    main()

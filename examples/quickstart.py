@@ -1,0 +1,92 @@
+"""Quickstart: temporal vectorization end to end in five minutes (CPU).
+
+1. Build a dataflow graph for a computation, stream it, multi-pump it, and
+   watch the resource/throughput numbers move exactly as in the paper.
+2. Run the corresponding Pallas kernel (interpret mode) in both modes.
+3. Train a tiny LM with the *pod-scale* pump (microbatched gradient stream).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (AccessPattern, Affine, Domain, Graph,
+                        apply_multipump, apply_streaming, executor,
+                        throughput_model)
+from repro.core.ir import PumpSpec
+from repro.kernels import ops
+
+
+def section(title):
+    print(f"\n=== {title} " + "=" * max(0, 60 - len(title)))
+
+
+# ---------------------------------------------------------------------------
+section("1. The compiler view: stream, then multi-pump")
+N, V = 64, 4
+g = Graph("vecadd")
+g.memory("x", (N,)); g.memory("y", (N,)); g.memory("z", (N,))
+dom = Domain.of(("i", 0, N // V))
+acc = AccessPattern(dom, (Affine.of("i", V),), width=V)
+g.compute("add", dom, fn=lambda in0, in1: {"out0": in0 + in1},
+          vector_width=V)
+g.connect("x", "add", acc); g.connect("y", "add", acc)
+g.connect("add", "z", acc)
+
+streamed, report = apply_streaming(g)
+print("streaming pass:", report.streamed)
+
+for mode, label in (("T", "throughput ×M at equal resources"),
+                    ("R", "resources ÷M at equal throughput")):
+    pumped, rep = apply_multipump(streamed, factor=2, mode=mode)
+    r0, r1 = rep.resources_before, rep.resources_after
+    print(f"mode {mode} ({label}):")
+    print(f"  compute units {r0['compute_units']} -> {r1['compute_units']}, "
+          f"adapters +{r1['adapters']}, "
+          f"throughput {throughput_model(streamed):.0f} -> "
+          f"{throughput_model(pumped):.0f} elems/cycle")
+    # value preservation
+    x = np.arange(N, dtype=np.float32); y = 2 * x
+    out = executor.run(pumped, {"x": x, "y": y})["z"]
+    assert np.allclose(out, x + y)
+print("value-preservation: OK (issuer/packer are exact inverses)")
+
+# ---------------------------------------------------------------------------
+section("2. The kernel view: pumped Pallas kernels (interpret mode)")
+a = jax.random.normal(jax.random.PRNGKey(0), (128, 128), jnp.float32)
+b = jax.random.normal(jax.random.PRNGKey(1), (128, 128), jnp.float32)
+gold = a @ b
+for pump in (PumpSpec(1), PumpSpec(2, "T"), PumpSpec(2, "R")):
+    out = ops.matmul(a, b, bm=64, bn=64, bk=32, pump=pump)
+    err = float(jnp.abs(out - gold).max())
+    print(f"matmul pump={pump.factor} mode={pump.mode}: max err {err:.1e}")
+
+# the dependency-carrying showcase: Floyd-Warshall cannot be spatially
+# vectorized, but pumps fine — and AUTOPUMP picks M automatically by
+# running the full §3 pipeline (IR -> streaming -> capacity -> transform)
+from repro.core import autopump
+from repro.kernels import ref
+plan = autopump("floyd_warshall", 64)
+print(f"autopump(floyd_warshall): {plan.summary()}")
+d = jax.random.uniform(jax.random.PRNGKey(2), (64, 64), jnp.float32, 0.1, 10)
+fw1 = ops.floyd_warshall(d, pump=1)
+fw2 = ops.floyd_warshall(d, pump=plan.spec)
+assert np.allclose(np.asarray(fw1), np.asarray(fw2), atol=1e-5)
+print("floyd-warshall pumped == original: dependencies preserved")
+
+# ---------------------------------------------------------------------------
+section("3. The pod view: pumped gradient stream (grad accumulation)")
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.train.trainer import TrainConfig, train
+from repro import optim
+
+cfg = ModelConfig("quickstart-lm", "dense", 2, 64, 4, 2, 128, 128,
+                  dtype="float32")
+shape = ShapeConfig("qs", 64, 8, "train")
+out = train(cfg, shape,
+            optim.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=30),
+            TrainConfig(n_steps=30, pump_factor=4, log_every=10))
+print(f"trained with pump=4: loss {out['history'][0]['loss']:.3f} -> "
+      f"{out['history'][-1]['loss']:.3f}")
+print("\nquickstart complete.")

@@ -1,0 +1,55 @@
+"""End-to-end driver: train a ~100M-param qwen3-family LM for a few hundred
+steps with the pumped gradient stream, checkpointing, and failure recovery.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--dim 512]
+
+On this CPU container the default config is ~15M params so a few hundred
+steps finish in minutes; pass --dim 768 --layers 12 for the full ~100M run
+(same code path, longer wall time).  On a TPU slice, swap the host mesh for
+make_production_mesh() — nothing else changes.
+"""
+import argparse
+import shutil
+import tempfile
+
+from repro import optim
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.train.trainer import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--pump", default="2")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="example-lm", family="dense",
+        n_layers=args.layers, d_model=args.dim,
+        n_heads=max(4, args.dim // 64), n_kv_heads=max(2, args.dim // 128),
+        d_ff=args.dim * 4, vocab_size=8192, qk_norm=True,
+        tie_embeddings=True, dtype="float32")
+    print(f"[example] {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+    shape = ShapeConfig("ex", args.seq, args.batch, "train")
+
+    ckpt_root = tempfile.mkdtemp(prefix="repro_ckpt_")
+    pump = args.pump if args.pump == "auto" else int(args.pump)
+    out = train(
+        cfg, shape,
+        optim.AdamWConfig(lr=1e-3, warmup_steps=args.steps // 10,
+                          total_steps=args.steps),
+        TrainConfig(n_steps=args.steps, pump_factor=pump,
+                    ckpt_root=ckpt_root, ckpt_every=100, log_every=25))
+    h = out["history"]
+    print(f"[example] loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} "
+          f"(pump={out['pump']}, ckpts in {ckpt_root})")
+    assert h[-1]["loss"] < h[0]["loss"], "loss must decrease"
+    shutil.rmtree(ckpt_root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Architecture configs: one module per assigned arch + shape definitions."""
+from .base import (ARCH_IDS, FULL_ATTENTION_ARCHS, SHAPES, MLAConfig,
+                   ModelConfig, MoEConfig, SSMConfig, ShapeConfig, cells,
+                   load_arch)
+
+__all__ = ["ARCH_IDS", "FULL_ATTENTION_ARCHS", "SHAPES", "MLAConfig",
+           "ModelConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "cells",
+           "load_arch"]

@@ -1,0 +1,198 @@
+"""Config system: architecture + shape + run configs.
+
+Every assigned architecture is a :class:`ModelConfig` instance in its own
+module (``repro/configs/<id>.py``) exposing ``CONFIG`` (full size) and
+``SMOKE`` (reduced same-family config for CPU tests).  Shapes are the four
+assigned (seq_len × global_batch) cells; ``RunConfig`` carries everything the
+launcher needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0                 # routed experts
+    n_shared_experts: int = 0
+    top_k: int = 2
+    d_expert: int = 0                  # per-expert FFN hidden dim
+    capacity_factor: float = 1.25
+    # serve-path capacity: 0 = strictly dropless (cap = t·k, exact but the
+    # buffer is worst-case sized); >0 = cap = ceil(icf·t·k/E) with gates
+    # renormalized over kept assignments (§Perf B3)
+    inference_capacity_factor: float = 0.0
+    router_aux_weight: float = 0.001   # load-balance loss weight
+    n_dense_layers: int = 0            # leading layers that use dense FFN
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0               # 0 = no q compression
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128               # N
+    head_dim: int = 64                 # P
+    n_groups: int = 1                  # B/C groups (g)
+    chunk: int = 64                    # SSD chunk length
+    conv_width: int = 4
+    expand: int = 2                    # d_inner = expand * d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2-style): shared attention block every k ssm layers
+    hybrid_attn_every: int = 0
+    # enc-dec (whisper-style)
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500            # precomputed frame embeddings (stub)
+    # vlm (internvl2-style)
+    n_vision_tokens: int = 0           # prefix patch embeddings (stub)
+    d_vision: int = 0
+    # multi-token prediction (deepseek-v3)
+    mtp_depth: int = 0
+    # implementation switches
+    attention_impl: str = "xla_chunked"  # xla_chunked | pallas
+    ssm_impl: str = "xla"                # xla | pallas
+    attn_block_kv: int = 1024            # KV chunk for chunked attention
+    remat: bool = True
+    dtype: str = "bfloat16"
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab_size
+        hd = self.head_dim_
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family in ("dense", "moe", "encdec", "vlm", "hybrid"):
+            if self.mla:
+                m = self.mla
+                q = d * (self.n_heads * (m.nope_head_dim + m.rope_head_dim)) \
+                    if not m.q_lora_rank else \
+                    d * m.q_lora_rank + m.q_lora_rank * self.n_heads * (
+                        m.nope_head_dim + m.rope_head_dim)
+                kv = d * (m.kv_lora_rank + m.rope_head_dim) \
+                    + m.kv_lora_rank * self.n_heads * (
+                        m.nope_head_dim + m.v_head_dim)
+                o = self.n_heads * m.v_head_dim * d
+                attn = q + kv + o
+            else:
+                attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+                    + self.n_heads * hd * d
+            per_layer += attn
+        ffn_dense = 3 * d * self.d_ff
+        if self.family == "moe" and self.moe:
+            mo = self.moe
+            ffn_moe = 3 * d * mo.d_expert * (mo.n_experts + mo.n_shared_experts) \
+                + d * mo.n_experts
+            n_moe = L - mo.n_dense_layers
+            total_ffn = mo.n_dense_layers * ffn_dense + n_moe * ffn_moe
+            return emb + L * per_layer + total_ffn
+        if self.family in ("ssm", "hybrid") and self.ssm:
+            s = self.ssm
+            d_in = s.expand * d
+            n_h = d_in // s.head_dim
+            ssm_layer = (d * (2 * d_in + 2 * s.n_groups * s.state_dim + n_h)
+                         + d_in * d + s.conv_width * (
+                             d_in + 2 * s.n_groups * s.state_dim))
+            if self.family == "ssm":
+                return emb + L * ssm_layer
+            # hybrid: shared attn+ffn block counted once
+            shared = per_layer + ffn_dense
+            return emb + L * ssm_layer + shared
+        return emb + L * (per_layer + ffn_dense)
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only routed top-k)."""
+        if self.family != "moe" or not self.moe:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        mo = self.moe
+        full = self.param_count()
+        inactive = 3 * d * mo.d_expert * (mo.n_experts - mo.top_k) \
+            * (L - mo.n_dense_layers)
+        return full - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# archs for which long_500k is skipped (pure full-attention)
+FULL_ATTENTION_ARCHS = {
+    "deepseek-v3-671b", "deepseek-v2-lite-16b", "whisper-base",
+    "granite-3-2b", "qwen2.5-14b", "qwen2-7b", "qwen3-0.6b", "internvl2-2b",
+}
+
+ARCH_IDS = [
+    "mamba2-1.3b", "deepseek-v3-671b", "deepseek-v2-lite-16b", "whisper-base",
+    "granite-3-2b", "qwen2.5-14b", "qwen2-7b", "qwen3-0.6b", "internvl2-2b",
+    "zamba2-2.7b",
+]
+
+
+def _modname(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def load_arch(arch_id: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_modname(arch_id)}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def cells(include_skipped: bool = False):
+    """All assigned (arch × shape) dry-run cells."""
+    out = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES.values():
+            skip = shape.name == "long_500k" and arch in FULL_ATTENTION_ARCHS
+            if skip and not include_skipped:
+                continue
+            out.append((arch, shape.name))
+    return out

@@ -1,0 +1,32 @@
+"""Temporal vectorization core: dataflow IR + streaming + multi-pumping.
+
+Public API:
+
+    from repro.core import (
+        Graph, Domain, Affine, AccessPattern, PumpSpec,
+        apply_streaming, apply_multipump, effective_rate,
+        plan_kernel_pump, plan_trainer_pump,
+    )
+"""
+from .symbolic import Affine, AccessPattern, Domain, sequence_equivalent
+from .ir import (Edge, Graph, Node, NodeKind, PumpSpec, RateDomain, Space,
+                 effective_rate)
+from .streaming import apply_streaming, streamable_subgraph, StreamingReport
+from .multipump import (apply_multipump, check_multipump, PumpReport,
+                        throughput_model, pump_spec_for)
+from .pump_plan import (KernelEstimate, best_pump_factor, plan_kernel_pump,
+                        plan_trainer_pump, mxu_aligned_tile, align_up,
+                        PEAK_FLOPS_BF16, HBM_BW, ICI_BW, VMEM_BYTES, MXU_DIM)
+from . import executor
+from .autopump import autopump, AutopumpResult, BUILDERS
+
+__all__ = [
+    "Affine", "AccessPattern", "Domain", "sequence_equivalent",
+    "Edge", "Graph", "Node", "NodeKind", "PumpSpec", "RateDomain", "Space",
+    "effective_rate", "apply_streaming", "streamable_subgraph",
+    "StreamingReport", "apply_multipump", "check_multipump", "PumpReport",
+    "throughput_model", "pump_spec_for", "KernelEstimate", "best_pump_factor",
+    "plan_kernel_pump", "plan_trainer_pump", "mxu_aligned_tile", "align_up",
+    "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW", "VMEM_BYTES", "MXU_DIM",
+    "executor", "autopump", "AutopumpResult", "BUILDERS",
+]

@@ -1,0 +1,227 @@
+"""Automatic multi-pumping: the paper's end-to-end workflow as one call.
+
+The paper's §3 pipeline is: program → dataflow IR → streaming pass →
+(greedy largest-subgraph) multi-pump transform → codegen.  This module is
+that pipeline for our kernel library: each registered kernel carries an IR
+*builder* describing its data movement; :func:`autopump` runs the passes,
+checks legality, consults the capacity model for the factor, and returns
+both the transformed graph (for inspection/reporting) and the
+:class:`~repro.core.ir.PumpSpec` the Pallas layer consumes.
+
+    spec, report = autopump("matmul", m=4096, n=4096, k=4096)
+    out = kernels.matmul(a, b, pump=spec)
+
+This is the "automatic application" contribution: the user never chooses M
+or identifies the streamable subgraph by hand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from .ir import Graph, Node, NodeKind, PumpSpec
+from .multipump import PumpReport, apply_multipump, check_multipump
+from .pump_plan import (KernelEstimate, VMEM_BYTES, best_pump_factor)
+from .streaming import apply_streaming
+from .symbolic import AccessPattern, Affine, Domain
+
+
+@dataclasses.dataclass
+class AutopumpResult:
+    spec: PumpSpec
+    graph: Graph                 # transformed IR (streamed + pumped)
+    streaming_report: object
+    pump_report: Optional[PumpReport]
+    estimate: KernelEstimate
+
+    def summary(self) -> str:
+        r = self.graph.resources()
+        return (f"M={self.spec.factor} mode={self.spec.mode} "
+                f"units={r['compute_units']} adapters={r['adapters']} "
+                f"modeled_tp={self.estimate.throughput(self.spec.factor):.3g}/s")
+
+
+# ------------------------------------------------------------ IR builders --
+def _vecadd_graph(n: int, vector_width: int = 8, itemsize: int = 4):
+    v = vector_width
+    g = Graph("vecadd")
+    g.memory("x", (n,))
+    g.memory("y", (n,))
+    g.memory("z", (n,))
+    dom = Domain.of(("i", 0, max(n // v, 1)))
+    acc = AccessPattern(dom, (Affine.of("i", v),), width=v)
+    g.compute("add", dom, vector_width=v)
+    g.connect("x", "add", acc)
+    g.connect("y", "add", acc)
+    g.connect("add", "z", acc)
+    est = KernelEstimate(block_bytes_in=2 * v * itemsize,
+                         block_bytes_out=v * itemsize,
+                         flops_per_block=float(v))
+    return g, est
+
+
+def _matmul_graph(m: int, n: int, k: int, bm: int = 128, bn: int = 128,
+                  bk: int = 128, itemsize: int = 4):
+    g = Graph("matmul")
+    g.memory("a", (m, k))
+    g.memory("b", (k, n))
+    g.memory("c", (m, n))
+    dom = Domain.of(("i", 0, max(m // bm, 1)), ("j", 0, max(n // bn, 1)),
+                    ("kk", 0, max(k // bk, 1)))
+    acc_a = AccessPattern(dom, (Affine.of("i", bm), Affine.of("kk", bk)),
+                          width=1)
+    acc_b = AccessPattern(dom, (Affine.of("kk", bk), Affine.of("j", bn)),
+                          width=1)
+    acc_c = AccessPattern(dom, (Affine.of("i", bm), Affine.of("j", bn)),
+                          width=1)
+    g.compute("mxu_tile", dom, vector_width=bm * bn // (128 * 128) or 1)
+    g.connect("a", "mxu_tile", acc_a)
+    g.connect("b", "mxu_tile", acc_b)
+    g.connect("mxu_tile", "c", acc_c)
+    est = KernelEstimate(block_bytes_in=(bm * bk + bk * bn) * itemsize,
+                         block_bytes_out=0.0,
+                         flops_per_block=2.0 * bm * bn * bk)
+    return g, est
+
+
+def _stencil_graph(d0: int, d1: int, d2: int, itemsize: int = 4):
+    g = Graph("stencil")
+    g.memory("x", (d0, d1, d2))
+    g.memory("y", (d0, d1, d2))
+    dom = Domain.of(("i", 0, max(d0 - 2, 1)))
+    acc = AccessPattern(dom, (Affine.of("i"), Affine.constant(0),
+                              Affine.constant(0)), width=d1 * d2)
+    g.compute("plane_update", dom, vector_width=d1 * d2 // 128 or 1)
+    g.connect("x", "plane_update", acc)
+    g.connect("plane_update", "y", acc)
+    est = KernelEstimate(block_bytes_in=3 * d1 * d2 * itemsize,
+                         block_bytes_out=d1 * d2 * itemsize,
+                         flops_per_block=7.0 * d1 * d2)
+    return g, est
+
+
+def _floyd_graph(n: int, itemsize: int = 4):
+    g = Graph("floyd_warshall")
+    g.memory("dist", (n, n))
+    g.memory("out", (n, n))
+    dom = Domain.of(("k", 0, n))
+    acc_in = AccessPattern(dom, (Affine.constant(0), Affine.constant(0)),
+                           width=n * n)
+    g.compute("relax", dom, vector_width=n // 128 or 1)
+    g.connect("dist", "relax", acc_in)
+    g.connect("relax", "out", acc_in)
+    est = KernelEstimate(block_bytes_in=2 * n * itemsize,   # pivot row+col
+                         block_bytes_out=0.0,
+                         flops_per_block=2.0 * n * n)
+    return g, est
+
+
+def _flash_graph(b: int, h: int, s: int, t: int, d: int, bq: int = 128,
+                 bkv: int = 128, itemsize: int = 2):
+    g = Graph("flash_attention")
+    g.memory("kv", (t, 2 * d))
+    g.memory("o", (s, d))
+    dom = Domain.of(("j", 0, max(t // bkv, 1)))
+    acc = AccessPattern(dom, (Affine.of("j", bkv), Affine.constant(0)),
+                        width=bkv)
+    g.compute("online_softmax", dom, vector_width=bq * d // 128 or 1)
+    g.connect("kv", "online_softmax", acc)
+    out_dom = Domain.of(("j", 0, 1))
+    g.connect("online_softmax", "o",
+              AccessPattern(out_dom, (Affine.constant(0),
+                                      Affine.constant(0)), width=bq))
+    est = KernelEstimate(block_bytes_in=2 * bkv * d * itemsize,
+                         block_bytes_out=0.0,
+                         flops_per_block=4.0 * bq * bkv * d)
+    return g, est
+
+
+def _ssd_graph(b: int, l: int, h: int, p: int, n: int, chunk: int = 64,
+               itemsize: int = 2):
+    g = Graph("ssd_scan")
+    g.memory("xs", (l, p))
+    g.memory("ys", (l, p))
+    dom = Domain.of(("c", 0, max(l // chunk, 1)))
+    acc = AccessPattern(dom, (Affine.of("c", chunk), Affine.constant(0)),
+                        width=chunk)
+    g.compute("chunk_update", dom, vector_width=chunk * p // 128 or 1)
+    g.connect("xs", "chunk_update", acc)
+    g.connect("chunk_update", "ys", acc)
+    est = KernelEstimate(block_bytes_in=chunk * (p + 1 + 2 * n) * itemsize,
+                         block_bytes_out=chunk * p * itemsize,
+                         flops_per_block=2.0 * chunk * chunk * (n + p))
+    return g, est
+
+
+def _grouped_gemm_graph(e: int, c: int, d: int, f: int, bc: int = 128,
+                        bf: int = 128, bd: int = 128, itemsize: int = 2):
+    g = Graph("grouped_gemm")
+    g.memory("x", (e, c, d))
+    g.memory("w", (e, d, f))
+    g.memory("o", (e, c, f))
+    dom = Domain.of(("e", 0, e), ("i", 0, max(c // bc, 1)),
+                    ("j", 0, max(f // bf, 1)), ("k", 0, max(d // bd, 1)))
+    acc_x = AccessPattern(dom, (Affine.of("e"), Affine.of("i", bc),
+                                Affine.of("k", bd)))
+    acc_w = AccessPattern(dom, (Affine.of("e"), Affine.of("k", bd),
+                                Affine.of("j", bf)))
+    acc_o = AccessPattern(dom, (Affine.of("e"), Affine.of("i", bc),
+                                Affine.of("j", bf)))
+    g.compute("expert_tile", dom, vector_width=bc * bf // (128 * 128) or 1)
+    g.connect("x", "expert_tile", acc_x)
+    g.connect("w", "expert_tile", acc_w)
+    g.connect("expert_tile", "o", acc_o)
+    est = KernelEstimate(block_bytes_in=(bc * bd + bd * bf) * itemsize,
+                         block_bytes_out=0.0,
+                         flops_per_block=2.0 * bc * bf * bd)
+    return g, est
+
+
+BUILDERS: Dict[str, Callable] = {
+    "grouped_gemm": _grouped_gemm_graph,
+    "vecadd": _vecadd_graph,
+    "matmul": _matmul_graph,
+    "stencil": _stencil_graph,
+    "floyd_warshall": _floyd_graph,
+    "flash_attention": _flash_graph,
+    "ssd_scan": _ssd_graph,
+}
+
+
+def autopump(kernel: str, *args, mode: str = "T", max_factor: int = 16,
+             vmem_budget: int = VMEM_BYTES, **kwargs) -> AutopumpResult:
+    """Run the full §3 pipeline for a registered kernel.
+
+    1. build the dataflow IR; 2. streaming pass (greedy, whole graph);
+    3. pick M from the capacity model; 4. legality-check + apply the
+    multi-pump transform.  Falls back to M=1 (untransformed) when the
+    checks reject — mirroring "the transformation can check for
+    feasibility" semantics of data-centric transforms.
+    """
+    if kernel not in BUILDERS:
+        raise KeyError(f"no IR builder for kernel {kernel!r}; "
+                       f"known: {sorted(BUILDERS)}")
+    g, est = BUILDERS[kernel](*args, **kwargs)
+    streamed, s_report = apply_streaming(g)
+
+    m = best_pump_factor(est, max_factor=max_factor,
+                         vmem_budget=vmem_budget)
+    if mode == "R":
+        # resource mode: M bounded by the spatial width it divides
+        widths = [c.vector_width for c in streamed.computes()]
+        while m > 1 and any(w % m for w in widths):
+            m //= 2
+    p_report = None
+    if m > 1:
+        ok, why = check_multipump(
+            streamed, [c.name for c in streamed.computes()], m, mode,
+            vmem_budget)
+        if ok:
+            streamed, p_report = apply_multipump(
+                streamed, factor=m, mode=mode, vmem_budget=vmem_budget)
+        else:
+            m = 1
+    spec = PumpSpec(factor=m, mode=mode, vmem_budget=vmem_budget)
+    return AutopumpResult(spec, streamed, s_report, p_report, est)

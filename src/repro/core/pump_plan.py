@@ -1,0 +1,123 @@
+"""Capacity model + pump-factor autotuning (beyond-paper extension).
+
+The paper picks M manually (M=2, bounded by the Vivado 650 MHz cap).  On TPU
+the analogous cap is structural: the widened transaction must fit the VMEM
+working-set budget, and the effective-rate law says pumping beyond the
+compute/DMA balance point only adds stalls.  This module does the napkin math
+once, so kernels and the trainer can ask for the best factor instead of a
+hand-picked constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from .ir import PumpSpec, effective_rate
+
+# TPU v5e-class hardware constants (also used by the roofline harness).
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+VMEM_BYTES = 64 * 1024 * 1024     # budget we allow a kernel working set
+MXU_DIM = 128                     # systolic array edge; align tiles to this
+LANE = 128                        # VPU lane count (last-dim tiling)
+SUBLANE = 8                       # float32 sublane count
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEstimate:
+    """Napkin-math descriptors of one kernel grid step."""
+
+    block_bytes_in: int            # bytes DMA'd HBM->VMEM per grid step
+    block_bytes_out: int           # bytes DMA'd VMEM->HBM per grid step
+    flops_per_block: float         # useful FLOPs per grid step
+    fixed_overhead_s: float = 1e-6 # per-grid-step launch/descriptor overhead
+
+    @property
+    def dma_time(self) -> float:
+        return (self.block_bytes_in + self.block_bytes_out) / HBM_BW
+
+    @property
+    def compute_time(self) -> float:
+        return self.flops_per_block / PEAK_FLOPS_BF16
+
+    def step_time(self, pump: int = 1) -> float:
+        """Pipeline step time for a pump-M wide transaction (Mode T).
+
+        One wide DMA of M blocks overlaps M compute iterations (Pallas double
+        buffering = the paper's synchronizer); the fixed per-transaction
+        overhead is paid once per wide transaction instead of once per block —
+        this is the long-path win of temporal vectorization.
+        """
+        dma = pump * self.dma_time + self.fixed_overhead_s
+        compute = pump * self.compute_time
+        return max(dma, compute)
+
+    def throughput(self, pump: int = 1) -> float:
+        """Blocks/sec under the effective-rate law."""
+        return pump / self.step_time(pump)
+
+
+def best_pump_factor(est: KernelEstimate, max_factor: int = 16,
+                     vmem_budget: int = VMEM_BYTES) -> int:
+    """Search M maximizing modeled throughput subject to VMEM capacity.
+
+    Capacity: double-buffered wide input + output blocks must fit the budget:
+        2 * M * (in + out) <= vmem_budget
+    """
+    best, best_tp = 1, est.throughput(1)
+    m = 2
+    while m <= max_factor:
+        need = 2 * m * (est.block_bytes_in + est.block_bytes_out)
+        if need > vmem_budget:
+            break
+        tp = est.throughput(m)
+        if tp > best_tp * 1.001:
+            best, best_tp = m, tp
+        m *= 2
+    return best
+
+
+def plan_kernel_pump(block_bytes_in: int, block_bytes_out: int,
+                     flops_per_block: float,
+                     mode: str = "T",
+                     max_factor: int = 16,
+                     vmem_budget: int = VMEM_BYTES,
+                     axis: int = 0) -> PumpSpec:
+    est = KernelEstimate(block_bytes_in, block_bytes_out, flops_per_block)
+    m = best_pump_factor(est, max_factor=max_factor, vmem_budget=vmem_budget)
+    return PumpSpec(factor=m, mode=mode, axis=axis, vmem_budget=vmem_budget)
+
+
+def plan_trainer_pump(grad_bytes: int, step_flops: float, n_chips: int,
+                      dp_degree: int, max_factor: int = 64) -> int:
+    """Pod-scale pump factor: microbatches per gradient synchronization.
+
+    The gradient all-reduce over the data axis is the long path (ring
+    all-reduce moves 2*(d-1)/d * grad_bytes per chip over ICI).  Compute per
+    microbatch is the fast domain.  M amortizes the collective: the per-step
+    collective cost is paid once per M microbatches.
+    """
+    d = max(dp_degree, 2)
+    coll_time = 2 * (d - 1) / d * grad_bytes / ICI_BW
+    mb_compute = step_flops / n_chips / PEAK_FLOPS_BF16
+    if mb_compute <= 0:
+        return 1
+    # choose smallest M such that collective amortized below 10% of compute
+    m = 1
+    while m < max_factor and coll_time / m > 0.1 * mb_compute * m:
+        m *= 2
+    return m
+
+
+def align_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def mxu_aligned_tile(m: int, n: int, max_m: int = 512, max_n: int = 512
+                     ) -> tuple[int, int]:
+    """Clamp a compute tile to MXU-friendly multiples of 128."""
+    tm = min(align_up(min(m, max_m), MXU_DIM), align_up(m, SUBLANE))
+    tn = min(align_up(min(n, max_n), MXU_DIM), align_up(n, LANE))
+    return max(tm, SUBLANE), max(tn, LANE)

@@ -1,0 +1,212 @@
+"""Minimal symbolic affine-expression engine for data-movement analysis.
+
+The paper's streaming / multi-pumping legality checks (§3.2) rest on comparing
+the *order* in which connected modules produce and consume memory locations.
+DaCe uses sympy for this; we implement the small affine subset the analysis
+needs so the package stays dependency-free:
+
+    expr ::= const + sum_k coeff_k * sym_k
+
+Access patterns are tuples of affine expressions over a rectangular iteration
+domain.  Two patterns are *sequence-equivalent* when, walking their domains in
+lexicographic order, they touch the same addresses in the same order — the
+condition under which a memory edge can be replaced by a FIFO stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterable, Mapping, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Affine:
+    """``const + Σ coeff[sym] * sym`` with integer coefficients."""
+
+    terms: Tuple[Tuple[str, int], ...] = ()
+    const: int = 0
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def of(sym: str, coeff: int = 1, const: int = 0) -> "Affine":
+        if coeff == 0:
+            return Affine((), const)
+        return Affine(((sym, coeff),), const)
+
+    @staticmethod
+    def constant(c: int) -> "Affine":
+        return Affine((), c)
+
+    def _as_dict(self) -> Dict[str, int]:
+        return dict(self.terms)
+
+    @staticmethod
+    def _from_dict(d: Mapping[str, int], const: int) -> "Affine":
+        items = tuple(sorted((s, c) for s, c in d.items() if c != 0))
+        return Affine(items, const)
+
+    # -- algebra -------------------------------------------------------------
+    def __add__(self, other: "Affine | int") -> "Affine":
+        if isinstance(other, int):
+            return Affine(self.terms, self.const + other)
+        d = self._as_dict()
+        for s, c in other.terms:
+            d[s] = d.get(s, 0) + c
+        return Affine._from_dict(d, self.const + other.const)
+
+    def __radd__(self, other: int) -> "Affine":
+        return self.__add__(other)
+
+    def __mul__(self, k: int) -> "Affine":
+        if not isinstance(k, int):
+            raise TypeError("Affine supports multiplication by int only")
+        return Affine._from_dict({s: c * k for s, c in self.terms}, self.const * k)
+
+    __rmul__ = __mul__
+
+    def __sub__(self, other: "Affine | int") -> "Affine":
+        if isinstance(other, int):
+            other = Affine.constant(other)
+        return self + other * (-1)
+
+    # -- queries --------------------------------------------------------------
+    def symbols(self) -> Tuple[str, ...]:
+        return tuple(s for s, _ in self.terms)
+
+    def coeff(self, sym: str) -> int:
+        return self._as_dict().get(sym, 0)
+
+    def evaluate(self, env: Mapping[str, int]) -> int:
+        return self.const + sum(c * env[s] for s, c in self.terms)
+
+    def substitute(self, mapping: Mapping[str, "Affine"]) -> "Affine":
+        out = Affine.constant(self.const)
+        for s, c in self.terms:
+            repl = mapping.get(s)
+            if repl is None:
+                out = out + Affine.of(s, c)
+            else:
+                out = out + repl * c
+        return out
+
+    def rename(self, mapping: Mapping[str, str]) -> "Affine":
+        return Affine._from_dict(
+            {mapping.get(s, s): c for s, c in self.terms}, self.const
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        parts = [f"{c}*{s}" for s, c in self.terms]
+        if self.const or not parts:
+            parts.append(str(self.const))
+        return " + ".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class Domain:
+    """Rectangular iteration domain; dims walked in lexicographic order."""
+
+    dims: Tuple[Tuple[str, int, int, int], ...]  # (sym, start, stop, step)
+
+    @staticmethod
+    def of(*dims: Tuple[str, int, int] | Tuple[str, int, int, int]) -> "Domain":
+        norm = []
+        for d in dims:
+            if len(d) == 3:
+                norm.append((d[0], d[1], d[2], 1))
+            else:
+                norm.append(tuple(d))
+        return Domain(tuple(norm))
+
+    @property
+    def symbols(self) -> Tuple[str, ...]:
+        return tuple(d[0] for d in self.dims)
+
+    @property
+    def extents(self) -> Tuple[int, ...]:
+        return tuple(
+            max(0, (stop - start + step - 1) // step)
+            for _, start, stop, step in self.dims
+        )
+
+    def size(self) -> int:
+        n = 1
+        for e in self.extents:
+            n *= e
+        return n
+
+    def points(self, limit: int | None = None) -> Iterable[Dict[str, int]]:
+        ranges = [range(start, stop, step) for _, start, stop, step in self.dims]
+        for i, combo in enumerate(itertools.product(*ranges)):
+            if limit is not None and i >= limit:
+                return
+            yield dict(zip(self.symbols, combo))
+
+    def scaled(self, sym: str, factor: int) -> "Domain":
+        """Divide extent of ``sym`` by ``factor`` (vectorization of a range)."""
+        out = []
+        for s, start, stop, step in self.dims:
+            if s == sym:
+                n = (stop - start + step - 1) // step
+                if n % factor != 0:
+                    raise ValueError(
+                        f"extent of {sym} ({n}) not divisible by pump factor {factor}"
+                    )
+                out.append((s, start, start + (n // factor) * step, step))
+            else:
+                out.append((s, start, stop, step))
+        return Domain(tuple(out))
+
+
+@dataclasses.dataclass(frozen=True)
+class AccessPattern:
+    """Multi-dimensional affine access walked over a Domain."""
+
+    domain: Domain
+    exprs: Tuple[Affine, ...]
+    # number of contiguous elements touched per point along the last dim
+    width: int = 1
+
+    def addresses(self, shape: Sequence[int], limit: int | None = None):
+        """Linearized addresses in iteration order (for brute-force checks)."""
+        strides = []
+        acc = 1
+        for s in reversed(shape):
+            strides.append(acc)
+            acc *= s
+        strides = list(reversed(strides))
+        for env in self.domain.points(limit=limit):
+            base = sum(
+                e.evaluate(env) * st for e, st in zip(self.exprs, strides)
+            )
+            for w in range(self.width):
+                yield base + w
+
+    def normalized_exprs(self) -> Tuple[Affine, ...]:
+        """Rename domain symbols to canonical names _i0, _i1, ..."""
+        mapping = {s: f"_i{k}" for k, s in enumerate(self.domain.symbols)}
+        return tuple(e.rename(mapping) for e in self.exprs)
+
+
+def sequence_equivalent(
+    a: AccessPattern, b: AccessPattern, shape: Sequence[int], probe: int = 4096
+) -> bool:
+    """True iff ``a`` and ``b`` touch the same address sequence in order.
+
+    This is the intersection/order check from §3.2 used to decide whether a
+    memory edge between two modules may become a FIFO stream.  Fast path:
+    identical domains (up to symbol names) and identical normalized affine
+    expressions.  Slow path (small domains / differing shapes): brute-force
+    compare the first ``probe`` linearized addresses.
+    """
+    if (
+        a.domain.extents == b.domain.extents
+        and a.width == b.width
+        and a.normalized_exprs() == b.normalized_exprs()
+    ):
+        return True
+    # brute force fallback, bounded
+    if a.domain.size() * a.width != b.domain.size() * b.width:
+        return False
+    seq_a = a.addresses(shape, limit=probe)
+    seq_b = b.addresses(shape, limit=probe)
+    return all(x == y for x, y in itertools.zip_longest(seq_a, seq_b))

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels with temporal-vectorization (multi-pumping) support.
+
+Every kernel takes ``pump`` — a :class:`repro.core.ir.PumpSpec`, an int
+factor, or ``'auto'`` (capacity-model planning) — and is validated against
+the pure-jnp oracles in :mod:`repro.kernels.ref` (see tests/test_kernels.py).
+
+Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
+executed in interpret mode on this CPU container; pass ``interpret=False``
+on real hardware.
+
+Use ``repro.kernels.ops.<kernel>`` for the jit'd wrappers; the submodules
+(vecadd, matmul, stencil, floyd_warshall, flash_attention, ssd_scan) hold
+the raw pallas_call builders and structural metrics.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

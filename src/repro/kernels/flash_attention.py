@@ -1,0 +1,129 @@
+"""Flash attention with a temporally-pumped KV stream.
+
+The transformer hot-spot kernel; the paper's technique applies to its
+*KV feeding path*: attention's inner loop carries a sequential dependency
+(the online-softmax running max/denominator), so the KV loop cannot be
+spatially vectorized across blocks — but it can be *temporally* vectorized:
+
+  one grid step DMAs a KV panel widened ×M from HBM (the wide transaction on
+  the long path) and the in-kernel fori_loop (issuer) performs M dependent
+  online-softmax updates back-to-back in the fast domain.  Grid-step count —
+  and with it per-step DMA descriptor overhead — drops ×M; the VMEM-resident
+  compute tile (q block × head_dim) is untouched.
+
+Layout: q (B, Hq, S, D), k/v (B, Hkv, T, D) with GQA folding done via the
+BlockSpec index map (kv head = q head // group) so no materialized repeat.
+The softmax state (m, l, acc) lives in VMEM scratch and persists across the
+sequential innermost KV grid dimension — the Pallas analogue of the paper's
+accumulator staying inside the fast clock domain between transactions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.ir import PumpSpec
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  pump: int, bkv: int, bq: int, causal: bool, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, d)
+
+    def issue(mstep, _):
+        k = k_ref[0, 0, pl.dslice(mstep * bkv, bkv), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(mstep * bkv, bkv), :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bkv)
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            k_pos = (ki * pump + mstep) * bkv + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bkv), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+        return _
+
+    jax.lax.fori_loop(0, pump, issue, None, unroll=False)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = False,
+                           scale: float | None = None,
+                           bq: int = 128, bkv: int = 128,
+                           pump: PumpSpec | int = 1,
+                           interpret: bool = True) -> jax.Array:
+    """Multi-head attention. q: (B, Hq, S, D), k/v: (B, Hkv, T, D)."""
+    if isinstance(pump, int):
+        pump = PumpSpec(factor=pump)
+    mfac = pump.factor
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not divisible by Hkv={hkv}")
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    bq = min(bq, s)
+    bkv = min(bkv, t)
+    kwide = bkv * mfac
+    if s % bq or t % kwide:
+        raise ValueError(f"S={s} %% bq={bq} or T={t} %% bkv*M={kwide} != 0; "
+                         "pad in the ops wrapper")
+    grid = (b, hq, s // bq, t // kwide)
+
+    kernel = functools.partial(_flash_kernel, pump=mfac, bkv=bkv, bq=bq,
+                               causal=causal, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, kwide, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, kwide, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def transactions(b: int, hq: int, s: int, t: int, bq: int = 128,
+                 bkv: int = 128, pump: PumpSpec | int = 1) -> int:
+    """KV-stream grid steps (wide DMA transactions)."""
+    if isinstance(pump, int):
+        pump = PumpSpec(factor=pump)
+    return b * hq * (s // min(bq, s)) * (t // (min(bkv, t) * pump.factor))

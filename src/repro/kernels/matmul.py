@@ -1,0 +1,125 @@
+"""Communication-avoiding matrix multiplication (paper §4.2, Table 3).
+
+The paper double-pumps a 1-D systolic array of vectorized PEs built from the
+I/O-optimal CA-MMM of de Fine Licht et al. [10].  The TPU re-think
+(DESIGN.md §2): the MXU *is* the systolic array, so the spatial PE chain maps
+onto the (bm × bn) output tile held in VMEM, and the paper's "feeding the
+chain" maps onto the K-stream of (bm × bk)/(bk × bn) operand panels DMA'd
+from HBM.
+
+Temporal vectorization here = *pumping the K-stream*:
+
+  Mode T: one grid step DMAs a K-panel widened ×M (``bk·M``) and issues M
+          MXU passes over its sub-panels (in-kernel fori_loop = issuer);
+          grid-step count — the long-path transaction count — drops ×M.
+  Mode R: transactions keep their width, but the *active compute tile* is
+          narrowed ×M along bn and issued M times per transaction (fori over
+          column slices).  The per-issue MXU footprint — the DSP replication
+          analogue — drops ×M at an unchanged transaction schedule.
+
+The output tile is accumulated in-place across the sequential K grid
+dimension (zero-initialized at k==0), which is the I/O-optimal schedule: A
+and B panels stream exactly once per output tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.ir import PumpSpec
+
+
+def _mm_kernel_t(a_ref, b_ref, o_ref, *, pump: int, bk: int):
+    """Mode T body: M sub-panels of the wide K transaction, full tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    def issue(m, acc):
+        a = a_ref[:, pl.dslice(m * bk, bk)]
+        b = b_ref[pl.dslice(m * bk, bk), :]
+        return acc + jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, pump, issue,
+                            jnp.zeros(o_ref.shape, jnp.float32), unroll=False)
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+def _mm_kernel_r(a_ref, b_ref, o_ref, *, pump: int, bn_narrow: int):
+    """Mode R body: narrow compute tile issued M times per transaction."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    def issue(m, _):
+        sl = pl.dslice(m * bn_narrow, bn_narrow)
+        acc = jnp.dot(a_ref[...], b_ref[:, sl],
+                      preferred_element_type=jnp.float32)
+        o_ref[:, sl] += acc.astype(o_ref.dtype)
+        return _
+
+    jax.lax.fori_loop(0, pump, issue, None, unroll=False)
+
+
+def matmul_pallas(a: jax.Array, b: jax.Array, *,
+                  bm: int = 128, bn: int = 128, bk: int = 128,
+                  pump: PumpSpec | int = 1,
+                  out_dtype=None,
+                  interpret: bool = True) -> jax.Array:
+    """``a @ b`` with a pump-M K-stream.  a: (M, K), b: (K, N)."""
+    if isinstance(pump, int):
+        pump = PumpSpec(factor=pump)
+    m_sz, k_sz = a.shape
+    k2, n_sz = b.shape
+    assert k_sz == k2, (a.shape, b.shape)
+    out_dtype = out_dtype or a.dtype
+    mfac = pump.factor
+
+    kwide = bk * mfac if pump.mode == "T" else bk
+    if pump.mode == "R" and bn % mfac:
+        raise ValueError(f"bn={bn} not divisible by M={mfac} for mode R")
+    for name, dim, blk in (("M", m_sz, bm), ("N", n_sz, bn), ("K", k_sz, kwide)):
+        if dim % blk:
+            raise ValueError(f"{name}={dim} not divisible by block {blk}")
+    grid = (m_sz // bm, n_sz // bn, k_sz // kwide)
+
+    if pump.mode == "T":
+        kernel = functools.partial(_mm_kernel_t, pump=mfac, bk=bk)
+    else:
+        kernel = functools.partial(_mm_kernel_r, pump=mfac, bn_narrow=bn // mfac)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kwide), lambda i, j, k: (i, k)),
+            pl.BlockSpec((kwide, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_sz, n_sz), out_dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def transactions(m: int, n: int, k: int, bm: int = 128, bn: int = 128,
+                 bk: int = 128, pump: PumpSpec | int = 1) -> int:
+    """Grid steps = wide DMA transactions on the long path."""
+    if isinstance(pump, int):
+        pump = PumpSpec(factor=pump)
+    kw = bk * pump.factor if pump.mode == "T" else bk
+    return (m // bm) * (n // bn) * (k // kw)
+
+
+def compute_tile_bytes(bm: int = 128, bn: int = 128,
+                       pump: PumpSpec | int = 1) -> int:
+    """Active MXU tile footprint per issue — the DSP replication analogue."""
+    if isinstance(pump, int):
+        pump = PumpSpec(factor=pump)
+    bn_eff = bn // pump.factor if pump.mode == "R" else bn
+    return bm * bn_eff * 4

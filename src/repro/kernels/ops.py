@@ -1,0 +1,198 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Responsibilities: shape padding to block multiples, dtype policy, automatic
+pump-factor planning (``pump='auto'`` asks ``core.pump_plan`` for the best
+factor under the VMEM capacity model), and the interpret/compile switch
+(CPU container validates with interpret=True; on TPU pass interpret=False).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ir import PumpSpec
+from repro.core.pump_plan import plan_kernel_pump, VMEM_BYTES
+
+from . import flash_attention as _fa
+from . import grouped_gemm as _gg
+from . import floyd_warshall as _fw
+from . import matmul as _mm
+from . import ssd_scan as _ssd
+from . import stencil as _st
+from . import vecadd as _va
+
+
+def _as_spec(pump, **plan_kwargs) -> PumpSpec:
+    if pump == "auto":
+        return plan_kernel_pump(**plan_kwargs)
+    if isinstance(pump, int):
+        return PumpSpec(factor=pump)
+    return pump
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0):
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x, n
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value), n
+
+
+# ------------------------------------------------------------------ vecadd --
+@functools.partial(jax.jit, static_argnames=("vector_width", "pump_factor",
+                                             "pump_mode", "interpret"))
+def _vecadd(x, y, vector_width, pump_factor, pump_mode, interpret):
+    spec = PumpSpec(factor=pump_factor, mode=pump_mode)
+    block = vector_width * (pump_factor if pump_mode == "T" else 1)
+    xp, n = _pad_to(x, 0, block)
+    yp, _ = _pad_to(y, 0, block)
+    return _va.vecadd_pallas(xp, yp, vector_width=vector_width, pump=spec,
+                             interpret=interpret)[:n]
+
+
+def vecadd(x, y, *, vector_width: int = 8, pump: PumpSpec | int | str = 1,
+           interpret: bool = True):
+    spec = _as_spec(pump, block_bytes_in=2 * vector_width * x.dtype.itemsize,
+                    block_bytes_out=vector_width * x.dtype.itemsize,
+                    flops_per_block=vector_width)
+    return _vecadd(x, y, vector_width, spec.factor, spec.mode, interpret)
+
+
+# ------------------------------------------------------------------ matmul --
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "pump_factor",
+                                             "pump_mode", "interpret"))
+def _matmul(a, b, bm, bn, bk, pump_factor, pump_mode, interpret):
+    spec = PumpSpec(factor=pump_factor, mode=pump_mode)
+    kw = bk * (pump_factor if pump_mode == "T" else 1)
+    ap, m = _pad_to(a, 0, bm)
+    ap, k = _pad_to(ap, 1, kw)
+    bp, _ = _pad_to(b, 0, kw)
+    bp, n = _pad_to(bp, 1, bn)
+    out = _mm.matmul_pallas(ap, bp, bm=bm, bn=bn, bk=bk, pump=spec,
+                            interpret=interpret)
+    return out[:m, :n]
+
+
+def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
+           pump: PumpSpec | int | str = 1, interpret: bool = True):
+    spec = _as_spec(
+        pump,
+        block_bytes_in=(bm * bk + bk * bn) * a.dtype.itemsize,
+        block_bytes_out=0,  # accumulated in VMEM, written once per tile
+        flops_per_block=2.0 * bm * bn * bk)
+    return _matmul(a, b, bm, bn, bk, spec.factor, spec.mode, interpret)
+
+
+# ----------------------------------------------------------------- stencil --
+@functools.partial(jax.jit, static_argnames=("stages", "kind", "coef",
+                                             "pump_factor", "interpret"))
+def _stencil(x, stages, kind, coef, pump_factor, interpret):
+    return _st.stencil_chain_pallas(x, stages, kind=kind, coef=coef,
+                                    pump=pump_factor, interpret=interpret)
+
+
+def stencil_chain(x, stages: int, *, kind: str = "jacobi", coef: float = 0.1,
+                  pump: PumpSpec | int = 1, interpret: bool = True):
+    f = pump.factor if isinstance(pump, PumpSpec) else pump
+    if (x.shape[0] - 2) % f:
+        raise ValueError("interior plane count must divide the pump factor")
+    return _stencil(x, stages, kind, coef, f, interpret)
+
+
+# ---------------------------------------------------------- floyd-warshall --
+@functools.partial(jax.jit, static_argnames=("pump_factor", "interpret"))
+def _fw_run(d, pump_factor, interpret):
+    return _fw.floyd_warshall_pallas(d, pump=pump_factor, interpret=interpret)
+
+
+def floyd_warshall(dist, *, pump: PumpSpec | int = 1, interpret: bool = True):
+    f = pump.factor if isinstance(pump, PumpSpec) else pump
+    n = dist.shape[0]
+    if n % f:
+        raise ValueError(f"n={n} must divide pump factor {f}")
+    return _fw_run(dist, f, interpret)
+
+
+# --------------------------------------------------------- flash attention --
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv",
+                                             "pump_factor", "interpret"))
+def _flash(q, k, v, causal, bq, bkv, pump_factor, interpret):
+    spec = PumpSpec(factor=pump_factor)
+    b, hq, s, d = q.shape
+    kwide = min(bkv, k.shape[2]) * pump_factor
+    qp, s0 = _pad_to(q, 2, min(bq, s))
+    kp, _ = _pad_to(k, 2, kwide)
+    vp, _ = _pad_to(v, 2, kwide)
+    # padded KV positions must not contribute: causal masking handles the
+    # tail for causal=True; for non-causal we bias keys via -inf on k? We
+    # instead require T % bkv == 0 after padding and mask via position ids:
+    # simplest robust approach: pad K with -inf-scoring keys by zeroing V and
+    # giving K a huge negative last-dim component is fragile; we pad S only.
+    out = _fa.flash_attention_pallas(qp, kp, vp, causal=causal,
+                                     bq=min(bq, s), bkv=min(bkv, k.shape[2]),
+                                     pump=spec, interpret=interpret)
+    return out[:, :, :s0, :]
+
+
+def flash_attention(q, k, v, *, causal: bool = False, bq: int = 128,
+                    bkv: int = 128, pump: PumpSpec | int | str = 1,
+                    interpret: bool = True):
+    d = q.shape[-1]
+    spec = _as_spec(pump,
+                    block_bytes_in=2 * bkv * d * q.dtype.itemsize,
+                    block_bytes_out=0,
+                    flops_per_block=4.0 * bq * bkv * d)
+    if k.shape[2] % (min(bkv, k.shape[2]) * spec.factor):
+        raise ValueError("KV length must divide bkv * pump factor")
+    return _flash(q, k, v, causal, bq, bkv, spec.factor, interpret)
+
+
+# ---------------------------------------------------------------- SSD scan --
+@functools.partial(jax.jit, static_argnames=("chunk", "pump_factor",
+                                             "interpret"))
+def _ssd_jit(x, dt, A, B, C, chunk, pump_factor, interpret):
+    return _ssd.ssd_scan_pallas(x, dt, A, B, C, chunk=chunk,
+                                pump=pump_factor, interpret=interpret)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 16,
+             pump: PumpSpec | int | str = 1, interpret: bool = True):
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    spec = _as_spec(pump,
+                    block_bytes_in=(chunk * (p + 1 + 2 * n)) * 4,
+                    block_bytes_out=chunk * p * 4,
+                    flops_per_block=2.0 * chunk * chunk * (n + p))
+    if l % (chunk * spec.factor):
+        raise ValueError(f"L={l} must divide chunk*M={chunk * spec.factor}")
+    return _ssd_jit(x, dt, A, B, C, chunk, spec.factor, interpret)
+
+
+# ------------------------------------------------------------ grouped gemm --
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "pump_factor",
+                                             "pump_mode", "interpret"))
+def _grouped(x, w, bc, bf, bd, pump_factor, pump_mode, interpret):
+    spec = PumpSpec(factor=pump_factor, mode=pump_mode)
+    dw = bd * (pump_factor if pump_mode == "T" else 1)
+    xp, c0 = _pad_to(x, 1, bc)
+    xp, d0 = _pad_to(xp, 2, dw)
+    wp, _ = _pad_to(w, 1, dw)
+    wp, f0 = _pad_to(wp, 2, bf)
+    out = _gg.grouped_gemm_pallas(xp, wp, bc=bc, bf=bf, bd=bd, pump=spec,
+                                  interpret=interpret)
+    return out[:, :c0, :f0]
+
+
+def grouped_gemm(x, w, *, bc: int = 128, bf: int = 128, bd: int = 128,
+                 pump: PumpSpec | int | str = 1, interpret: bool = True):
+    """Per-expert batched GEMM (MoE hot-spot).  x (E,C,D) @ w (E,D,F)."""
+    spec = _as_spec(pump,
+                    block_bytes_in=(bc * bd + bd * bf) * x.dtype.itemsize,
+                    block_bytes_out=0,
+                    flops_per_block=2.0 * bc * bf * bd)
+    return _grouped(x, w, bc, bf, bd, spec.factor, spec.mode, interpret)

@@ -1,0 +1,124 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated against
+(tests/test_kernels.py sweeps shapes and dtypes with assert_allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def vecadd(x, y):
+    return x + y
+
+
+def matmul(a, b, out_dtype=jnp.float32):
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(out_dtype)
+
+
+# ---------------------------------------------------------------- stencils --
+def jacobi3d(x):
+    """7-point Jacobi on the interior; boundary copied (single iteration)."""
+    y = x
+    interior = (
+        x[:-2, 1:-1, 1:-1] + x[2:, 1:-1, 1:-1]
+        + x[1:-1, :-2, 1:-1] + x[1:-1, 2:, 1:-1]
+        + x[1:-1, 1:-1, :-2] + x[1:-1, 1:-1, 2:]
+        + x[1:-1, 1:-1, 1:-1]
+    ) * (1.0 / 7.0)
+    return y.at[1:-1, 1:-1, 1:-1].set(interior)
+
+
+def diffusion3d(x, coef=0.1):
+    """Explicit 3-D diffusion step, boundary copied."""
+    lap = (
+        x[:-2, 1:-1, 1:-1] + x[2:, 1:-1, 1:-1]
+        + x[1:-1, :-2, 1:-1] + x[1:-1, 2:, 1:-1]
+        + x[1:-1, 1:-1, :-2] + x[1:-1, 1:-1, 2:]
+        - 6.0 * x[1:-1, 1:-1, 1:-1]
+    )
+    return x.at[1:-1, 1:-1, 1:-1].add(coef * lap)
+
+
+def stencil_chain(x, stages: int, kind: str = "jacobi"):
+    fn = jacobi3d if kind == "jacobi" else diffusion3d
+    for _ in range(stages):
+        x = fn(x)
+    return x
+
+
+# ---------------------------------------------------------- floyd-warshall --
+def floyd_warshall(dist):
+    """All-pairs shortest paths; the canonical dependency-carrying loop."""
+    n = dist.shape[0]
+
+    def body(k, d):
+        row = jax.lax.dynamic_slice_in_dim(d, k, 1, axis=0)  # (1, n)
+        col = jax.lax.dynamic_slice_in_dim(d, k, 1, axis=1)  # (n, 1)
+        return jnp.minimum(d, col + row)
+
+    return jax.lax.fori_loop(0, n, body, dist)
+
+
+# --------------------------------------------------------- flash attention --
+def attention(q, k, v, *, causal: bool = False, scale: float | None = None,
+              bias=None):
+    """O(S^2) reference attention. q,k,v: (B, H, S, D); kv may have fewer
+    heads (GQA) — callers broadcast before calling."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if bias is not None:
+        logits = logits + bias
+    if causal:
+        s, t = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((s, t), dtype=bool), k=t - s)
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ SSD ----
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 0):
+    """Mamba-2 SSD (state-space dual) reference, sequential over time.
+
+    x : (b, l, h, p)   inputs per head
+    dt: (b, l, h)      positive step sizes
+    A : (h,)           negative state decay
+    B : (b, l, g, n)   input projection (g groups broadcast over heads)
+    C : (b, l, g, n)   output projection
+    returns y: (b, l, h, p)
+
+    Recurrence per head: S_t = exp(A·dt_t)·S_{t-1} + dt_t·B_t x_tᵀ ;
+    y_t = C_t · S_t.
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    heads_per_group = h // g
+    Bh = jnp.repeat(B, heads_per_group, axis=2)  # (b, l, h, n)
+    Ch = jnp.repeat(C, heads_per_group, axis=2)
+
+    decay = jnp.exp(A[None, None, :] * dt)      # (b, l, h)
+
+    def step(state, t):
+        # state: (b, h, n, p)
+        d = decay[:, t][..., None, None]
+        upd = jnp.einsum("bhn,bhp->bhnp", Bh[:, t] * dt[:, t][..., None], x[:, t])
+        state = state * d + upd
+        y = jnp.einsum("bhn,bhnp->bhp", Ch[:, t], state)
+        return state, y
+
+    init = jnp.zeros((b, h, n, p), dtype=jnp.float32)
+    _, ys = jax.lax.scan(step, init,
+                         jnp.arange(l))
+    return jnp.transpose(ys, (1, 0, 2, 3)).astype(x.dtype)  # (b, l, h, p)
+
+
+def grouped_gemm(x, w, out_dtype=None):
+    """x: (E, C, D), w: (E, D, F) -> (E, C, F) in fp32 accumulation."""
+    out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return out.astype(out_dtype or x.dtype)

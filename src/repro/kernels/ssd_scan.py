@@ -1,0 +1,121 @@
+"""Mamba-2 SSD (state-space duality) chunked scan with a pumped chunk stream.
+
+The architecture-pool flagship for temporal vectorization: the inter-chunk
+state recurrence
+
+    S_chunk+1 = decay(chunk) * S_chunk + contribution(chunk)
+
+is a true sequential dependency, so chunks cannot be spatially vectorized —
+precisely the situation (paper §4.4) where multi-pumping still applies.  One
+grid step DMAs an M-chunk-wide panel of (x, dt, B, C) from HBM; the in-kernel
+fori_loop (issuer) runs the M dependent chunk updates back-to-back while the
+state lives in VMEM scratch (the fast domain).  Long-path transactions drop
+×M; the intra-chunk compute tile — two (c×c)(c×p) MXU matmuls — is untouched.
+
+Math (per batch b, head h; chunk arrays xc (c,p), dtc (c,), Bc/Cc (c,n)):
+    a_t   = exp(A_h · dt_t)                        per-step decay
+    logP_t = Σ_{s<=t} log a_s                      running decay (cumsum)
+    y_t   = C_t·S_in · P_t  +  Σ_{s<=t} (P_t/P_s)·dt_s·(C_t·B_s)·x_s
+    S_out = S_in · P_c  +  Σ_t (P_c/P_t)·dt_t·B_t xᵀ_t
+the intra-chunk sum is the "dual" quadratic form G @ x with
+    G[t,s] = (C_t·B_s) · exp(logP_t − logP_s) · dt_s  for s ≤ t.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.ir import PumpSpec
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+                pump: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    A = a_ref[0]  # scalar decay rate for this head
+
+    def issue(mstep, _):
+        sl = pl.dslice(mstep * chunk, chunk)
+        xc = x_ref[0, sl, 0, :].astype(jnp.float32)    # (c, p)
+        dtc = dt_ref[0, sl, 0].astype(jnp.float32)     # (c,)
+        Bc = b_ref[0, sl, 0, :].astype(jnp.float32)    # (c, n)
+        Cc = c_ref[0, sl, 0, :].astype(jnp.float32)    # (c, n)
+
+        logp = jnp.cumsum(A * dtc)                     # (c,) decreasing
+        # inter-chunk contribution: y_t += (C_t · S_in) * P_t
+        s_in = state_ref[...]                          # (n, p)
+        y_carry = jnp.exp(logp)[:, None] * jnp.dot(
+            Cc, s_in, preferred_element_type=jnp.float32)        # (c, p)
+        # intra-chunk dual form
+        cb = jnp.dot(Cc, Bc.T, preferred_element_type=jnp.float32)  # (c, c)
+        ratio = logp[:, None] - logp[None, :]          # logP_t - logP_s
+        t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+        mask = t_idx >= s_idx
+        G = jnp.where(mask, cb * jnp.exp(jnp.where(mask, ratio, 0.0))
+                      * dtc[None, :], 0.0)
+        y_intra = jnp.dot(G, xc, preferred_element_type=jnp.float32)
+        y_ref[0, sl, 0, :] = (y_carry + y_intra).astype(y_ref.dtype)
+        # state update
+        p_total = logp[-1]
+        w = jnp.exp(p_total - logp) * dtc              # (c,)
+        state_ref[...] = s_in * jnp.exp(p_total) + jnp.dot(
+            (Bc * w[:, None]).T, xc, preferred_element_type=jnp.float32)
+        return _
+
+    jax.lax.fori_loop(0, pump, issue, None, unroll=False)
+
+
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    B: jax.Array, C: jax.Array, *,
+                    chunk: int = 16,
+                    pump: PumpSpec | int = 1,
+                    interpret: bool = True) -> jax.Array:
+    """SSD scan. x: (b,l,h,p), dt: (b,l,h), A: (h,), B/C: (b,l,g,n)."""
+    if isinstance(pump, int):
+        pump = PumpSpec(factor=pump)
+    mfac = pump.factor
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    if h % g:
+        raise ValueError(f"h={h} not divisible by groups g={g}")
+    hpg = h // g
+    cwide = chunk * mfac
+    if l % cwide:
+        raise ValueError(f"L={l} %% chunk*M={cwide} != 0; pad in ops wrapper")
+    grid = (b, h, l // cwide)
+
+    kernel = functools.partial(_ssd_kernel, pump=mfac, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cwide, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, cwide, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, cwide, 1, n),
+                         lambda bi, hi, ci: (bi, ci, hi // hpg, 0)),
+            pl.BlockSpec((1, cwide, 1, n),
+                         lambda bi, hi, ci: (bi, ci, hi // hpg, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cwide, 1, p),
+                               lambda bi, hi, ci: (bi, ci, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+
+
+def transactions(b: int, l: int, h: int, chunk: int = 16,
+                 pump: PumpSpec | int = 1) -> int:
+    if isinstance(pump, int):
+        pump = PumpSpec(factor=pump)
+    return b * h * (l // (chunk * pump.factor))

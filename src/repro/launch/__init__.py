@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, sharding rules, step builders, dry-run,
+training and serving entry points."""
+from . import mesh, sharding, steps
+
+__all__ = ["mesh", "sharding", "steps"]

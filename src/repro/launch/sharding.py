@@ -1,0 +1,169 @@
+"""Declarative sharding rules: param/batch/cache pytrees → PartitionSpecs.
+
+Rules are name+shape based and *divisibility-safe*: any axis that does not
+divide its mesh extent is silently replicated (essential for smoke configs
+on 1 device and for small leaves like norm scales).  Conventions follow
+launch/mesh.py: "data" carries FSDP, "model" carries TP/EP/SP.
+
+The same rule table drives both the dry-run in_shardings and the trainer's
+``with_sharding_constraint`` activation annotations.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _fit(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop spec entries that don't divide; pad/trim rank."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ent in zip(shape, entries[:len(shape)]):
+        if ent is None:
+            out.append(None)
+            continue
+        axes = ent if isinstance(ent, tuple) else (ent,)
+        prod = int(np.prod([sizes.get(a, 1) for a in axes]))
+        out.append(ent if dim % prod == 0 and prod > 1 else None)
+    return P(*out)
+
+
+# ------------------------------------------------------------- param rules --
+def _param_rule(path: Tuple[str, ...], shape: Tuple[int, ...]) -> P:
+    """Base spec by parameter role; leading stacked-layer axes handled by
+    caller padding (specs are right-aligned to the trailing dims)."""
+    names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+    last = names[-1] if names else ""
+    joined = "/".join(names)
+
+    if last == "embedding":                       # (V, d)
+        return P("model", "data")
+    if "moe" in joined and last in ("gate", "up"):   # (E, d, f) experts
+        return P("model", "data", None)
+    if "moe" in joined and last == "down":           # (E, f, d)
+        return P("model", None, "data")
+    if last in ("scale", "bias", "b", "A_log", "dt_bias", "D", "conv_b"):
+        return P()                                 # small: replicate
+    if last == "conv_w":                           # (W, conv_dim)
+        return P(None, "model")
+    if last == "w":
+        parent = names[-2] if len(names) >= 2 else ""
+        if parent in ("wo", "down", "out_proj", "wkv_b", "wq_b", "fc2"):
+            # row-parallel: contract dim is model-sharded
+            return P("model", "data")
+        # column-parallel default: wq, wk, wv, gate, up, in_proj, router, ...
+        return P("data", "model")
+    return P()
+
+
+def param_specs(params: Any, sample_shapes: Any = None) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs).
+
+    Stacked-layer leading axes (from scan) are detected by rank: the base
+    rule covers the trailing dims and leading dims are unsharded.
+    """
+    def rule(path, leaf):
+        shape = leaf.shape
+        base = _param_rule(path, shape)
+        base_len = len([e for e in base]) if len(base) else 0
+        # right-align: pad leading Nones for stacked axes
+        if base_len and len(shape) > base_len:
+            base = P(*([None] * (len(shape) - base_len) + list(base)))
+        elif base_len and len(shape) < base_len:
+            base = P(*list(base)[-len(shape):]) if len(shape) else P()
+        return base
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def fit_specs(specs: Any, tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s, l: _fit(s, l.shape, mesh), specs, tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings(tree: Any, mesh: Mesh, specs: Any = None) -> Any:
+    """NamedSharding pytree for ``tree`` under ``mesh``."""
+    if specs is None:
+        specs = param_specs(tree)
+    specs = fit_specs(specs, tree, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------------- batch rules --
+def batch_spec(mesh: Mesh) -> P:
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return P(tuple(axes)) if axes else P()
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    bspec = batch_spec(mesh)
+
+    def rule(leaf):
+        if leaf.ndim == 0:
+            return P()
+        return _fit(P(bspec[0] if len(bspec) else None), leaf.shape, mesh)
+
+    return jax.tree.map(rule, batch)
+
+
+# ------------------------------------------------------------- cache rules --
+def cache_specs(cache: Any, mesh: Mesh) -> Any:
+    """KV/SSM cache sharding: batch over (pod, data), heads over model.
+
+    Layout conventions: gqa (L, B, Hkv, T, hd); mla (L, B, T, r);
+    mamba state (L, B, H, N, P), conv (L, B, W-1, C); pos (L,).
+    """
+    b = batch_spec(mesh)
+    bax = b[0] if len(b) else None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = sizes.get("model", 1)
+
+    def rule(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        last = names[-1]
+        if last == "pos":
+            return P()
+        if last in ("k", "v"):        # (L, B, Hkv, T, hd)
+            # shard heads over "model" when they divide, else the time axis
+            # (sequence-parallel cache — the long_500k / small-Hkv case)
+            if leaf.ndim == 5 and leaf.shape[2] % msize == 0:
+                return _fit(P(None, bax, "model", None, None), leaf.shape,
+                            mesh)
+            return _fit(P(None, bax, None, "model", None), leaf.shape, mesh)
+        if last in ("c_kv", "k_rope"):  # (L, B, T, r): sequence-parallel
+            return _fit(P(None, bax, "model", None), leaf.shape, mesh)
+        if last == "state":           # (L, B, H, N, P)
+            return _fit(P(None, bax, "model", None, None), leaf.shape, mesh)
+        if last == "conv":            # (L, B, W-1, C)
+            return _fit(P(None, bax, None, "model"), leaf.shape, mesh)
+        return _fit(P(None, bax), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def strip_axis(specs: Any, axis: str) -> Any:
+    """Remove one mesh axis from every spec (e.g. disable TP for small
+    models where per-layer collectives dominate — EXPERIMENTS.md §Perf D)."""
+    def strip(sp):
+        out = []
+        for e in sp:
+            if e == axis:
+                out.append(None)
+            elif isinstance(e, tuple):
+                kept = tuple(a for a in e if a != axis)
+                out.append(kept if kept else None)
+            else:
+                out.append(e)
+        return P(*out)
+    return jax.tree.map(strip, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    """with_sharding_constraint that tolerates non-dividing dims."""
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _fit(spec, x.shape, mesh)))

@@ -1,0 +1,8 @@
+"""Model zoo: pure-JAX implementations of the assigned architecture families."""
+from . import attention, encdec, layers, model, moe, multimodal, ssm, transformer
+from .model import (init_params, loss_fn, forward, init_cache, decode_step,
+                    example_batch)
+
+__all__ = ["attention", "encdec", "layers", "model", "moe", "multimodal",
+           "ssm", "transformer", "init_params", "loss_fn", "forward",
+           "init_cache", "decode_step", "example_batch"]

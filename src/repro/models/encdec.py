@@ -1,0 +1,150 @@
+"""Whisper-style encoder–decoder transformer.
+
+The audio conv frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, T_enc, d) directly to the encoder.  The
+encoder runs bidirectional self-attention; the decoder runs causal
+self-attention + cross-attention over encoder output.  Whisper uses
+LayerNorm + GELU; we keep the repo-wide pre-norm block structure with those
+substitutions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from .layers import (cross_entropy, dense, dense_init, embed, embedding_init,
+                     gelu_mlp, gelu_mlp_init, layernorm, layernorm_init,
+                     unembed)
+
+
+def _sinusoid(t: int, d: int):
+    pos = jnp.arange(t)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def enc_block_init(key, cfg, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": layernorm_init(cfg.d_model, dtype),
+            "attn": attn_mod.gqa_init(k1, cfg, dtype),
+            "norm2": layernorm_init(cfg.d_model, dtype),
+            "mlp": gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def enc_block_apply(p, cfg, x, positions):
+    h, _ = attn_mod.gqa_apply(p["attn"], cfg,
+                              layernorm(p["norm1"], x, cfg.norm_eps),
+                              positions=positions, causal=False)
+    x = x + h
+    return x + gelu_mlp(p["mlp"], layernorm(p["norm2"], x, cfg.norm_eps))
+
+
+def dec_block_init(key, cfg, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": layernorm_init(cfg.d_model, dtype),
+            "self_attn": attn_mod.gqa_init(k1, cfg, dtype),
+            "norm2": layernorm_init(cfg.d_model, dtype),
+            "cross_attn": attn_mod.gqa_init(k2, cfg, dtype),
+            "norm3": layernorm_init(cfg.d_model, dtype),
+            "mlp": gelu_mlp_init(k3, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def dec_block_apply(p, cfg, x, enc_out, positions, cache=None):
+    h, new_cache = attn_mod.gqa_apply(
+        p["self_attn"], cfg, layernorm(p["norm1"], x, cfg.norm_eps),
+        positions=positions, causal=True, cache=cache)
+    x = x + h
+    h, _ = attn_mod.gqa_apply(
+        p["cross_attn"], cfg, layernorm(p["norm2"], x, cfg.norm_eps),
+        positions=positions, kv_input=enc_out)
+    x = x + h
+    return x + gelu_mlp(p["mlp"], layernorm(p["norm3"], x, cfg.norm_eps)), \
+        new_cache
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    n_enc = cfg.n_encoder_layers or cfg.n_layers
+    enc_keys = jax.random.split(ks[0], n_enc)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "frontend_proj": dense_init(ks[2], cfg.d_model, cfg.d_model,
+                                    dtype=dtype),
+        "enc_blocks": jax.vmap(lambda k: enc_block_init(k, cfg, dtype))(
+            enc_keys),
+        "enc_norm": layernorm_init(cfg.d_model, dtype),
+        "embed": embedding_init(ks[3], cfg.vocab_size, cfg.d_model, dtype),
+        "dec_blocks": jax.vmap(lambda k: dec_block_init(k, cfg, dtype))(
+            dec_keys),
+        "dec_norm": layernorm_init(cfg.d_model, dtype),
+    }
+
+
+def encode(cfg, params, frames):
+    """frames: (B, T_enc, d_model) precomputed frame embeddings (stub)."""
+    x = dense(params["frontend_proj"], frames.astype(cfg.activation_dtype))
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.arange(x.shape[1])
+
+    def body(xc, p_layer):
+        return enc_block_apply(p_layer, cfg, xc, positions), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode(cfg, params, tokens, enc_out, caches=None):
+    """tokens: (B, S) -> (logits, new_caches)."""
+    x = embed(params["embed"], tokens, cfg.activation_dtype)
+    if caches is not None:
+        pos0 = caches["pos"][0]
+        positions = pos0 + jnp.arange(tokens.shape[1])
+    else:
+        positions = jnp.arange(tokens.shape[1])
+    x = x + _sinusoid(int(2 ** 15), cfg.d_model).astype(x.dtype)[positions][None]
+
+    if caches is None:
+        def body(xc, p_layer):
+            y, _ = dec_block_apply(p_layer, cfg, xc, enc_out, positions)
+            return y, None
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+        new_caches = None
+    else:
+        def body(xc, layer):
+            p_layer, c_layer = layer
+            y, nc = dec_block_apply(p_layer, cfg, xc, enc_out, positions,
+                                    cache=c_layer)
+            return y, nc
+        x, new_caches = jax.lax.scan(body, x, (params["dec_blocks"], caches))
+
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)   # whisper ties embeddings
+    return logits, new_caches
+
+
+def forward(cfg, params, batch):
+    """batch: dict(frames, tokens) -> (logits, aux)."""
+    enc_out = encode(cfg, params, batch["frames"])
+    logits, _ = decode(cfg, params, batch["tokens"], enc_out)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg, params, batch):
+    logits, _ = forward(cfg, params, batch)
+    return cross_entropy(logits, batch["labels"])
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    per_layer = [attn_mod.gqa_cache_init(cfg, batch, max_len, dtype)
+                 for _ in range(cfg.n_layers)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+def decode_step(cfg, params, tokens, enc_out, caches):
+    return decode(cfg, params, tokens, enc_out, caches=caches)

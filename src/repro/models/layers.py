@@ -1,0 +1,130 @@
+"""Shared neural-net layers as pure init/apply function pairs.
+
+No framework dependency: params are plain dict pytrees, every layer is
+``init_*(key, ...) -> params`` + ``apply`` functions.  Weight layout
+conventions (consumed by launch/sharding.py rules):
+
+  - 2-D weights are (d_in, d_out) under key ``"w"``; biases ``"b"``.
+  - stacked-per-layer params get a leading L axis added by the scanner.
+  - embedding tables are (vocab, d_model) under key ``"embedding"``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: float | None = None, dtype=jnp.float32):
+    scale = scale if scale is not None else (1.0 / math.sqrt(d_in))
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"embedding": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p, ids, dtype=jnp.bfloat16):
+    return p["embedding"].astype(dtype)[ids]
+
+
+def unembed(p, x):
+    """Logits via (tied or separate) embedding table; fp32 output."""
+    return x.astype(jnp.float32) @ p["embedding"].astype(jnp.float32).T
+
+
+# --------------------------------------------------------------------- MLP --
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, d_ff, dtype=dtype),
+        "up": dense_init(k2, d, d_ff, dtype=dtype),
+        "down": dense_init(k3, d_ff, d, dtype=dtype),
+    }
+
+
+def swiglu(p, x):
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+def gelu_mlp_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "up": dense_init(k1, d, d_ff, bias=True, dtype=dtype),
+        "down": dense_init(k2, d_ff, d, bias=True, dtype=dtype),
+    }
+
+
+def gelu_mlp(p, x):
+    return dense(p["down"], jax.nn.gelu(dense(p["up"], x)))
+
+
+# -------------------------------------------------------------------- RoPE --
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    return inv  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, D) with D even; positions: (..., S) int32."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- softmax CE --
+def cross_entropy(logits, labels, *, z_weight: float = 0.0):
+    """Mean token cross-entropy (+ optional z-loss); labels -100 ignored."""
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if z_weight:
+        nll = nll + z_weight * jnp.square(logz)
+    denom = jnp.maximum(mask.sum(), 1)
+    return jnp.where(mask, nll, 0.0).sum() / denom

@@ -1,0 +1,73 @@
+"""Family dispatcher — the single entry point the launcher/trainer uses.
+
+    init_params(cfg, key)            -> params pytree
+    loss_fn(cfg, params, batch)      -> scalar loss       (train_step)
+    prefill / decode helpers         -> serve_step
+    batch_spec(cfg, shape)           -> input ShapeDtypeStructs (dry-run)
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, multimodal, transformer
+
+
+def _mod(cfg):
+    if cfg.family == "encdec":
+        return encdec
+    if cfg.family == "vlm":
+        return multimodal
+    return transformer
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    return _mod(cfg).init_params(cfg, key, dtype)
+
+
+def loss_fn(cfg, params, batch):
+    return _mod(cfg).loss_fn(cfg, params, batch)
+
+
+def forward(cfg, params, batch, *, last_only=False):
+    mod = _mod(cfg)
+    if cfg.family == "encdec":
+        return mod.forward(cfg, params, batch)
+    if cfg.family == "vlm":
+        embeds = mod.project(cfg, params, batch["patches"])
+        from . import transformer
+        return transformer.forward(cfg, params, batch["tokens"],
+                                   input_embeds=embeds, last_only=last_only)
+    return mod.forward(cfg, params, batch["tokens"], last_only=last_only)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return _mod(cfg).init_cache(cfg, batch, max_len, dtype)
+
+
+def decode_step(cfg, params, batch, cache):
+    """One-token decode.  batch carries tokens (B,1) (+ enc_out for encdec)."""
+    if cfg.family == "encdec":
+        return encdec.decode_step(cfg, params, batch["tokens"],
+                                  batch["enc_out"], cache)
+    return _mod(cfg).decode_step(cfg, params, batch["tokens"], cache)
+
+
+def example_batch(cfg, shape, key=None, batch_override=None):
+    """Concrete random batch for smoke tests / examples."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (b, s), 0, cfg.vocab_size)
+    labels = jnp.roll(tokens, -1, axis=1).at[:, -1].set(-100)
+    batch = {"tokens": tokens, "labels": labels}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            k2, (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            k2, (b, cfg.n_vision_tokens, cfg.d_vision), jnp.float32)
+    return batch

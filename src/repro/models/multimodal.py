@@ -1,0 +1,56 @@
+"""InternVL2-style VLM: stubbed ViT frontend + dense LM backbone.
+
+Per the assignment the modality frontend is a STUB: ``input_specs`` provides
+precomputed patch embeddings (B, n_vision_tokens, d_vision).  The module owns
+the projector MLP (d_vision → d_model, the InternVL "mlp1" bridge) and
+delegates the backbone to :mod:`repro.models.transformer` with the vision
+tokens as prefix embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .layers import dense, dense_init, layernorm, layernorm_init
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = transformer.init_params(cfg, k1, dtype)
+    params["projector"] = {
+        "norm": layernorm_init(cfg.d_vision, dtype),
+        "fc1": dense_init(k2, cfg.d_vision, cfg.d_model, bias=True,
+                          dtype=dtype),
+        "fc2": dense_init(k3, cfg.d_model, cfg.d_model, bias=True,
+                          dtype=dtype),
+    }
+    return params
+
+
+def project(cfg, params, patches):
+    p = params["projector"]
+    x = layernorm(p["norm"], patches.astype(cfg.activation_dtype))
+    return dense(p["fc2"], jax.nn.gelu(dense(p["fc1"], x)))
+
+
+def forward(cfg, params, batch):
+    """batch: dict(patches (B,P,d_vision), tokens (B,S)) -> (logits, aux)."""
+    embeds = project(cfg, params, batch["patches"])
+    return transformer.forward(cfg, params, batch["tokens"],
+                               input_embeds=embeds)
+
+
+def loss_fn(cfg, params, batch):
+    embeds = project(cfg, params, batch["patches"])
+    return transformer.loss_fn(
+        cfg, params, {"tokens": batch["tokens"], "labels": batch["labels"],
+                      "input_embeds": embeds})
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return transformer.init_cache(cfg, batch, max_len, dtype)
+
+
+def decode_step(cfg, params, tokens, cache):
+    return transformer.decode_step(cfg, params, tokens, cache)

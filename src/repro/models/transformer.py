@@ -1,0 +1,296 @@
+"""Decoder-only LM assembly: dense / MoE / SSM / hybrid families.
+
+Layers are scanned (``jax.lax.scan`` over stacked per-layer params) so the
+HLO is O(1) in depth — a 61-layer MoE lowers as fast as a 2-layer toy — and
+rematerialization (``jax.checkpoint``) is applied per block when
+``cfg.remat``.  Heterogeneous stacks are segmented:
+
+  dense / vlm : one scanned segment of (attn + SwiGLU) blocks
+  moe         : ``n_dense_layers`` scanned dense blocks, then scanned
+                (attn + MoE) blocks; router aux losses accumulate in carry
+  ssm         : scanned Mamba-2 blocks
+  hybrid      : scanned groups of Mamba-2 blocks with one *shared*
+                (attn + SwiGLU) block applied between groups (zamba2-style;
+                the shared block's weights are a single copy)
+
+Public API: ``init_params``, ``forward`` (tokens → logits, plus aux loss),
+``loss_fn``, ``init_cache``, ``decode_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import layers, moe as moe_mod, ssm as ssm_mod
+from .layers import (cross_entropy, dense, embed, embedding_init, rmsnorm,
+                     rmsnorm_init, swiglu, swiglu_init, unembed)
+
+
+# ---------------------------------------------------------------- blocks ----
+def _attn_init(key, cfg, dtype):
+    return (attn_mod.mla_init(key, cfg, dtype) if cfg.mla
+            else attn_mod.gqa_init(key, cfg, dtype))
+
+
+def _attn_apply(p, cfg, x, positions, cache):
+    if cfg.mla:
+        return attn_mod.mla_apply(p, cfg, x, positions=positions, cache=cache)
+    return attn_mod.gqa_apply(p, cfg, x, positions=positions, cache=cache)
+
+
+def dense_block_init(key, cfg, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": _attn_init(k1, cfg, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def dense_block_apply(p, cfg, x, positions, cache=None):
+    h, new_cache = _attn_apply(p["attn"], cfg,
+                               rmsnorm(p["norm1"], x, cfg.norm_eps),
+                               positions, cache)
+    x = x + h
+    x = x + swiglu(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps))
+    return x, jnp.zeros((), jnp.float32), new_cache
+
+
+def moe_block_init(key, cfg, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": _attn_init(k1, cfg, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+        "moe": moe_mod.moe_init(k2, cfg, dtype),
+    }
+
+
+def moe_block_apply(p, cfg, x, positions, cache=None):
+    h, new_cache = _attn_apply(p["attn"], cfg,
+                               rmsnorm(p["norm1"], x, cfg.norm_eps),
+                               positions, cache)
+    x = x + h
+    y, aux = moe_mod.moe_apply(p["moe"], cfg,
+                               rmsnorm(p["norm2"], x, cfg.norm_eps),
+                               dropless=cache is not None)
+    return x + y, aux, new_cache
+
+
+def mamba_block_init(key, cfg, dtype=jnp.float32):
+    return {
+        "norm": rmsnorm_init(cfg.d_model, dtype),
+        "mixer": ssm_mod.mamba2_init(key, cfg, dtype),
+    }
+
+
+def mamba_block_apply(p, cfg, x, positions, cache=None):
+    h, new_cache = ssm_mod.mamba2_apply(p["mixer"], cfg,
+                                        rmsnorm(p["norm"], x, cfg.norm_eps),
+                                        cache=cache)
+    return x + h, jnp.zeros((), jnp.float32), new_cache
+
+
+_BLOCKS = {
+    "dense": (dense_block_init, dense_block_apply),
+    "moe": (moe_block_init, moe_block_apply),
+    "mamba": (mamba_block_init, mamba_block_apply),
+}
+
+
+# --------------------------------------------------------------- scanning ---
+def _stack_init(key, cfg, n: int, kind: str, dtype):
+    init, _ = _BLOCKS[kind]
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init(k, cfg, dtype))(keys)
+
+
+def _scan_blocks(stacked, cfg, x, positions, kind: str, caches=None):
+    """Scan a homogeneous segment.  Returns (x, aux_sum, new_caches)."""
+    _, apply = _BLOCKS[kind]
+
+    if caches is None:
+        def body(carry, p_layer):
+            xc, aux = carry
+            y, a, _ = apply(p_layer, cfg, xc, positions, None)
+            return (y, aux + a), None
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   stacked)
+        return x, aux, None
+
+    def body(carry, layer):
+        xc, aux = carry
+        p_layer, cache_layer = layer
+        y, a, nc = apply(p_layer, cfg, xc, positions, cache_layer)
+        return (y, aux + a), nc
+
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stacked, caches))
+    return x, aux, new_caches
+
+
+# ------------------------------------------------------------- LM assembly --
+def _segments(cfg):
+    """(name, kind, n_layers) segments of the decoder stack."""
+    if cfg.family == "moe":
+        nd = cfg.moe.n_dense_layers
+        segs = []
+        if nd:
+            segs.append(("blocks_dense", "dense", nd))
+        segs.append(("blocks", "moe", cfg.n_layers - nd))
+        return segs
+    if cfg.family == "ssm":
+        return [("blocks", "mamba", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        return [("blocks", "mamba", cfg.n_layers)]  # + shared attn, see below
+    return [("blocks", "dense", cfg.n_layers)]
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    params = {"embed": embedding_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                      dtype),
+              "final_norm": rmsnorm_init(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(ks[1], cfg.d_model,
+                                              cfg.vocab_size, dtype=dtype)
+    for i, (name, kind, n) in enumerate(_segments(cfg)):
+        params[name] = _stack_init(ks[2 + i], cfg, n, kind, dtype)
+    if cfg.family == "hybrid":
+        params["shared_attn"] = dense_block_init(ks[6], cfg, dtype)
+    if cfg.mtp_depth:
+        params["mtp"] = dense_block_init(ks[7], cfg, dtype)
+    return params
+
+
+def _backbone(cfg, params, x, positions, caches=None):
+    """Embedded input -> final hidden states.  Returns (x, aux, new_caches)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {}
+
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        g = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // g
+        stacked = params["blocks"]
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, g) + a.shape[1:]), stacked)
+        gc = caches["blocks"] if caches else None
+        gc = jax.tree.map(
+            lambda a: a.reshape((n_groups, g) + a.shape[1:]), gc) \
+            if gc is not None else None
+        shared = params["shared_attn"]
+        out_caches = []
+        for gi in range(n_groups):
+            seg = jax.tree.map(lambda a: a[gi], grouped)
+            seg_cache = jax.tree.map(lambda a: a[gi], gc) if gc is not None \
+                else None
+            x, aux, nc = _scan_blocks(seg, cfg, x, positions, "mamba",
+                                      seg_cache)
+            aux_total += aux
+            if caches is not None:
+                out_caches.append(nc)
+                sc = jax.tree.map(lambda a: a[gi], caches["shared_attn"])
+                x, _, nsc = dense_block_apply(shared, cfg, x, positions, sc)
+                new_caches.setdefault("shared_attn_list", []).append(nsc)
+            else:
+                x, _, _ = dense_block_apply(shared, cfg, x, positions, None)
+        if caches is not None:
+            new_caches["blocks"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs).reshape(
+                    (n_groups * g,) + xs[0].shape[1:]), *out_caches)
+            new_caches["shared_attn"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *new_caches.pop("shared_attn_list"))
+        return x, aux_total, new_caches if caches is not None else None
+
+    for name, kind, n in _segments(cfg):
+        seg_cache = caches[name] if caches is not None else None
+        x, aux, nc = _scan_blocks(params[name], cfg, x, positions, kind,
+                                  seg_cache)
+        aux_total += aux
+        if caches is not None:
+            new_caches[name] = nc
+    return x, aux_total, new_caches if caches is not None else None
+
+
+def forward(cfg, params, tokens, *, input_embeds=None, last_only=False):
+    """tokens: (B, S) -> (logits (B, S, V) fp32, aux_loss).
+
+    ``last_only=True`` (serving prefill) projects only the final position —
+    computing 32k×vocab logits nobody reads dominated the prefill memory
+    roofline (§Perf C1)."""
+    x = embed(params["embed"], tokens, cfg.activation_dtype)
+    if input_embeds is not None:       # vlm: prefix patch embeddings
+        x = jnp.concatenate([input_embeds.astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    x, aux, _ = _backbone(cfg, params, x, positions)
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["lm_head"], x.astype(jnp.float32))
+    return logits, aux
+
+
+def loss_fn(cfg, params, batch):
+    """batch: dict(tokens (B,S), labels (B,S)[, input_embeds]) -> scalar."""
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          input_embeds=batch.get("input_embeds"))
+    labels = batch["labels"]
+    if "input_embeds" in batch and batch["input_embeds"] is not None:
+        # vision prefix positions carry no labels
+        pad = -jnp.ones(batch["input_embeds"].shape[:2], jnp.int32) * 100
+        labels = jnp.concatenate([pad, labels], axis=1)
+    loss = cross_entropy(logits, labels)
+    if cfg.mtp_depth:  # predict t+2 through one extra block
+        x = embed(params["embed"], batch["tokens"], cfg.activation_dtype)
+        positions = jnp.arange(x.shape[1])
+        h, _, _ = dense_block_apply(params["mtp"], cfg, x, positions)
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits2 = (unembed(params["embed"], h) if cfg.tie_embeddings
+                   else dense(params["lm_head"], h.astype(jnp.float32)))
+        l2 = jnp.pad(batch["labels"][:, 2:], ((0, 0), (0, 2)),
+                     constant_values=-100)
+        loss = loss + 0.1 * cross_entropy(logits2, l2)
+    return loss + aux
+
+
+# ------------------------------------------------------------------ decode --
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    def one(kind):
+        if kind == "mamba":
+            return ssm_mod.mamba2_cache_init(cfg, batch, dtype)
+        if cfg.mla:
+            return attn_mod.mla_cache_init(cfg, batch, max_len, dtype)
+        return attn_mod.gqa_cache_init(cfg, batch, max_len, dtype)
+
+    caches = {}
+    for name, kind, n in _segments(cfg):
+        caches[name] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[one(kind) for _ in range(n)])
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        n_groups = cfg.n_layers // cfg.hybrid_attn_every
+        caches["shared_attn"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[one("dense") for _ in range(n_groups)])
+    return caches
+
+
+def decode_step(cfg, params, tokens, cache):
+    """tokens: (B, 1) -> (logits (B, 1, V), new_cache)."""
+    x = embed(params["embed"], tokens, cfg.activation_dtype)
+    seg0 = _segments(cfg)[0][0]
+    pos = cache[seg0]["pos"][0]          # caches are stacked over layers
+    positions = pos[None] + jnp.arange(tokens.shape[1])
+    x, _, new_caches = _backbone(cfg, params, x, positions, caches=cache)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (unembed(params["embed"], x) if cfg.tie_embeddings
+              else dense(params["lm_head"], x.astype(jnp.float32)))
+    return logits, new_caches

@@ -1,0 +1,6 @@
+"""Optimizers: sharded AdamW + gradient compression."""
+from . import adamw, compress
+from .adamw import AdamWConfig, AdamWState, init, update, schedule, global_norm
+
+__all__ = ["adamw", "compress", "AdamWConfig", "AdamWState", "init",
+           "update", "schedule", "global_norm"]

@@ -1,0 +1,102 @@
+"""Sharded AdamW with mixed-precision state and gradient clipping.
+
+State layout (per parameter leaf):
+    master : fp32 master copy (params themselves may be bf16)
+    m, v   : first/second moments, dtype selectable (bf16 halves the
+             optimizer-state HBM footprint — required to fit deepseek-v3
+             on 512×16 GB chips, see EXPERIMENTS.md §Dry-run)
+
+The state inherits each parameter's PartitionSpec (ZeRO-style: whatever
+sharding the param has, its optimizer state has too), so no separate spec
+table is needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"      # "bfloat16" halves state memory
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: Any
+    m: Any
+    v: Any
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init(cfg: AdamWConfig, params) -> AdamWState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    m = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params)
+    v = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params)
+    return AdamWState(jnp.zeros((), jnp.int32), master, m, v)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, params
+           ) -> Tuple[Any, AdamWState, dict]:
+    step = state.step + 1
+    lr = schedule(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip else jnp.ones(())
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(g, master, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + g * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g) * (1 - b2)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return new_master, m32.astype(mdt), v32.astype(mdt), \
+            new_master.astype(p.dtype)
+
+    out = jax.tree.map(upd, grads, state.master, state.m, state.v, params)
+    new_master = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda t: t[3], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step, new_master, new_m, new_v), metrics

@@ -1,0 +1,63 @@
+"""Gradient compression with error feedback (beyond-paper extension).
+
+int8 block-quantized gradients for the cross-pod (DCN) all-reduce: the pod
+axis is the slowest link, and fp32→int8 quarters its payload.  Error
+feedback keeps the quantization unbiased over time (the residual is added
+back into the next step's gradient before quantizing).
+
+This composes with trainer multi-pumping: the pumped (accumulated) gradient
+is quantized once per M microbatches, so the compression cost itself is
+amortized M×.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _leaf_quantize(g, err):
+    g = g.astype(jnp.float32) + (err.astype(jnp.float32)
+                                 if err is not None else 0.0)
+    flat = g.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:g.size].reshape(g.shape)
+    return q, scale, (g - deq)
+
+
+def quantize(grads, err_state=None):
+    """grads pytree -> (q pytree of (int8, scale), new error-feedback state)."""
+    if err_state is None:
+        err_state = jax.tree.map(lambda _: None, grads,
+                                 is_leaf=lambda x: x is None)
+    out = jax.tree.map(_leaf_quantize, grads, err_state,
+                       is_leaf=lambda x: x is None)
+    q = jax.tree.map(lambda t: (t[0], t[1]), out,
+                     is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+    err = jax.tree.map(lambda t: t[2], out,
+                       is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+    return q, err
+
+
+def dequantize(q, like):
+    def deq(pair, g):
+        qi, scale = pair
+        flat = (qi.astype(jnp.float32) * scale).reshape(-1)[:g.size]
+        return flat.reshape(g.shape)
+    return jax.tree.map(deq, q, like,
+                        is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)
+
+
+def compression_ratio(grads) -> float:
+    """Bytes(int8+scales) / bytes(fp32)."""
+    total = sum(l.size for l in jax.tree.leaves(grads))
+    q_bytes = total * 1 + (total // BLOCK + 1) * 4
+    return q_bytes / (total * 4)

@@ -1,0 +1,174 @@
+"""Core IR + transformation tests, incl. hypothesis property tests.
+
+Invariants under test (the paper's correctness claims):
+  P1  streaming extraction is value-preserving
+  P2  multi-pumping (either mode) is value-preserving
+  P3  Mode T: throughput ×M at equal compute units
+  P4  Mode R: compute units ÷M at equal throughput
+  P5  effective-rate law: rate_eff = min(clk0, clk1/M)
+  P6  legality: data-dependent external I/O is rejected; direct HBM access
+      without streaming is rejected
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AccessPattern, Affine, Domain, Graph, PumpSpec,
+                        apply_multipump, apply_streaming, check_multipump,
+                        effective_rate, executor, sequence_equivalent,
+                        throughput_model)
+from repro.core.pump_plan import (KernelEstimate, best_pump_factor,
+                                  mxu_aligned_tile, plan_trainer_pump)
+
+
+def vecadd_graph(n: int, v: int) -> Graph:
+    g = Graph("vecadd")
+    g.memory("x", (n,))
+    g.memory("y", (n,))
+    g.memory("z", (n,))
+    dom = Domain.of(("i", 0, n // v))
+    acc = AccessPattern(dom, (Affine.of("i", v),), width=v)
+    g.compute("add", dom, fn=lambda in0, in1: {"out0": in0 + in1},
+              vector_width=v)
+    g.connect("x", "add", acc)
+    g.connect("y", "add", acc)
+    g.connect("add", "z", acc)
+    return g
+
+
+# -------------------------------------------------------------- symbolic ----
+def test_affine_algebra():
+    e = Affine.of("i", 3) + Affine.of("j", 2) + 5
+    assert e.evaluate({"i": 2, "j": 1}) == 13
+    assert (e * 2).evaluate({"i": 1, "j": 1}) == 20
+    assert (e - e).evaluate({"i": 9, "j": 9}) == 0
+
+
+def test_sequence_equivalence_detects_order_mismatch():
+    dom = Domain.of(("i", 0, 4), ("j", 0, 4))
+    row_major = AccessPattern(dom, (Affine.of("i"), Affine.of("j")))
+    dom2 = Domain.of(("a", 0, 4), ("b", 0, 4))
+    row_major2 = AccessPattern(dom2, (Affine.of("a"), Affine.of("b")))
+    col_major = AccessPattern(dom, (Affine.of("j"), Affine.of("i")))
+    assert sequence_equivalent(row_major, row_major2, (4, 4))
+    assert not sequence_equivalent(row_major, col_major, (4, 4))
+
+
+# ------------------------------------------------- P1/P2 value preservation --
+@settings(max_examples=25, deadline=None)
+@given(n_blocks=st.integers(2, 8), v=st.sampled_from([1, 2, 4]),
+       m=st.sampled_from([2, 4]), mode=st.sampled_from(["T", "R"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_streaming_and_pump_value_preserving(n_blocks, v, m, mode, seed):
+    if mode == "R" and v % m:
+        return
+    n = n_blocks * v * m
+    g = vecadd_graph(n, v)
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    gold = x + y
+
+    sg, rep = apply_streaming(g)
+    assert len(rep.streamed) == 3 and not rep.rejected
+    out_s = executor.run(sg, {"x": x, "y": y})["z"]
+    np.testing.assert_allclose(out_s, gold, rtol=1e-6)     # P1
+
+    pg, prep = apply_multipump(sg, factor=m, mode=mode)
+    assert prep.applied, prep.reason
+    out_p = executor.run(pg, {"x": x, "y": y})["z"]
+    np.testing.assert_allclose(out_p, gold, rtol=1e-6)     # P2
+
+
+# ----------------------------------------------------- P3/P4 resource model --
+def test_mode_t_throughput_and_mode_r_resources():
+    g, _ = apply_streaming(vecadd_graph(64, 4))
+    base_tp = throughput_model(g)
+    base_cu = g.resources()["compute_units"]
+
+    tg, trep = apply_multipump(g, factor=2, mode="T")
+    assert throughput_model(tg) == pytest.approx(2 * base_tp)       # P3
+    assert tg.resources()["compute_units"] == base_cu
+
+    rg, rrep = apply_multipump(g, factor=2, mode="R")
+    assert throughput_model(rg) == pytest.approx(base_tp)           # P4
+    assert rg.resources()["compute_units"] == base_cu // 2
+    assert rrep.resource_ratio("compute_units") == pytest.approx(0.5)
+
+
+# ------------------------------------------------------------- P5 rate law --
+@settings(max_examples=50, deadline=None)
+@given(clk0=st.floats(0.1, 10), ratio=st.floats(0.5, 8),
+       m=st.integers(1, 8))
+def test_effective_rate_law(clk0, ratio, m):
+    clk1 = clk0 * ratio
+    eff = effective_rate(clk0, clk1, m)
+    assert eff <= clk0 + 1e-9
+    assert eff <= clk1 / max(m, 1) + 1e-9                           # P5
+    if clk1 / m >= clk0:
+        assert eff == pytest.approx(clk0)
+
+
+# -------------------------------------------------------------- P6 legality --
+def test_multipump_rejects_data_dependent_io():
+    g = Graph("gather")
+    g.memory("idx", (16,))
+    g.memory("x", (16,))
+    g.memory("z", (16,))
+    dom = Domain.of(("i", 0, 16))
+    acc = AccessPattern(dom, (Affine.of("i"),))
+    g.compute("gath", dom, vector_width=1, data_dependent_io=True)
+    g.connect("idx", "gath", acc)
+    g.connect("x", "gath", acc)
+    g.connect("gath", "z", acc)
+    sg, _ = apply_streaming(g)
+    ok, why = check_multipump(sg, ["gath"], 2)
+    assert not ok and "data-dependent" in why
+
+
+def test_multipump_requires_streaming_first():
+    g = vecadd_graph(32, 2)
+    ok, why = check_multipump(g, ["add"], 2)
+    assert not ok and "streaming" in why
+
+
+def test_multipump_respects_vmem_budget():
+    g, _ = apply_streaming(vecadd_graph(1 << 14, 1024))
+    ok, why = check_multipump(g, ["add"], 4, vmem_budget=1024)
+    assert not ok and "VMEM" in why
+
+
+# ----------------------------------------------------------- pump planning --
+def test_best_pump_factor_amortizes_fixed_overhead():
+    # DMA-dominated kernel with large per-step overhead: pumping helps
+    est = KernelEstimate(block_bytes_in=4096, block_bytes_out=4096,
+                         flops_per_block=1e5, fixed_overhead_s=1e-5)
+    assert best_pump_factor(est) > 1
+    # compute-bound kernel with no overhead: pumping is neutral; planner
+    # must not pick a factor that shrinks throughput
+    est2 = KernelEstimate(block_bytes_in=64, block_bytes_out=64,
+                          flops_per_block=1e9, fixed_overhead_s=0.0)
+    m = best_pump_factor(est2)
+    assert est2.throughput(m) >= est2.throughput(1) * 0.999
+
+
+@settings(max_examples=30, deadline=None)
+@given(bin_=st.integers(128, 1 << 20), bout=st.integers(0, 1 << 20),
+       flops=st.floats(1e3, 1e12))
+def test_pump_factor_never_violates_vmem(bin_, bout, flops):
+    est = KernelEstimate(bin_, bout, flops)
+    m = best_pump_factor(est, vmem_budget=1 << 22)
+    assert 2 * m * (bin_ + bout) <= (1 << 22) or m == 1
+
+
+def test_mxu_alignment():
+    tm, tn = mxu_aligned_tile(300, 70)
+    assert tm % 8 == 0 and tn % 128 == 0
+
+
+def test_trainer_pump_scales_with_model_size():
+    small = plan_trainer_pump(grad_bytes=int(1e8), step_flops=1e15,
+                              n_chips=256, dp_degree=16)
+    big = plan_trainer_pump(grad_bytes=int(1e12), step_flops=1e15,
+                            n_chips=256, dp_degree=16)
+    assert big >= small
