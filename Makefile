@@ -1,0 +1,17 @@
+# Reproducible entry points. `make test` is the tier-1 verify command.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench bench-compiler
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -x -q tests/test_compiler.py tests/test_core.py
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-compiler:
+	$(PY) -m benchmarks.run compiler

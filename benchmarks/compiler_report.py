@@ -1,0 +1,57 @@
+"""Compiler-pipeline benchmark: compile latency, cache behaviour, parity.
+
+    PYTHONPATH=src python -m benchmarks.run compiler
+
+Emits the standard ``name,us_per_call,derived`` rows: cold compile (full
+pass pipeline + lowering), warm compile (served from the persistent cache /
+in-process memo), and lowered-vs-reference-executor parity for the vecadd
+and matmul IR graphs.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import compiler
+from repro.core import executor
+from repro.core.autopump import BUILDERS
+
+from .common import emit
+
+
+def _cases():
+    rng = np.random.default_rng(0)
+    g_va, _ = BUILDERS["vecadd"](4096, vector_width=8)
+    va_inputs = {"x": rng.integers(-4, 5, 4096).astype(np.float32),
+                 "y": rng.integers(-4, 5, 4096).astype(np.float32)}
+    g_mm, _ = BUILDERS["matmul"](64, 64, 64, bm=32, bn=32, bk=32,
+                                 vector_width=8)
+    mm_inputs = {"a": rng.integers(-3, 4, (64, 64)).astype(np.float32),
+                 "b": rng.integers(-3, 4, (64, 64)).astype(np.float32)}
+    return [("vecadd", g_va, va_inputs, "z"),
+            ("matmul", g_mm, mm_inputs, "c")]
+
+
+def main() -> None:
+    for name, g, inputs, out_name in _cases():
+        t0 = time.perf_counter()
+        kern = compiler.compile(g, factor=2)
+        cold_us = (time.perf_counter() - t0) * 1e6
+        emit(f"compile_{name}_cold", cold_us,
+             f"M={kern.spec.factor};{kern.report.summary().split('] ')[1]}")
+
+        t0 = time.perf_counter()
+        kern2 = compiler.compile(g, factor=2)
+        warm_us = (time.perf_counter() - t0) * 1e6
+        emit(f"compile_{name}_warm", warm_us,
+             f"served={kern2.report.served_from};hits={kern2.report.cache_hits}")
+
+        out = np.asarray(kern(inputs)[out_name])
+        gold = executor.run(kern.graph, dict(inputs))[out_name]
+        parity = "bitexact" if np.array_equal(out, gold) else "MISMATCH"
+        emit(f"compile_{name}_parity", 0.0, parity)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,6 @@
 """Benchmark harness: one function per paper table.
 
-    PYTHONPATH=src python -m benchmarks.run [table2|table3|table45|table6|roofline]
+    PYTHONPATH=src python -m benchmarks.run [table2|table3|table45|table6|roofline|compiler]
 
 Prints ``name,us_per_call,derived`` CSV rows.  The roofline table (per
 arch × shape) reads the dry-run JSON if present and is also runnable
@@ -30,6 +30,9 @@ def main() -> None:
     if which in ("all", "roofline"):
         from . import roofline
         roofline.summary_rows()
+    if which in ("all", "compiler"):
+        from . import compiler_report
+        compiler_report.main()
 
 
 if __name__ == "__main__":

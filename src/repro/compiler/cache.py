@@ -1,0 +1,145 @@
+"""Persistent compile/autotune cache.
+
+Keyed by a content hash of the *structure* of a graph (nodes, edges, access
+patterns, shapes) plus the compile parameters; the stored value is the
+pipeline *plan* — most importantly the chosen pump factor — so a repeated
+``compile``/``autopump`` in a fresh process skips the autotune search and
+legality probing.  Entries live in one JSON file (default
+``~/.cache/repro/compile_cache.json``, overridable with ``$REPRO_CACHE_DIR``
+or an explicit path), written atomically via rename.
+
+Compute-node ``fn`` bodies are not part of the structural fingerprint (they
+are opaque callables); plans are fn-independent, and the in-memory kernel
+memo in :mod:`repro.compiler` additionally keys on the fn code location.
+All I/O failures degrade to cache-off behaviour instead of raising.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.core.ir import Graph
+from repro.core.symbolic import AccessPattern, Affine
+
+
+def _affine_sig(a: Affine):
+    return [list(map(list, a.terms)), a.const]
+
+
+def _access_sig(acc: Optional[AccessPattern]):
+    if acc is None:
+        return None
+    return {
+        "dims": [list(d) for d in acc.domain.dims],
+        "exprs": [_affine_sig(e) for e in acc.normalized_exprs()],
+        "width": acc.width,
+    }
+
+
+_META_KEYS = ("factor", "pump_mode", "keep", "rate")
+
+
+def graph_fingerprint(g: Graph) -> str:
+    """Deterministic content hash of the graph structure (not fn bodies)."""
+    nodes = []
+    for name in sorted(g.nodes):
+        n = g.nodes[name]
+        nodes.append([
+            name, n.kind.value, list(n.shape), n.dtype, n.space.value,
+            n.elem_width, n.depth, n.vector_width, n.rate.value, n.pump,
+            bool(n.data_dependent_io),
+            [[k, repr(n.meta[k])] for k in _META_KEYS if k in n.meta],
+        ])
+    edges = [[e.src, e.dst, _access_sig(e.access), e.volume] for e in g.edges]
+    blob = json.dumps([g.name, nodes, edges], sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def request_key(g: Graph, **params) -> str:
+    """Cache key for one compile request: structure hash + parameters."""
+    blob = json.dumps([graph_fingerprint(g), sorted(params.items())],
+                      sort_keys=True, default=repr)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _default_path() -> Path:
+    root = os.environ.get("REPRO_CACHE_DIR")
+    if root:
+        return Path(root).expanduser() / "compile_cache.json"
+    return Path.home() / ".cache" / "repro" / "compile_cache.json"
+
+
+class CompileCache:
+    """JSON-on-disk key→plan store with hit/miss accounting."""
+
+    def __init__(self, path: Optional[os.PathLike | str] = None):
+        self.path = Path(path) if path is not None else _default_path()
+        self.hits = 0
+        self.misses = 0
+        self._entries: Optional[Dict[str, dict]] = None
+
+    # -- persistence ---------------------------------------------------------
+    def _load(self) -> Dict[str, dict]:
+        if self._entries is None:
+            try:
+                with open(self.path) as f:
+                    data = json.load(f)
+                self._entries = dict(data.get("entries", {}))
+            except (OSError, ValueError):
+                self._entries = {}
+        return self._entries
+
+    def _save(self) -> None:
+        try:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.path.parent,
+                                       prefix=self.path.name, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump({"version": 1, "entries": self._load()}, f)
+            os.replace(tmp, self.path)
+        except OSError:
+            pass  # read-only filesystem etc.: behave as a process-local cache
+
+    # -- store API -----------------------------------------------------------
+    def get(self, key: str) -> Optional[dict]:
+        entry = self._load().get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return dict(entry)
+
+    def put(self, key: str, value: dict) -> None:
+        self._load()[key] = dict(value)
+        self._save()
+
+    def clear(self) -> None:
+        self._entries = {}
+        self._save()
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._load())}
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+    def __contains__(self, key: str) -> bool:
+        """Presence probe that does not count toward hit/miss stats."""
+        return key in self._load()
+
+
+_DEFAULT_CACHES: Dict[str, CompileCache] = {}
+
+
+def default_cache() -> CompileCache:
+    """Process-wide cache instance for the default path (env-sensitive)."""
+    path = str(_default_path())
+    if path not in _DEFAULT_CACHES:
+        _DEFAULT_CACHES[path] = CompileCache(path)
+    return _DEFAULT_CACHES[path]

@@ -1,0 +1,185 @@
+"""Graph→JAX lowering backend.
+
+Compiles a (possibly streamed + multi-pumped) dataflow :class:`Graph` into a
+``jax.jit``-able callable with the same semantics as the numpy reference
+executor (:mod:`repro.core.executor`), which stays around as the differential-
+testing oracle.  The lowering is a topological module schedule:
+
+===========  ================================================================
+IR node      JAX realization
+===========  ================================================================
+Memory       input array (or zeros) threaded through functionally
+Reader       static gather ``jnp.take`` with addresses precomputed from the
+             symbolic access pattern at lowering time
+Writer       static scatter ``.at[idx].set``
+Sync         ``jax.lax.optimization_barrier`` — value identity, but a real
+             scheduling boundary under jit (the Pallas pipeline analogue of
+             the paper's clock-domain-crossing synchronizer)
+Issuer /     temporal re-chunking: a ``fori_loop`` over the pump factor M
+Packer       copying one narrow phase per iteration (value identity — the
+             paper's gearbox moves M narrow beats per wide transaction)
+Compute      the node's ``fn`` body applied to its FIFO-ordered operand
+             sequences; ``fn`` must be numpy/jax polymorphic (operator-based)
+Stream       value pass-through (FIFO order is the sequence order)
+===========  ================================================================
+
+Scatter targets with duplicate addresses are unsupported (same caveat as the
+reference executor, whose last-write-wins order is numpy-specific).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.executor import _toposort
+from repro.core.ir import Graph, NodeKind, PumpSpec
+
+
+class LoweringError(RuntimeError):
+    pass
+
+
+def _temporal_rechunk(seq: jax.Array, factor: int) -> jax.Array:
+    """Issuer/packer body: re-emit ``seq`` as ``factor`` narrow phases.
+
+    Value-identity on the flattened FIFO sequence (a wide transaction of M·V
+    elements is exactly its M consecutive narrow beats), realized as a
+    ``fori_loop`` so the temporal iteration survives into the jaxpr.
+    """
+    flat = jnp.reshape(seq, (-1,))
+    n = flat.shape[0]
+    if factor <= 1 or n % factor:
+        return flat
+    chunk = n // factor
+
+    def body(m, out):
+        beat = jax.lax.dynamic_slice(flat, (m * chunk,), (chunk,))
+        return jax.lax.dynamic_update_slice(out, beat, (m * chunk,))
+
+    return jax.lax.fori_loop(0, factor, body, jnp.zeros_like(flat))
+
+
+def _indices(access, shape) -> np.ndarray:
+    return np.fromiter(access.addresses(shape), dtype=np.int64)
+
+
+def _scatter(mem: jax.Array, idx: np.ndarray, seq) -> jax.Array:
+    flat = jnp.reshape(mem, (-1,))
+    vals = jnp.reshape(jnp.asarray(seq), (-1,)).astype(mem.dtype)
+    return jnp.reshape(flat.at[idx].set(vals), mem.shape)
+
+
+def lower(g: Graph, jit: bool = True) -> Callable[[Mapping[str, Any]],
+                                                  Dict[str, jax.Array]]:
+    """Lower ``g`` to a callable ``fn(inputs) -> {memory name: array}``.
+
+    ``inputs`` maps memory-node names to arrays (missing memories start as
+    zeros, as in the reference executor).  The graph must not be mutated
+    after lowering: access-pattern gathers/scatters are frozen here.
+    """
+    g.validate()
+    order = _toposort(g)
+
+    # freeze every symbolic access into a static index vector
+    idx_of: Dict[int, np.ndarray] = {}
+    for e in g.edges:
+        if e.access is None:
+            continue
+        src, dst = g.nodes[e.src], g.nodes[e.dst]
+        if src.kind == NodeKind.MEMORY and dst.kind in (NodeKind.READER,
+                                                        NodeKind.COMPUTE):
+            idx_of[id(e)] = _indices(e.access, src.shape)
+        elif dst.kind == NodeKind.MEMORY and src.kind in (NodeKind.WRITER,
+                                                          NodeKind.COMPUTE):
+            idx_of[id(e)] = _indices(e.access, dst.shape)
+
+    for comp in g.computes():
+        if comp.fn is None:
+            raise LoweringError(
+                f"compute module {comp.name!r} has no fn body to lower")
+
+    def run_fn(inputs: Mapping[str, Any]) -> Dict[str, jax.Array]:
+        mems: Dict[str, jax.Array] = {}
+        for n in g.nodes.values():
+            if n.kind != NodeKind.MEMORY:
+                continue
+            if n.name in inputs:
+                mems[n.name] = jnp.asarray(inputs[n.name], dtype=n.dtype)
+            else:
+                mems[n.name] = jnp.zeros(n.shape, dtype=n.dtype)
+
+        edge_val: Dict[int, jax.Array] = {}
+        for name in order:
+            node = g.nodes[name]
+            ins, outs = g.in_edges(name), g.out_edges(name)
+            if node.kind == NodeKind.MEMORY:
+                continue  # gathers happen at the consumer
+            if node.kind == NodeKind.READER:
+                e = ins[0]
+                flat = jnp.reshape(mems[e.src], (-1,))
+                edge_val[id(outs[0])] = jnp.take(flat, idx_of[id(e)])
+            elif node.kind == NodeKind.WRITER:
+                e = outs[0]
+                mems[e.dst] = _scatter(mems[e.dst], idx_of[id(e)],
+                                       edge_val[id(ins[0])])
+            elif node.kind == NodeKind.SYNC:
+                edge_val[id(outs[0])] = jax.lax.optimization_barrier(
+                    edge_val[id(ins[0])])
+            elif node.kind in (NodeKind.ISSUER, NodeKind.PACKER):
+                factor = int(node.meta.get("factor", 1))
+                edge_val[id(outs[0])] = _temporal_rechunk(
+                    edge_val[id(ins[0])], factor)
+            elif node.kind == NodeKind.STREAM:
+                edge_val[id(outs[0])] = edge_val[id(ins[0])]
+            elif node.kind == NodeKind.COMPUTE:
+                bound = {}
+                for k, e in enumerate(ins):
+                    src = g.nodes[e.src]
+                    if src.kind == NodeKind.MEMORY and e.access is not None:
+                        flat = jnp.reshape(mems[e.src], (-1,))
+                        bound[f"in{k}"] = jnp.take(flat, idx_of[id(e)])
+                    else:
+                        bound[f"in{k}"] = edge_val[id(e)]
+                result = node.fn(**bound)
+                if not isinstance(result, dict):
+                    result = {"out0": result}
+                for k, e in enumerate(outs):
+                    seq = result[f"out{k}"]
+                    if g.nodes[e.dst].kind == NodeKind.MEMORY \
+                            and e.access is not None:
+                        mems[e.dst] = _scatter(mems[e.dst], idx_of[id(e)], seq)
+                    else:
+                        edge_val[id(e)] = seq
+            else:  # pragma: no cover
+                raise LoweringError(f"cannot lower node kind {node.kind}")
+        return mems
+
+    return jax.jit(run_fn) if jit else run_fn
+
+
+@dataclasses.dataclass
+class CompiledKernel:
+    """The artifact :func:`repro.compiler.compile` returns.
+
+    ``graph`` is the transformed IR, ``spec`` the kernel-layer pump spec,
+    ``report`` the pipeline provenance (incl. cache bookkeeping), and ``fn``
+    the executable (None when compiled with ``backend='none'``).
+    """
+
+    graph: Graph
+    spec: PumpSpec
+    report: Any
+    fn: Optional[Callable]
+    backend: str = "jax"
+
+    def __call__(self, inputs: Mapping[str, Any]) -> Dict[str, Any]:
+        if self.fn is None:
+            raise LoweringError(
+                "kernel was compiled with backend='none'; re-compile with "
+                "backend='jax' or 'reference' to execute it")
+        return self.fn(inputs)

@@ -1,0 +1,102 @@
+"""Pass-pipeline driver.
+
+A :class:`Pipeline` is an ordered list of :class:`~repro.compiler.passes.GraphPass`
+instances.  ``run`` walks them over a graph: passes whose ``can_apply``
+rejects are recorded as skipped (with the reason) and the graph flows through
+unchanged; applied passes contribute their own report object.  The resulting
+:class:`PipelineReport` is the compiler's provenance record — it also carries
+the compile-cache bookkeeping (key, which layer served the request, and a hit
+counter) that :func:`repro.compiler.compile` fills in.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+from repro.core.ir import Graph
+from repro.core.pump_plan import VMEM_BYTES
+
+from .passes import (FifoDepthPass, GraphPass, MultipumpPass, StreamFusionPass,
+                     StreamingPass)
+
+
+@dataclasses.dataclass
+class PassRecord:
+    name: str
+    applied: bool
+    reason: str = ""
+    report: Any = None
+    resources: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class PipelineReport:
+    graph: str
+    records: List[PassRecord] = dataclasses.field(default_factory=list)
+    # compile/autotune cache bookkeeping (filled by repro.compiler.compile)
+    cache_key: Optional[str] = None
+    served_from: Optional[str] = None   # None | "disk" | "memory"
+    cache_hits: int = 0
+
+    def record(self, name: str) -> Optional[PassRecord]:
+        for r in self.records:
+            if r.name == name:
+                return r
+        return None
+
+    @property
+    def factor(self) -> int:
+        r = self.record("multipump")
+        if r is not None and r.applied and r.report is not None:
+            return r.report.factor
+        return 1
+
+    @property
+    def mode(self) -> str:
+        r = self.record("multipump")
+        if r is not None and r.applied and r.report is not None:
+            return r.report.mode
+        return "T"
+
+    def summary(self) -> str:
+        parts = [f"{r.name}:{'+' if r.applied else '-'}" for r in self.records]
+        cache = f" cache={self.served_from or 'miss'}({self.cache_hits})"
+        return f"[{self.graph}] " + " ".join(parts) + f" M={self.factor}" + cache
+
+
+class Pipeline:
+    """Deterministic driver running registered passes in order."""
+
+    def __init__(self, passes: Sequence[GraphPass]):
+        self.passes = list(passes)
+
+    @staticmethod
+    def default(factor="auto", mode: str = "T", vmem_budget: int = VMEM_BYTES,
+                max_factor: int = 16, estimate=None, fuse: bool = True,
+                size_fifos: bool = True) -> "Pipeline":
+        """The paper's §3 ordering: stream, fuse, pump, then size FIFOs
+        (depths depend on the chosen pump factor, so sizing runs last)."""
+        passes: List[GraphPass] = [StreamingPass()]
+        if fuse:
+            passes.append(StreamFusionPass())
+        passes.append(MultipumpPass(factor=factor, mode=mode,
+                                    vmem_budget=vmem_budget,
+                                    max_factor=max_factor, estimate=estimate))
+        if size_fifos:
+            passes.append(FifoDepthPass())
+        return Pipeline(passes)
+
+    def run(self, g: Graph) -> Tuple[Graph, PipelineReport]:
+        report = PipelineReport(graph=g.name)
+        cur = g
+        for p in self.passes:
+            ok, why = p.can_apply(cur)
+            if not ok:
+                report.records.append(PassRecord(p.name, False, why))
+                continue
+            cur, prep = p.apply(cur)
+            applied = bool(getattr(prep, "applied", True))
+            reason = getattr(prep, "reason", "ok") or "ok"
+            report.records.append(
+                PassRecord(p.name, applied, reason, prep, cur.resources()))
+        return cur, report

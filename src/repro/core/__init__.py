@@ -20,6 +20,18 @@ from .pump_plan import (KernelEstimate, best_pump_factor, plan_kernel_pump,
 from . import executor
 from .autopump import autopump, AutopumpResult, BUILDERS
 
+
+def __getattr__(name):
+    # Lazy re-export of the compiler subsystem (PEP 562):
+    # ``repro.core.compiler.compile(graph, ...)`` runs the pass pipeline +
+    # lowering backend.  Deferred so that repro.core itself stays jax-free
+    # (reference executor / IR analysis users pay no jax import) and the
+    # core→compiler→core import cycle never materializes eagerly.
+    if name == "compiler":
+        from repro import compiler
+        return compiler
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
     "Affine", "AccessPattern", "Domain", "sequence_equivalent",
     "Edge", "Graph", "Node", "NodeKind", "PumpSpec", "RateDomain", "Space",
@@ -28,5 +40,5 @@ __all__ = [
     "throughput_model", "pump_spec_for", "KernelEstimate", "best_pump_factor",
     "plan_kernel_pump", "plan_trainer_pump", "mxu_aligned_tile", "align_up",
     "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW", "VMEM_BYTES", "MXU_DIM",
-    "executor", "autopump", "AutopumpResult", "BUILDERS",
+    "executor", "autopump", "AutopumpResult", "BUILDERS", "compiler",
 ]

@@ -21,10 +21,9 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
-from .ir import Graph, Node, NodeKind, PumpSpec
-from .multipump import PumpReport, apply_multipump, check_multipump
-from .pump_plan import (KernelEstimate, VMEM_BYTES, best_pump_factor)
-from .streaming import apply_streaming
+from .ir import Graph, PumpSpec
+from .multipump import PumpReport
+from .pump_plan import KernelEstimate, VMEM_BYTES
 from .symbolic import AccessPattern, Affine, Domain
 
 
@@ -35,6 +34,7 @@ class AutopumpResult:
     streaming_report: object
     pump_report: Optional[PumpReport]
     estimate: KernelEstimate
+    pipeline_report: object = None   # repro.compiler PipelineReport
 
     def summary(self) -> str:
         r = self.graph.resources()
@@ -52,7 +52,10 @@ def _vecadd_graph(n: int, vector_width: int = 8, itemsize: int = 4):
     g.memory("z", (n,))
     dom = Domain.of(("i", 0, max(n // v, 1)))
     acc = AccessPattern(dom, (Affine.of("i", v),), width=v)
-    g.compute("add", dom, vector_width=v)
+    # fn is numpy/jax polymorphic (operator-based) so the same body runs in
+    # the reference executor and in the compiler's JAX lowering backend.
+    g.compute("add", dom, fn=lambda in0, in1: {"out0": in0 + in1},
+              vector_width=v)
     g.connect("x", "add", acc)
     g.connect("y", "add", acc)
     g.connect("add", "z", acc)
@@ -63,20 +66,51 @@ def _vecadd_graph(n: int, vector_width: int = 8, itemsize: int = 4):
 
 
 def _matmul_graph(m: int, n: int, k: int, bm: int = 128, bn: int = 128,
-                  bk: int = 128, itemsize: int = 4):
+                  bk: int = 128, itemsize: int = 4,
+                  vector_width: Optional[int] = None):
     g = Graph("matmul")
     g.memory("a", (m, k))
     g.memory("b", (k, n))
     g.memory("c", (m, n))
     dom = Domain.of(("i", 0, max(m // bm, 1)), ("j", 0, max(n // bn, 1)),
                     ("kk", 0, max(k // bk, 1)))
-    acc_a = AccessPattern(dom, (Affine.of("i", bm), Affine.of("kk", bk)),
-                          width=1)
-    acc_b = AccessPattern(dom, (Affine.of("kk", bk), Affine.of("j", bn)),
-                          width=1)
-    acc_c = AccessPattern(dom, (Affine.of("i", bm), Affine.of("j", bn)),
-                          width=1)
-    g.compute("mxu_tile", dom, vector_width=bm * bn // (128 * 128) or 1)
+    fn = None
+    if m % bm == 0 and n % bn == 0 and k % bk == 0:
+        # Executable form: access patterns walk full (row-contiguous) operand
+        # panels per block point, so the FIFO sequences carry all the data
+        # and the compute body is a real blocked matmul.
+        nbm, nbn, nbk = m // bm, n // bn, k // bk
+        dom_a = Domain.of(("i", 0, nbm), ("j", 0, nbn), ("kk", 0, nbk),
+                          ("r", 0, bm))
+        acc_a = AccessPattern(
+            dom_a, (Affine.of("i", bm) + Affine.of("r"), Affine.of("kk", bk)),
+            width=bk)
+        dom_b = Domain.of(("i", 0, nbm), ("j", 0, nbn), ("kk", 0, nbk),
+                          ("r", 0, bk))
+        acc_b = AccessPattern(
+            dom_b, (Affine.of("kk", bk) + Affine.of("r"), Affine.of("j", bn)),
+            width=bn)
+        dom_c = Domain.of(("i", 0, nbm), ("j", 0, nbn), ("r", 0, bm))
+        acc_c = AccessPattern(
+            dom_c, (Affine.of("i", bm) + Affine.of("r"), Affine.of("j", bn)),
+            width=bn)
+
+        def fn(in0, in1):
+            a = in0.reshape(nbm, nbn, nbk, bm, bk)
+            b = in1.reshape(nbm, nbn, nbk, bk, bn)
+            return {"out0": (a @ b).sum(axis=2).reshape(-1)}
+    else:
+        # Fallback (non-divisible shapes): corner-sampled transaction
+        # schedule — enough for planning/legality, not executable.
+        acc_a = AccessPattern(dom, (Affine.of("i", bm), Affine.of("kk", bk)),
+                              width=1)
+        acc_b = AccessPattern(dom, (Affine.of("kk", bk), Affine.of("j", bn)),
+                              width=1)
+        acc_c = AccessPattern(dom, (Affine.of("i", bm), Affine.of("j", bn)),
+                              width=1)
+    if vector_width is None:
+        vector_width = bm * bn // (128 * 128) or 1
+    g.compute("mxu_tile", dom, fn=fn, vector_width=vector_width)
     g.connect("a", "mxu_tile", acc_a)
     g.connect("b", "mxu_tile", acc_b)
     g.connect("mxu_tile", "c", acc_c)
@@ -191,37 +225,35 @@ BUILDERS: Dict[str, Callable] = {
 
 
 def autopump(kernel: str, *args, mode: str = "T", max_factor: int = 16,
-             vmem_budget: int = VMEM_BYTES, **kwargs) -> AutopumpResult:
+             vmem_budget: int = VMEM_BYTES, cache=None,
+             **kwargs) -> AutopumpResult:
     """Run the full §3 pipeline for a registered kernel.
 
-    1. build the dataflow IR; 2. streaming pass (greedy, whole graph);
-    3. pick M from the capacity model; 4. legality-check + apply the
-    multi-pump transform.  Falls back to M=1 (untransformed) when the
-    checks reject — mirroring "the transformation can check for
-    feasibility" semantics of data-centric transforms.
+    1. build the dataflow IR; 2. drive the ``repro.compiler`` pass pipeline
+    (streaming → stream-fusion → multipump with the capacity-model factor →
+    FIFO sizing).  Falls back to M=1 (untransformed) when the legality checks
+    reject — mirroring "the transformation can check for feasibility"
+    semantics of data-centric transforms.  Pipeline decisions are memoized in
+    the persistent compile cache (``cache=False`` disables), so repeated
+    calls across benchmark/serve runs are O(1).
     """
     if kernel not in BUILDERS:
         raise KeyError(f"no IR builder for kernel {kernel!r}; "
                        f"known: {sorted(BUILDERS)}")
     g, est = BUILDERS[kernel](*args, **kwargs)
-    streamed, s_report = apply_streaming(g)
 
-    m = best_pump_factor(est, max_factor=max_factor,
-                         vmem_budget=vmem_budget)
-    if mode == "R":
-        # resource mode: M bounded by the spatial width it divides
-        widths = [c.vector_width for c in streamed.computes()]
-        while m > 1 and any(w % m for w in widths):
-            m //= 2
-    p_report = None
-    if m > 1:
-        ok, why = check_multipump(
-            streamed, [c.name for c in streamed.computes()], m, mode,
-            vmem_budget)
-        if ok:
-            streamed, p_report = apply_multipump(
-                streamed, factor=m, mode=mode, vmem_budget=vmem_budget)
-        else:
-            m = 1
-    spec = PumpSpec(factor=m, mode=mode, vmem_budget=vmem_budget)
-    return AutopumpResult(spec, streamed, s_report, p_report, est)
+    # imported lazily: repro.compiler depends on repro.core's submodules
+    from repro import compiler
+
+    kern = compiler.compile(g, factor="auto", mode=mode,
+                            vmem_budget=vmem_budget, max_factor=max_factor,
+                            estimate=est, backend="none", cache=cache)
+    report = kern.report
+    srec = report.record("streaming")
+    prec = report.record("multipump")
+    from .streaming import StreamingReport
+    s_report = srec.report if srec is not None and srec.report is not None \
+        else StreamingReport()
+    p_report = prec.report if prec is not None and prec.applied else None
+    return AutopumpResult(kern.spec, kern.graph, s_report, p_report, est,
+                          pipeline_report=report)

@@ -115,10 +115,14 @@ def apply_multipump(g: Graph, targets: Optional[Sequence[str]] = None,
 
     out = g.copy()
     n_in = n_out = 0
+    # a stream may border the pumped region twice (producer and consumer both
+    # in ``targets``, e.g. after stream fusion): widen its transactions once
+    widened: set = set()
     for name in targets:
         comp = out.nodes[name]
         comp.rate = RateDomain.FAST
         comp.pump = factor
+        comp.meta["pump_mode"] = mode
         if mode == "R":
             comp.vector_width //= factor
         # rewrite each boundary stream with sync+issuer / packer+sync chains
@@ -127,14 +131,17 @@ def apply_multipump(g: Graph, targets: Optional[Sequence[str]] = None,
             if s.kind != NodeKind.STREAM:
                 continue
             # producer side keeps/sets the wide width
-            if mode == "T":
+            if mode == "T" and s.name not in widened:
                 s.elem_width *= factor
+                widened.add(s.name)
             n_in += 1
             sync = out.add(Node(f"sync_in_{s.name}", NodeKind.SYNC,
                                 rate=RateDomain.FAST))
             iss = out.add(Node(f"issue_{s.name}", NodeKind.ISSUER,
                                rate=RateDomain.FAST, meta=dict(factor=factor)))
-            narrow = out.stream(f"{s.name}_narrow", dtype=s.dtype,
+            # suffix by consumer: a stream linking two pumped computes gets
+            # an issuer here and a packer on its producer side
+            narrow = out.stream(f"{s.name}_narrow_{name}", dtype=s.dtype,
                                 elem_width=max(1, s.elem_width // factor))
             narrow.meta = dict(rate="fast")
             # re-route: s -> sync -> issuer -> narrow -> comp
@@ -147,14 +154,15 @@ def apply_multipump(g: Graph, targets: Optional[Sequence[str]] = None,
             s = out.nodes[e.dst]
             if s.kind != NodeKind.STREAM:
                 continue
-            if mode == "T":
+            if mode == "T" and s.name not in widened:
                 s.elem_width *= factor
+                widened.add(s.name)
             n_out += 1
             pack = out.add(Node(f"pack_{s.name}", NodeKind.PACKER,
                                 rate=RateDomain.FAST, meta=dict(factor=factor)))
             sync = out.add(Node(f"sync_out_{s.name}", NodeKind.SYNC,
                                 rate=RateDomain.FAST))
-            narrow = out.stream(f"{s.name}_narrow", dtype=s.dtype,
+            narrow = out.stream(f"{s.name}_narrow_{name}", dtype=s.dtype,
                                 elem_width=max(1, s.elem_width // factor))
             narrow.meta = dict(rate="fast")
             out.edges.remove(e)

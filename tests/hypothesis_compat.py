@@ -1,0 +1,41 @@
+"""Optional-``hypothesis`` shim for the property-based tests.
+
+The container may not have ``hypothesis`` installed (it is an optional test
+extra, see pyproject.toml).  When it is available this module re-exports the
+real ``given``/``settings``/``st``; otherwise it provides stand-ins that turn
+each ``@given`` test into a single skipped test so the rest of the suite
+still collects and runs green.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - depends on environment
+    import pytest as _pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """st.integers(...), st.floats(...), ... all become inert stubs."""
+
+        def __getattr__(self, name):
+            def strategy(*args, **kwargs):
+                return None
+            return strategy
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # plain zero-arg stub: pytest must not see the original
+            # parametrized signature (it would demand fixtures for it)
+            def skipped():
+                _pytest.skip("hypothesis not installed")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco

@@ -1,0 +1,413 @@
+"""repro.compiler tests: pass registry/pipeline, lowering backend vs the
+numpy reference executor (differential), persistent compile cache, and the
+two new passes (stream-fusion, fifo-depth).
+
+Differential data is integer-valued float32 so every backend computes the
+same exactly-representable values regardless of reduction order — the
+lowering is required to be *bit-exact* against the reference executor.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import compiler
+from repro.compiler import (CompileCache, Pipeline, PASS_REGISTRY, make_pass)
+from repro.compiler.cache import graph_fingerprint
+from repro.compiler.lowering import _temporal_rechunk
+from repro.compiler.passes import FifoDepthPass, StreamFusionPass
+from repro.core import (AccessPattern, Affine, Domain, Graph, NodeKind,
+                        apply_multipump, apply_streaming, autopump, executor)
+from repro.core.autopump import BUILDERS
+from repro.core.multipump import pump_spec_for
+
+
+def _ints(rng, shape, lo=-4, hi=5):
+    return rng.integers(lo, hi, shape).astype(np.float32)
+
+
+def chain_graph(n=32, v=4):
+    """Two computes through an intermediate memory: z = (x + 1) * 2."""
+    g = Graph("chain")
+    g.memory("x", (n,))
+    g.memory("t", (n,))
+    g.memory("z", (n,))
+    dom = Domain.of(("i", 0, n // v))
+    acc = AccessPattern(dom, (Affine.of("i", v),), width=v)
+    g.compute("add1", dom, fn=lambda in0: {"out0": in0 + 1.0}, vector_width=v)
+    g.compute("scale", dom, fn=lambda in0: {"out0": in0 * 2.0}, vector_width=v)
+    g.connect("x", "add1", acc)
+    g.connect("add1", "t", acc)
+    g.connect("t", "scale", acc)
+    g.connect("scale", "z", acc)
+    return g
+
+
+# ------------------------------------------------- differential: lowering --
+@pytest.mark.parametrize("mode", ["T", "R"])
+@pytest.mark.parametrize("factor", [1, 2, 4])
+def test_vecadd_lowering_matches_reference(tmp_path, factor, mode):
+    g, _ = BUILDERS["vecadd"](64, vector_width=8)
+    rng = np.random.default_rng(factor * 10 + ord(mode))
+    inputs = {"x": _ints(rng, 64), "y": _ints(rng, 64)}
+
+    kern = compiler.compile(g, factor=factor, mode=mode,
+                            cache=CompileCache(tmp_path / "c.json"),
+                            memoize=False)
+    assert kern.spec.factor == factor and kern.spec.mode == mode
+    out = np.asarray(kern(inputs)["z"])
+    gold = executor.run(kern.graph, dict(inputs))["z"]
+    np.testing.assert_array_equal(out, gold)                 # vs reference
+    np.testing.assert_array_equal(out, inputs["x"] + inputs["y"])  # semantics
+
+
+@pytest.mark.parametrize("mode", ["T", "R"])
+@pytest.mark.parametrize("factor", [1, 2, 4])
+def test_matmul_lowering_matches_reference(tmp_path, factor, mode):
+    g, _ = BUILDERS["matmul"](32, 32, 32, bm=16, bn=16, bk=16, vector_width=8)
+    rng = np.random.default_rng(factor * 100 + ord(mode))
+    inputs = {"a": _ints(rng, (32, 32), -3, 4), "b": _ints(rng, (32, 32), -3, 4)}
+
+    kern = compiler.compile(g, factor=factor, mode=mode,
+                            cache=CompileCache(tmp_path / "c.json"),
+                            memoize=False)
+    assert kern.spec.factor == factor
+    out = np.asarray(kern(inputs)["c"])
+    gold = executor.run(kern.graph, dict(inputs))["c"]
+    np.testing.assert_array_equal(out, gold)                 # vs reference
+    np.testing.assert_array_equal(out, inputs["a"] @ inputs["b"])  # semantics
+
+
+def test_reference_backend_matches_jax_backend(tmp_path):
+    g, _ = BUILDERS["vecadd"](64, vector_width=8)
+    rng = np.random.default_rng(7)
+    inputs = {"x": _ints(rng, 64), "y": _ints(rng, 64)}
+    cache = CompileCache(tmp_path / "c.json")
+    kj = compiler.compile(g, factor=2, backend="jax", cache=cache,
+                          memoize=False)
+    kr = compiler.compile(g, factor=2, backend="reference", cache=cache,
+                          memoize=False)
+    np.testing.assert_array_equal(np.asarray(kj(inputs)["z"]),
+                                  kr(inputs)["z"])
+
+
+# ------------------------------------------------- issuer/packer identity --
+def test_issuer_packer_round_trip_identity():
+    x = np.arange(64, dtype=np.float32)
+    for m in (1, 2, 4, 8):
+        np.testing.assert_array_equal(
+            np.asarray(_temporal_rechunk(jnp.asarray(x), m)), x)
+    # issuer ∘ packer over the same factor is the identity (paper's gearbox)
+    z = _temporal_rechunk(_temporal_rechunk(jnp.asarray(x), 4), 4)
+    np.testing.assert_array_equal(np.asarray(z), x)
+
+
+# ------------------------------------------------------------ new passes --
+def test_stream_fusion_collapses_memory_roundtrip():
+    g = chain_graph(32, 4)
+    sg, _ = apply_streaming(g)
+    assert "t" in sg.nodes
+    fuse = StreamFusionPass()
+    ok, why = fuse.can_apply(sg)
+    assert ok, why
+    fg, rep = fuse.apply(sg)
+    assert len(rep.fused) == 1
+    assert "t" not in fg.nodes                      # memory round-trip gone
+    assert len(fg.streams()) == len(sg.streams()) - 1
+    # value preservation through the fused pipeline
+    rng = np.random.default_rng(3)
+    x = _ints(rng, 32)
+    out = executor.run(fg, {"x": x})["z"]
+    np.testing.assert_array_equal(out, (x + 1.0) * 2.0)
+
+
+def test_stream_fusion_respects_keep_marker():
+    g = chain_graph(32, 4)
+    g.nodes["t"].meta["keep"] = True
+    sg, _ = apply_streaming(g)
+    ok, _ = StreamFusionPass().can_apply(sg)
+    assert not ok
+
+
+def test_fused_then_pumped_chain_differential(tmp_path):
+    g = chain_graph(32, 4)
+    kern = compiler.compile(g, factor=2,
+                            cache=CompileCache(tmp_path / "c.json"),
+                            memoize=False)
+    assert kern.report.record("stream-fusion").applied
+    assert "t" not in kern.graph.nodes
+    rng = np.random.default_rng(4)
+    x = _ints(rng, 32)
+    out = np.asarray(kern({"x": x})["z"])
+    np.testing.assert_array_equal(out, (x + 1.0) * 2.0)
+    np.testing.assert_array_equal(out, executor.run(kern.graph, {"x": x})["z"])
+
+
+def test_fifo_depth_sized_from_pump_factor():
+    g, _ = BUILDERS["vecadd"](64, vector_width=8)
+    sg, _ = apply_streaming(g)
+    pg, _ = apply_multipump(sg, factor=4)
+    assert all(s.depth == 2 for s in pg.streams())  # seed default
+    out, rep = FifoDepthPass().apply(pg)
+    assert rep.resized
+    # boundary FIFOs hold a wide transaction: depth = 2 * M
+    for s in out.streams():
+        assert s.depth == 8, s.name
+    # unpumped graphs keep the double-buffer minimum
+    out2, _ = FifoDepthPass().apply(sg)
+    assert all(s.depth == 2 for s in out2.streams())
+
+
+def test_stream_fusion_preserves_operand_order():
+    """The fused edge must take the consumed edge's position: executors bind
+    compute operands (in0, in1, ...) by edge insertion order."""
+    n, v = 32, 4
+    g = Graph("oporder")
+    g.memory("x", (n,))
+    g.memory("t", (n,))
+    g.memory("y", (n,))
+    g.memory("z", (n,))
+    dom = Domain.of(("i", 0, n // v))
+    acc = AccessPattern(dom, (Affine.of("i", v),), width=v)
+    g.compute("add1", dom, fn=lambda in0: {"out0": in0 + 1.0}, vector_width=v)
+    # 'sub' reads the intermediate t as in0 and fresh input y as in1
+    g.compute("sub", dom, fn=lambda in0, in1: {"out0": in0 - in1},
+              vector_width=v)
+    g.connect("x", "add1", acc)
+    g.connect("add1", "t", acc)
+    g.connect("t", "sub", acc)
+    g.connect("y", "sub", acc)
+    g.connect("sub", "z", acc)
+
+    rng = np.random.default_rng(11)
+    x, y = _ints(rng, n), _ints(rng, n, 50, 100)
+    gold = (x + 1.0) - y
+    sg, _ = apply_streaming(g)
+    fg, rep = StreamFusionPass().apply(sg)
+    assert rep.fused
+    np.testing.assert_array_equal(
+        executor.run(fg, {"x": x, "y": y})["z"], gold)
+
+
+def test_stream_fusion_cascaded_chains():
+    """Two chains sharing a stream must fuse iteratively, not crash."""
+    n, v = 32, 4
+    g = Graph("cascade")
+    g.memory("x", (n,))
+    g.memory("t1", (n,))
+    g.memory("t2", (n,))
+    g.memory("z", (n,))
+    dom = Domain.of(("i", 0, n // v))
+    acc = AccessPattern(dom, (Affine.of("i", v),), width=v)
+    g.compute("a", dom, fn=lambda in0: {"out0": in0 + 1.0}, vector_width=v)
+    g.compute("b", dom, fn=lambda in0: {"out0": in0 * 2.0}, vector_width=v)
+    g.compute("c", dom, fn=lambda in0: {"out0": in0 - 3.0}, vector_width=v)
+    g.connect("x", "a", acc)
+    g.connect("a", "t1", acc)
+    g.connect("t1", "b", acc)
+    g.connect("b", "t2", acc)
+    g.connect("t2", "c", acc)
+    g.connect("c", "z", acc)
+    sg, _ = apply_streaming(g)
+    fg, rep = StreamFusionPass().apply(sg)
+    assert len(rep.fused) == 2
+    assert "t1" not in fg.nodes and "t2" not in fg.nodes
+    rng = np.random.default_rng(12)
+    x = _ints(rng, n)
+    np.testing.assert_array_equal(executor.run(fg, {"x": x})["z"],
+                                  (x + 1.0) * 2.0 - 3.0)
+
+
+def test_shared_stream_widened_once():
+    """A stream bordering the pumped region on both sides (post-fusion) must
+    be widened by M, not M^2 — M^2 inflates the resource model and can make
+    check_multipump spuriously reject a feasible factor."""
+    g = chain_graph(32, 4)
+    sg, _ = apply_streaming(g)
+    fg, _ = StreamFusionPass().apply(sg)
+    pg, rep = apply_multipump(fg, factor=4)
+    assert rep.applied
+    shared = [s for s in pg.streams() if s.name == "s_add1_t"]
+    assert shared and shared[0].elem_width == 4 * 4   # v * M, not v * M^2
+
+
+def test_memo_distinguishes_closure_values(tmp_path):
+    """Structurally identical graphs whose fn closures capture different
+    values must not share a memo entry."""
+    compiler.clear_memo()
+
+    def build(scale):
+        g = Graph("closure")
+        g.memory("x", (8,))
+        g.memory("z", (8,))
+        dom = Domain.of(("i", 0, 8))
+        acc = AccessPattern(dom, (Affine.of("i"),))
+        g.compute("mul", dom, fn=lambda in0: {"out0": in0 * scale})
+        g.connect("x", "mul", acc)
+        g.connect("mul", "z", acc)
+        return g
+
+    cache = CompileCache(tmp_path / "c.json")
+    x = np.arange(8, dtype=np.float32)
+    k2 = compiler.compile(build(2.0), factor=1, cache=cache)
+    k3 = compiler.compile(build(3.0), factor=1, cache=cache)
+    np.testing.assert_array_equal(np.asarray(k2({"x": x})["z"]), x * 2.0)
+    np.testing.assert_array_equal(np.asarray(k3({"x": x})["z"]), x * 3.0)
+
+
+# ----------------------------------------------------- pump_mode regression --
+def test_apply_multipump_records_pump_mode():
+    g, _ = BUILDERS["vecadd"](64, vector_width=8)
+    sg, _ = apply_streaming(g)
+    pg, rep = apply_multipump(sg, factor=2, mode="R")
+    assert rep.applied
+    comp = pg.computes()[0]
+    assert comp.meta["pump_mode"] == "R"
+    assert pump_spec_for(pg, comp.name).mode == "R"
+
+
+# ------------------------------------------------------------------ cache --
+def test_compile_cache_persists_across_instances(tmp_path):
+    path = tmp_path / "cache.json"
+    g, _ = BUILDERS["vecadd"](64, vector_width=8)
+    c1 = CompileCache(path)
+    k1 = compiler.compile(g, factor=2, cache=c1, memoize=False)
+    assert k1.report.served_from is None and k1.report.cache_hits == 0
+    assert c1.stats["entries"] == 1
+
+    c2 = CompileCache(path)   # fresh instance ≙ fresh process
+    k2 = compiler.compile(g, factor=2, cache=c2, memoize=False)
+    assert k2.report.served_from == "disk"
+    assert k2.report.cache_hits == 1
+    assert c2.stats["hits"] == 1
+
+    rng = np.random.default_rng(5)
+    inputs = {"x": _ints(rng, 64), "y": _ints(rng, 64)}
+    np.testing.assert_array_equal(np.asarray(k1(inputs)["z"]),
+                                  np.asarray(k2(inputs)["z"]))
+
+
+def test_compile_memo_serves_repeat_requests(tmp_path):
+    compiler.clear_memo()
+    cache = CompileCache(tmp_path / "cache.json")
+    g1, _ = BUILDERS["vecadd"](64, vector_width=8)
+    k1 = compiler.compile(g1, factor=2, cache=cache)
+    g2, _ = BUILDERS["vecadd"](64, vector_width=8)   # structural rebuild
+    k2 = compiler.compile(g2, factor=2, cache=cache)
+    assert k2.fn is k1.fn and k2.graph is k1.graph   # compiled artifact shared
+    assert k2.report.served_from == "memory" and k2.report.cache_hits >= 1
+    # the cold compile's provenance record is not rewritten by later hits
+    assert k1.report.served_from is None and k1.report.cache_hits == 0
+    # a memo hit writes the plan through to a persistent cache that has
+    # not seen the request yet
+    fresh = CompileCache(tmp_path / "fresh.json")
+    k3 = compiler.compile(g2, factor=2, cache=fresh)
+    assert k3.report.served_from == "memory"
+    assert (tmp_path / "fresh.json").exists() and len(fresh) == 1
+
+
+def test_plan_shared_across_backends(tmp_path):
+    """The persistent plan is backend-independent: an autopump-style
+    backend='none' compile must warm the cache for a jax-backend compile."""
+    compiler.clear_memo()
+    cache = CompileCache(tmp_path / "c.json")
+    g, est = BUILDERS["vecadd"](64, vector_width=8)
+    k_none = compiler.compile(g, factor="auto", estimate=est, backend="none",
+                              cache=cache, memoize=False)
+    k_jax = compiler.compile(g, factor="auto", estimate=est, backend="jax",
+                             cache=cache, memoize=False)
+    assert k_jax.report.served_from == "disk"
+    assert k_jax.spec.factor == k_none.spec.factor
+
+
+def test_memo_distinguishes_array_closures():
+    """repr() elides the middle of large arrays; the memo must still tell
+    two captured weight tables apart (hashes the buffer, not the repr)."""
+    compiler.clear_memo()
+    n = 2048
+
+    def build(w):
+        g = Graph("wclosure")
+        g.memory("x", (n,))
+        g.memory("z", (n,))
+        dom = Domain.of(("i", 0, n))
+        acc = AccessPattern(dom, (Affine.of("i"),))
+        g.compute("addw", dom, fn=lambda in0: {"out0": in0 + w})
+        g.connect("x", "addw", acc)
+        g.connect("addw", "z", acc)
+        return g
+
+    w1 = np.zeros(n, np.float32)
+    w2 = w1.copy()
+    w2[n // 2] = 5.0
+    assert repr(w1) == repr(w2)          # the trap this test guards against
+    x = np.zeros(n, np.float32)
+    k1 = compiler.compile(build(w1), factor=1, cache=False)
+    k2 = compiler.compile(build(w2), factor=1, cache=False)
+    np.testing.assert_array_equal(np.asarray(k1({"x": x})["z"]), w1)
+    np.testing.assert_array_equal(np.asarray(k2({"x": x})["z"]), w2)
+
+
+def test_core_import_stays_jax_free():
+    """repro.core must not drag in jax (the compiler re-export is lazy)."""
+    import os
+    import subprocess
+    import sys
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "import repro.core, sys; print('jax' in sys.modules)"],
+        capture_output=True, text=True, env=dict(os.environ))
+    assert r.returncode == 0, r.stderr
+    assert r.stdout.strip() == "False"
+    # ... while the lazy attribute still resolves
+    from repro.core import compiler as via_core
+    assert via_core.compile is compiler.compile
+
+
+def test_fingerprint_distinguishes_structure():
+    g1, _ = BUILDERS["vecadd"](64, vector_width=8)
+    g2, _ = BUILDERS["vecadd"](64, vector_width=8)
+    g3, _ = BUILDERS["vecadd"](128, vector_width=8)
+    assert graph_fingerprint(g1) == graph_fingerprint(g2)
+    assert graph_fingerprint(g1) != graph_fingerprint(g3)
+    sg, _ = apply_streaming(g1)
+    assert graph_fingerprint(sg) != graph_fingerprint(g1)
+
+
+# ------------------------------------------------------- registry/pipeline --
+def test_pass_registry_and_default_order():
+    assert {"streaming", "stream-fusion", "multipump", "fifo-depth"} \
+        <= set(PASS_REGISTRY)
+    pipe = Pipeline.default(factor=2)
+    assert [p.name for p in pipe.passes] == \
+        ["streaming", "stream-fusion", "multipump", "fifo-depth"]
+    assert isinstance(make_pass("fifo-depth"), FifoDepthPass)
+    with pytest.raises(KeyError):
+        make_pass("nope")
+
+
+def test_pipeline_records_skipped_passes(tmp_path):
+    g, _ = BUILDERS["vecadd"](64, vector_width=8)
+    kern = compiler.compile(g, factor=1,
+                            cache=CompileCache(tmp_path / "c.json"),
+                            memoize=False)
+    rec = kern.report.record("multipump")
+    assert rec is not None and not rec.applied and rec.reason
+    assert kern.spec.factor == 1
+    # streamed but unpumped: no adapter modules
+    assert kern.graph.resources()["adapters"] == 0
+
+
+# -------------------------------------------------------------- autopump --
+def test_autopump_routes_through_pipeline(tmp_path):
+    compiler.clear_memo()
+    cache = CompileCache(tmp_path / "cache.json")
+    r = autopump("vecadd", 4096, cache=cache)
+    assert r.pipeline_report is not None
+    assert [rec.name for rec in r.pipeline_report.records][0] == "streaming"
+    assert r.pipeline_report.factor == r.spec.factor
+    # second call is served from a cache layer (O(1) repeat compiles)
+    r2 = autopump("vecadd", 4096, cache=cache)
+    assert r2.pipeline_report.served_from in ("memory", "disk")
+    assert r2.pipeline_report.cache_hits >= 1
+    assert r2.spec == r.spec

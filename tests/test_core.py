@@ -11,7 +11,7 @@ Invariants under test (the paper's correctness claims):
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (AccessPattern, Affine, Domain, Graph, PumpSpec,
                         apply_multipump, apply_streaming, check_multipump,
