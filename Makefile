@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-compiler
+.PHONY: test test-fast bench bench-compiler bench-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -14,4 +14,9 @@ bench:
 	$(PY) -m benchmarks.run
 
 bench-compiler:
-	$(PY) -m benchmarks.run compiler
+	$(PY) -m benchmarks.run --mode compiler
+
+# tiny-shape compiler benchmark as a smoke test (~seconds); the tier-1 suite
+# runs the same path in-process via tests/test_benchmarks.py
+bench-smoke:
+	$(PY) -m benchmarks.run --mode compiler --smoke

@@ -1,57 +1,170 @@
-"""Compiler-pipeline benchmark: compile latency, cache behaviour, parity.
+"""Compiler-pipeline benchmark: backend wall time, compile latency, cache
+behaviour, autotune, parity — tracked across PRs via ``BENCH_compiler.json``.
 
-    PYTHONPATH=src python -m benchmarks.run compiler
+    PYTHONPATH=src python -m benchmarks.run --mode compiler [--smoke]
 
-Emits the standard ``name,us_per_call,derived`` rows: cold compile (full
-pass pipeline + lowering), warm compile (served from the persistent cache /
-in-process memo), and lowered-vs-reference-executor parity for the vecadd
-and matmul IR graphs.
+For every kernel × backend (per-node ``jax`` lowering vs fused-region
+``pallas`` emission) × pump factor {1, 2, 4} it records execution wall time,
+cold/warm compile latency and cache layer, plus a measured-runtime autotune
+entry demonstrating that a repeat ``compile(..., autotune='measure')`` is a
+cache hit that skips re-measurement.  The JSON lands at the repo root
+(``--smoke`` uses tiny shapes and writes ``BENCH_compiler_smoke.json``) so
+the perf trajectory — in particular *fused backend beats per-node lowering
+on matmul at factor ≥ 2* — is diffable across PRs.
+
+Also emits the standard ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
+import json
+import platform
+import sys
+import tempfile
 import time
+from pathlib import Path
 
 import numpy as np
 
 from repro import compiler
+from repro.compiler import CompileCache
 from repro.core import executor
 from repro.core.autopump import BUILDERS
 
-from .common import emit
+from .common import emit, time_fn
+
+FACTORS = (1, 2, 4)
+BACKENDS = ("jax", "pallas")
 
 
-def _cases():
+def _cases(smoke: bool):
     rng = np.random.default_rng(0)
-    g_va, _ = BUILDERS["vecadd"](4096, vector_width=8)
-    va_inputs = {"x": rng.integers(-4, 5, 4096).astype(np.float32),
-                 "y": rng.integers(-4, 5, 4096).astype(np.float32)}
-    g_mm, _ = BUILDERS["matmul"](64, 64, 64, bm=32, bn=32, bk=32,
-                                 vector_width=8)
-    mm_inputs = {"a": rng.integers(-3, 4, (64, 64)).astype(np.float32),
-                 "b": rng.integers(-3, 4, (64, 64)).astype(np.float32)}
-    return [("vecadd", g_va, va_inputs, "z"),
-            ("matmul", g_mm, mm_inputs, "c")]
+
+    def ints(shape, lo=-4, hi=5):
+        return rng.integers(lo, hi, shape).astype(np.float32)
+
+    if smoke:
+        specs = [
+            ("vecadd", (256,), dict(vector_width=8), "z",
+             lambda: {"x": ints(256), "y": ints(256)}),
+            ("matmul", (64, 64, 64), dict(bm=16, bn=16, bk=16,
+                                          vector_width=8), "c",
+             lambda: {"a": ints((64, 64)), "b": ints((64, 64))}),
+        ]
+    else:
+        specs = [
+            ("vecadd", (65536,), dict(vector_width=8), "z",
+             lambda: {"x": ints(65536), "y": ints(65536)}),
+            ("matmul", (256, 256, 256), dict(bm=64, bn=64, bk=64,
+                                             vector_width=8), "c",
+             lambda: {"a": ints((256, 256)), "b": ints((256, 256))}),
+            ("stencil", (34, 32, 32), dict(), "y",
+             lambda: {"x": ints((34, 32, 32))}),
+            ("floyd_warshall", (48,), dict(), "out",
+             lambda: {"dist": ints((48, 48), 1, 9)}),
+        ]
+    return [(name, args, kw, out, mk()) for name, args, kw, out, mk in specs]
 
 
-def main() -> None:
-    for name, g, inputs, out_name in _cases():
+def run_report(smoke: bool = False, out_path=None) -> dict:
+    cache_dir = Path(tempfile.mkdtemp(prefix="repro-bench-cache-"))
+    cache_path = cache_dir / "bench_cache.json"
+    report = {
+        "schema": 1,
+        "smoke": smoke,
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+        "entries": [],
+        "autotune": {},
+    }
+
+    for name, args, kw, out_name, inputs in _cases(smoke):
+        for backend in BACKENDS:
+            for factor in FACTORS:
+                g, _ = BUILDERS[name](*args, **kw)
+                cache = CompileCache(cache_path)
+                t0 = time.perf_counter()
+                kern = compiler.compile(g, factor=factor, backend=backend,
+                                        cache=cache, memoize=False)
+                cold_us = (time.perf_counter() - t0) * 1e6
+                t0 = time.perf_counter()
+                kern2 = compiler.compile(g, factor=factor, backend=backend,
+                                         cache=CompileCache(cache_path),
+                                         memoize=False)
+                warm_us = (time.perf_counter() - t0) * 1e6
+
+                wall_us = time_fn(kern.fn, inputs)
+                out = np.asarray(kern(inputs)[out_name])
+                gold = executor.run(kern.graph, dict(inputs))[out_name]
+                parity = bool(np.array_equal(out, gold))
+                tiers = sorted({v["tier"] for v in
+                                (kern.report.emission or {}).values()})
+                entry = {
+                    "kernel": name, "backend": backend, "factor": factor,
+                    "achieved_factor": kern.spec.factor,
+                    "wall_us": round(wall_us, 1),
+                    "compile_cold_us": round(cold_us, 1),
+                    "compile_warm_us": round(warm_us, 1),
+                    "cache_cold": kern.report.served_from or "miss",
+                    "cache_warm": kern2.report.served_from or "miss",
+                    "emission": tiers,
+                    "parity": "bitexact" if parity else "MISMATCH",
+                }
+                report["entries"].append(entry)
+                emit(f"compiler_{name}_{backend}_M{factor}", wall_us,
+                     f"cold={cold_us:.0f}us;warm={warm_us:.0f}us;"
+                     f"cache={entry['cache_warm']};{entry['parity']}")
+
+        # measured-runtime autotune: first compile measures, repeat is a
+        # cache hit that replays the plan without re-measuring
+        g, est = BUILDERS[name](*args, **kw)
         t0 = time.perf_counter()
-        kern = compiler.compile(g, factor=2)
-        cold_us = (time.perf_counter() - t0) * 1e6
-        emit(f"compile_{name}_cold", cold_us,
-             f"M={kern.spec.factor};{kern.report.summary().split('] ')[1]}")
-
+        k1 = compiler.compile(g, factor="auto", estimate=est,
+                              backend="pallas", autotune="measure",
+                              cache=CompileCache(cache_path), memoize=False)
+        measure_us = (time.perf_counter() - t0) * 1e6
         t0 = time.perf_counter()
-        kern2 = compiler.compile(g, factor=2)
-        warm_us = (time.perf_counter() - t0) * 1e6
-        emit(f"compile_{name}_warm", warm_us,
-             f"served={kern2.report.served_from};hits={kern2.report.cache_hits}")
+        k2 = compiler.compile(g, factor="auto", estimate=est,
+                              backend="pallas", autotune="measure",
+                              cache=CompileCache(cache_path), memoize=False)
+        replay_us = (time.perf_counter() - t0) * 1e6
+        report["autotune"][name] = {
+            "winner": k1.report.autotune["winner"],
+            "timings_us": k1.report.autotune["timings_us"],
+            "measure_compile_us": round(measure_us, 1),
+            "replay_compile_us": round(replay_us, 1),
+            "replay_served_from": k2.report.served_from,
+            "replay_skipped_measurement": bool(
+                k2.report.autotune and k2.report.autotune.get("replayed")),
+        }
+        emit(f"compiler_{name}_autotune", measure_us,
+             f"winner=M{k1.report.autotune['winner']};"
+             f"replay={replay_us:.0f}us;"
+             f"served={k2.report.served_from}")
 
-        out = np.asarray(kern(inputs)[out_name])
-        gold = executor.run(kern.graph, dict(inputs))[out_name]
-        parity = "bitexact" if np.array_equal(out, gold) else "MISMATCH"
-        emit(f"compile_{name}_parity", 0.0, parity)
+    # headline: fused backend vs per-node lowering on matmul at factor >= 2
+    walls = {(e["kernel"], e["backend"], e["factor"]): e["wall_us"]
+             for e in report["entries"]}
+    speedups = {}
+    for f in FACTORS:
+        jax_t = walls.get(("matmul", "jax", f))
+        pal_t = walls.get(("matmul", "pallas", f))
+        if jax_t and pal_t:
+            speedups[str(f)] = round(jax_t / pal_t, 2)
+    report["matmul_pallas_speedup_vs_jax"] = speedups
+    emit("compiler_matmul_speedup", 0.0,
+         ";".join(f"M{f}={s}x" for f, s in speedups.items()))
+
+    if out_path is None:
+        out_path = Path(__file__).resolve().parents[1] / (
+            "BENCH_compiler_smoke.json" if smoke else "BENCH_compiler.json")
+    out_path = Path(out_path)
+    out_path.write_text(json.dumps(report, indent=2) + "\n")
+    return report
+
+
+def main(smoke: bool = False) -> None:
+    run_report(smoke=smoke)
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv)

@@ -1,18 +1,29 @@
 """Benchmark harness: one function per paper table.
 
-    PYTHONPATH=src python -m benchmarks.run [table2|table3|table45|table6|roofline|compiler]
+    PYTHONPATH=src python -m benchmarks.run [--mode MODE] [--smoke]
+    PYTHONPATH=src python -m benchmarks.run table3          # legacy spelling
 
-Prints ``name,us_per_call,derived`` CSV rows.  The roofline table (per
-arch × shape) reads the dry-run JSON if present and is also runnable
-standalone via ``python -m benchmarks.roofline``.
+Modes: table2 | table3 | table45 | table6 | roofline | compiler | all.
+Prints ``name,us_per_call,derived`` CSV rows; the compiler mode additionally
+writes ``BENCH_compiler.json`` (``--smoke``: tiny shapes,
+``BENCH_compiler_smoke.json``) at the repo root for cross-PR tracking.
 """
 from __future__ import annotations
 
-import sys
+import argparse
 
 
-def main() -> None:
-    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    ap.add_argument("legacy", nargs="?", default=None,
+                    help="positional mode (legacy spelling)")
+    ap.add_argument("--mode", default=None,
+                    help="table2|table3|table45|table6|roofline|compiler|all")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (compiler mode smoke test)")
+    ns = ap.parse_args(argv)
+    which = ns.mode or ns.legacy or "all"
+
     print("name,us_per_call,derived")
 
     if which in ("all", "table2"):
@@ -32,7 +43,7 @@ def main() -> None:
         roofline.summary_rows()
     if which in ("all", "compiler"):
         from . import compiler_report
-        compiler_report.main()
+        compiler_report.main(smoke=ns.smoke)
 
 
 if __name__ == "__main__":

@@ -1,32 +1,38 @@
-"""``repro.compiler`` — pass pipeline, lowering backend, persistent cache.
+"""``repro.compiler`` — pass pipeline, lowering backends, persistent cache.
 
 The back half of the paper's §3 workflow: where ``repro.core`` defines the
 IR and the two rewrite rules, this package *drives* them as registered passes
 (:mod:`.passes`, :mod:`.pipeline`), compiles the transformed graph to an
-executable jax callable (:mod:`.lowering`), and memoizes both the autotune
+executable jax callable (per-node :mod:`.lowering` or the fused-region
+Pallas emission in :mod:`.pallas_backend`), and memoizes both the autotune
 decision and the compiled kernel across calls and processes (:mod:`.cache`).
 
     from repro import compiler
-    kern = compiler.compile(graph, factor=2, mode="T")
+    kern = compiler.compile(graph, factor=2, mode="T", backend="pallas")
     out = kern({"x": x, "y": y})          # == repro.core.executor.run(...)
     kern.report.summary()                 # pass provenance + cache state
 
 ``compile`` is served in O(1) for repeated requests: an in-process memo
 returns the compiled kernel outright, and the JSON disk cache replays the
-pipeline plan (chosen pump factor) in fresh processes.
+pipeline plan (chosen pump factor — including a measured-runtime autotune
+winner from ``autotune='measure'``) in fresh processes.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from typing import Dict, Optional, Tuple
 
-from repro.core.ir import Graph, PumpSpec
+import numpy as np
+
+from repro.core.ir import Graph, NodeKind, PumpSpec
 from repro.core.pump_plan import VMEM_BYTES, plan_kernel_pump
 
 from .cache import (CompileCache, default_cache, graph_fingerprint,
                     request_key)
 from .lowering import CompiledKernel, LoweringError, lower
+from .pallas_backend import lower_pallas, partition_regions
 from .passes import (PASS_REGISTRY, FifoDepthPass, FusionReport, GraphPass,
                      MultipumpPass, StreamFusionPass, StreamingPass,
                      make_pass, register_pass)
@@ -68,20 +74,21 @@ def _fn_signature(g: Graph) -> Tuple:
     miss."""
     sig = []
     for c in sorted(g.computes(), key=lambda n: n.name):
-        fn = c.fn
-        if fn is None:
-            sig.append((c.name, None))
-            continue
-        code = getattr(fn, "__code__", None)
-        try:
-            cells = tuple(_cell_sig(cell.cell_contents)
-                          for cell in getattr(fn, "__closure__", None) or ())
-        except ValueError:   # unresolved cell: fall back to object identity
-            cells = (f"<cell id={id(fn)}>",)
-        sig.append((c.name, getattr(fn, "__module__", ""),
-                    getattr(fn, "__qualname__", repr(fn)),
-                    getattr(code, "co_firstlineno", -1),
-                    repr(getattr(fn, "__defaults__", None)), cells))
+        for label, fn in (("fn", c.fn), ("tile_fn", c.meta.get("tile_fn"))):
+            if fn is None:
+                sig.append((c.name, label, None))
+                continue
+            code = getattr(fn, "__code__", None)
+            try:
+                cells = tuple(
+                    _cell_sig(cell.cell_contents)
+                    for cell in getattr(fn, "__closure__", None) or ())
+            except ValueError:  # unresolved cell: fall back to object id
+                cells = (f"<cell id={id(fn)}>",)
+            sig.append((c.name, label, getattr(fn, "__module__", ""),
+                        getattr(fn, "__qualname__", repr(fn)),
+                        getattr(code, "co_firstlineno", -1),
+                        repr(getattr(fn, "__defaults__", None)), cells))
     return tuple(sig)
 
 
@@ -92,22 +99,88 @@ def _estimate_sig(estimate) -> Optional[Tuple]:
             estimate.flops_per_block, estimate.fixed_overhead_s)
 
 
+AUTOTUNE_CANDIDATES = (1, 2, 4, 8)
+
+
+def _build(graph: Graph, *, factor, mode, vmem_budget, max_factor, estimate,
+           backend, jit, pallas_mode) -> CompiledKernel:
+    """One pipeline run + lowering (no caching layers)."""
+    pipe = Pipeline.default(factor=factor, mode=mode,
+                            vmem_budget=vmem_budget, max_factor=max_factor,
+                            estimate=estimate)
+    out_graph, report = pipe.run(graph)
+    spec = PumpSpec(factor=report.factor, mode=mode, vmem_budget=vmem_budget)
+
+    seen = set()
+
+    def warn(msg: str) -> None:
+        if msg not in seen:
+            seen.add(msg)
+            report.warnings.append(msg)
+
+    fn = None
+    if backend == "jax":
+        fn = lower(out_graph, jit=jit, warn=warn)
+    elif backend == "pallas":
+        report.emission = {}
+        fn = lower_pallas(out_graph, jit=jit, pallas_mode=pallas_mode,
+                          warn=warn, emission=report.emission)
+    elif backend == "reference":
+        from repro.core import executor
+
+        def fn(inputs, _g=out_graph):
+            return executor.run(_g, dict(inputs))
+
+    return CompiledKernel(graph=out_graph, spec=spec, report=report, fn=fn,
+                          backend=backend)
+
+
+def _measure_inputs(graph: Graph) -> Dict[str, np.ndarray]:
+    """Synthetic operands for autotune timing: zeros for every memory that
+    nothing in the graph writes (the external inputs)."""
+    return {n.name: np.zeros(n.shape, dtype=n.dtype)
+            for n in graph.nodes.values()
+            if n.kind == NodeKind.MEMORY and not graph.in_edges(n.name)}
+
+
+def _time_kernel(fn, inputs, repeats: int = 3) -> float:
+    """Best-of-N wall time in µs (first call compiles and is discarded)."""
+    import jax
+    jax.block_until_ready(fn(inputs))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(inputs))
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+
+
 def compile(graph: Graph, *, factor="auto", mode: str = "T",
             vmem_budget: int = VMEM_BYTES, max_factor: int = 16,
             estimate=None, backend: str = "jax", jit: bool = True,
+            pallas_mode: str = "auto", autotune=None,
             cache=None, memoize: bool = True) -> CompiledKernel:
     """Run the pass pipeline on ``graph`` and lower the result.
 
     ``factor`` is an explicit pump factor M (1 = stream-only) or ``'auto'``
     to let the multipump pass autotune it (from ``estimate`` when given).
-    ``backend`` is ``'jax'`` (jit-able lowering), ``'reference'`` (numpy
-    executor, the differential-testing oracle) or ``'none'`` (plan only).
-    ``cache`` is a :class:`CompileCache`, ``None`` for the default persistent
-    cache, or ``False`` to disable disk caching; ``memoize=False`` also
-    bypasses the in-process kernel memo.
+    ``backend`` is ``'jax'`` (per-node jit lowering), ``'pallas'`` (fused-
+    region Pallas emission; see :mod:`.pallas_backend` and ``pallas_mode``),
+    ``'reference'`` (numpy executor, the differential-testing oracle) or
+    ``'none'`` (plan only).  ``autotune='measure'`` times the candidate pump
+    factors ``{1, 2, 4, 8}`` on the lowered executable and keeps the winner;
+    the measured plan persists in the cache, so a repeat compile replays it
+    without re-measuring.  ``cache`` is a :class:`CompileCache`, ``None``
+    for the default persistent cache, or ``False`` to disable disk caching;
+    ``memoize=False`` also bypasses the in-process kernel memo.
     """
-    if backend not in ("jax", "reference", "none"):
+    if backend not in ("jax", "pallas", "reference", "none"):
         raise ValueError(f"unknown backend {backend!r}")
+    if autotune not in (None, "measure"):
+        raise ValueError(f"unknown autotune policy {autotune!r}")
+    if autotune == "measure" and backend not in ("jax", "pallas"):
+        raise ValueError("autotune='measure' needs an executable backend "
+                         "('jax' or 'pallas')")
     if cache is None:
         cache = default_cache()
     elif cache is False:
@@ -116,11 +189,13 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
     # the plan (chosen factor) is backend/jit-independent, so those stay out
     # of the persistent key — autopump's backend='none' plans are reused by
     # jax-backend compiles of the same graph; the memo key adds them because
-    # the memoized artifact (the compiled callable) is backend-specific
+    # the memoized artifact (the compiled callable) is backend-specific.
+    # autotune IS part of the key: a measured winner and a capacity-model
+    # guess for the same request must not collide.
     key = request_key(graph, factor=factor, mode=mode,
                       vmem_budget=vmem_budget, max_factor=max_factor,
-                      estimate=_estimate_sig(estimate))
-    memo_key = (key, backend, jit, _fn_signature(graph))
+                      estimate=_estimate_sig(estimate), autotune=autotune)
+    memo_key = (key, backend, jit, pallas_mode, _fn_signature(graph))
     if memoize and memo_key in _KERNEL_MEMO:
         kern, plan = _KERNEL_MEMO[memo_key]
         if cache is not None and key not in cache:
@@ -132,39 +207,59 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
                                      cache_hits=_MEMO_HITS[memo_key])
         return dataclasses.replace(kern, report=report)
 
+    build = lambda f: _build(graph, factor=f, mode=mode,   # noqa: E731
+                             vmem_budget=vmem_budget, max_factor=max_factor,
+                             estimate=estimate, backend=backend, jit=jit,
+                             pallas_mode=pallas_mode)
+
     plan = cache.get(key) if cache is not None else None
     if plan is not None:
-        # replay the cached decision: no autotune search, no factor probing
-        pipe = Pipeline.default(factor=int(plan["factor"]), mode=mode,
-                                vmem_budget=vmem_budget,
-                                max_factor=max_factor)
+        # replay the cached decision: no autotune search, no factor probing,
+        # no re-measurement
+        kern = _build(graph, factor=int(plan["factor"]), mode=mode,
+                      vmem_budget=vmem_budget, max_factor=max_factor,
+                      estimate=None, backend=backend, jit=jit,
+                      pallas_mode=pallas_mode)
         served = "disk"
+        if plan.get("autotune"):
+            kern.report.autotune = dict(plan["autotune"], replayed=True)
+    elif autotune == "measure":
+        inputs = _measure_inputs(graph)
+        timings: Dict[int, float] = {}
+        kernels: Dict[int, CompiledKernel] = {}
+        for cand in AUTOTUNE_CANDIDATES:
+            if cand > max_factor:
+                continue
+            k = build(cand)
+            achieved = k.spec.factor      # legality may have clamped it
+            if achieved in timings:
+                continue
+            kernels[achieved] = k
+            timings[achieved] = _time_kernel(k.fn, inputs)
+        winner = min(timings, key=timings.get)
+        kern = kernels[winner]
+        served = None
+        kern.report.autotune = {
+            "policy": "measure", "winner": winner, "backend": backend,
+            "timings_us": {str(f): round(t, 1) for f, t in timings.items()},
+            "replayed": False,
+        }
     else:
-        pipe = Pipeline.default(factor=factor, mode=mode,
-                                vmem_budget=vmem_budget,
-                                max_factor=max_factor, estimate=estimate)
+        kern = build(factor)
         served = None
 
-    out_graph, report = pipe.run(graph)
+    report = kern.report
     report.cache_key = key
     report.served_from = served
     report.cache_hits = 1 if served else 0
-    spec = PumpSpec(factor=report.factor, mode=mode, vmem_budget=vmem_budget)
 
-    fn = None
-    if backend == "jax":
-        fn = lower(out_graph, jit=jit)
-    elif backend == "reference":
-        from repro.core import executor
-
-        def fn(inputs, _g=out_graph):
-            return executor.run(_g, dict(inputs))
-
-    kern = CompiledKernel(graph=out_graph, spec=spec, report=report, fn=fn,
-                          backend=backend)
     if plan is None:
-        plan = {"factor": spec.factor, "mode": mode, "graph": graph.name,
+        plan = {"factor": kern.spec.factor, "mode": mode,
+                "graph": graph.name,
                 "passes": [[r.name, r.applied] for r in report.records]}
+        if report.autotune:
+            plan["autotune"] = {k: v for k, v in report.autotune.items()
+                                if k != "replayed"}
         if cache is not None:
             cache.put(key, plan)
     if memoize:
@@ -207,11 +302,12 @@ def plan_pump(block_bytes_in: int, block_bytes_out: int,
 
 
 __all__ = [
-    "compile", "plan_pump", "clear_memo",
+    "compile", "plan_pump", "clear_memo", "AUTOTUNE_CANDIDATES",
     "Pipeline", "PipelineReport", "PassRecord",
     "GraphPass", "PASS_REGISTRY", "register_pass", "make_pass",
     "StreamingPass", "StreamFusionPass", "MultipumpPass", "FifoDepthPass",
     "FusionReport",
     "CompileCache", "default_cache", "graph_fingerprint", "request_key",
     "CompiledKernel", "LoweringError", "lower",
+    "lower_pallas", "partition_regions",
 ]

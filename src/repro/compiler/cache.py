@@ -1,10 +1,18 @@
 """Persistent compile/autotune cache.
 
 Keyed by a content hash of the *structure* of a graph (nodes, edges, access
-patterns, shapes) plus the compile parameters; the stored value is the
-pipeline *plan* — most importantly the chosen pump factor — so a repeated
-``compile``/``autopump`` in a fresh process skips the autotune search and
-legality probing.  Entries live in one JSON file (default
+patterns, shapes) plus the compile parameters (including the ``autotune``
+policy); the stored value is the pipeline *plan*::
+
+    {"factor": 2, "mode": "T", "graph": "matmul",
+     "passes": [["streaming", true], ...],
+     "autotune": {"policy": "measure", "winner": 2, "backend": "pallas",
+                  "timings_us": {"1": ..., "2": ...}}}   # measured runs only
+
+— most importantly the chosen pump factor, so a repeated
+``compile``/``autopump`` in a fresh process skips the autotune search,
+legality probing, *and* any runtime re-measurement (``autotune='measure'``
+replays the stored winner).  Entries live in one JSON file (default
 ``~/.cache/repro/compile_cache.json``, overridable with ``$REPRO_CACHE_DIR``
 or an explicit path), written atomically via rename.
 

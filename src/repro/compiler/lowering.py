@@ -23,8 +23,10 @@ Compute      the node's ``fn`` body applied to its FIFO-ordered operand
 Stream       value pass-through (FIFO order is the sequence order)
 ===========  ================================================================
 
-Scatter targets with duplicate addresses are unsupported (same caveat as the
-reference executor, whose last-write-wins order is numpy-specific).
+Scatter targets with duplicate addresses are rejected at lowering time with
+:class:`LoweringError` — the reference executor's last-write-wins order is
+numpy-specific, and jax ``.at[].set`` makes no ordering guarantee, so a
+duplicate-address scatter would silently produce backend-dependent results.
 """
 from __future__ import annotations
 
@@ -44,16 +46,29 @@ class LoweringError(RuntimeError):
     pass
 
 
-def _temporal_rechunk(seq: jax.Array, factor: int) -> jax.Array:
+def _temporal_rechunk(seq: jax.Array, factor: int,
+                      warn: Optional[Callable[[str], None]] = None,
+                      name: str = "") -> jax.Array:
     """Issuer/packer body: re-emit ``seq`` as ``factor`` narrow phases.
 
     Value-identity on the flattened FIFO sequence (a wide transaction of M·V
     elements is exactly its M consecutive narrow beats), realized as a
     ``fori_loop`` so the temporal iteration survives into the jaxpr.
+
+    A sequence length not divisible by ``factor`` cannot be re-chunked into
+    M equal beats; the gearbox degrades to a pass-through (still value-exact)
+    and reports the misaligned pump factor through ``warn`` so the
+    degradation is visible in the pipeline report instead of silent.
     """
     flat = jnp.reshape(seq, (-1,))
     n = flat.shape[0]
-    if factor <= 1 or n % factor:
+    if factor <= 1:
+        return flat
+    if n % factor:
+        if warn is not None:
+            warn(f"temporal-rechunk: {name or 'adapter'} sequence length "
+                 f"{n} not divisible by pump factor {factor}; gearbox "
+                 f"degraded to pass-through")
         return flat
     chunk = n // factor
 
@@ -68,19 +83,38 @@ def _indices(access, shape) -> np.ndarray:
     return np.fromiter(access.addresses(shape), dtype=np.int64)
 
 
+def scatter_indices(access, shape, where: str = "") -> np.ndarray:
+    """Freeze a *write* access into an index vector, validating that no
+    address is written twice: the reference executor resolves duplicates by
+    numpy's last-write-wins scatter order, which jax ``.at[].set`` does not
+    guarantee, so a duplicate-address scatter lowers to backend-dependent
+    results and is rejected here instead."""
+    idx = _indices(access, shape)
+    if np.unique(idx).size != idx.size:
+        dup = int(idx.size - np.unique(idx).size)
+        raise LoweringError(
+            f"scatter {where or 'access'} writes {dup} duplicate address(es) "
+            f"(e.g. a reduction dimension absent from the output pattern); "
+            f"results would be backend-dependent last-write-wins")
+    return idx
+
+
 def _scatter(mem: jax.Array, idx: np.ndarray, seq) -> jax.Array:
     flat = jnp.reshape(mem, (-1,))
     vals = jnp.reshape(jnp.asarray(seq), (-1,)).astype(mem.dtype)
     return jnp.reshape(flat.at[idx].set(vals), mem.shape)
 
 
-def lower(g: Graph, jit: bool = True) -> Callable[[Mapping[str, Any]],
-                                                  Dict[str, jax.Array]]:
+def lower(g: Graph, jit: bool = True,
+          warn: Optional[Callable[[str], None]] = None
+          ) -> Callable[[Mapping[str, Any]], Dict[str, jax.Array]]:
     """Lower ``g`` to a callable ``fn(inputs) -> {memory name: array}``.
 
     ``inputs`` maps memory-node names to arrays (missing memories start as
     zeros, as in the reference executor).  The graph must not be mutated
     after lowering: access-pattern gathers/scatters are frozen here.
+    ``warn`` receives human-readable degradation notes (e.g. a pump factor
+    that does not divide a sequence length) at lowering/trace time.
     """
     g.validate()
     order = _toposort(g)
@@ -96,7 +130,8 @@ def lower(g: Graph, jit: bool = True) -> Callable[[Mapping[str, Any]],
             idx_of[id(e)] = _indices(e.access, src.shape)
         elif dst.kind == NodeKind.MEMORY and src.kind in (NodeKind.WRITER,
                                                           NodeKind.COMPUTE):
-            idx_of[id(e)] = _indices(e.access, dst.shape)
+            idx_of[id(e)] = scatter_indices(e.access, dst.shape,
+                                            where=f"{e.src}->{e.dst}")
 
     for comp in g.computes():
         if comp.fn is None:
@@ -133,7 +168,7 @@ def lower(g: Graph, jit: bool = True) -> Callable[[Mapping[str, Any]],
             elif node.kind in (NodeKind.ISSUER, NodeKind.PACKER):
                 factor = int(node.meta.get("factor", 1))
                 edge_val[id(outs[0])] = _temporal_rechunk(
-                    edge_val[id(ins[0])], factor)
+                    edge_val[id(ins[0])], factor, warn=warn, name=node.name)
             elif node.kind == NodeKind.STREAM:
                 edge_val[id(outs[0])] = edge_val[id(ins[0])]
             elif node.kind == NodeKind.COMPUTE:
@@ -158,6 +193,19 @@ def lower(g: Graph, jit: bool = True) -> Callable[[Mapping[str, Any]],
             else:  # pragma: no cover
                 raise LoweringError(f"cannot lower node kind {node.kind}")
         return mems
+
+    # surface adapter degradation warnings eagerly: an abstract trace costs
+    # one eval_shape but moves trace-time warnings into the compile report
+    # instead of deferring them to the first real call
+    if warn is not None and any(
+            n.kind in (NodeKind.ISSUER, NodeKind.PACKER)
+            and int(n.meta.get("factor", 1)) > 1 for n in g.nodes.values()):
+        try:
+            jax.eval_shape(run_fn, {
+                n.name: jax.ShapeDtypeStruct(n.shape, n.dtype)
+                for n in g.nodes.values() if n.kind == NodeKind.MEMORY})
+        except Exception:   # probe only; real errors surface on execution
+            pass
 
     return jax.jit(run_fn) if jit else run_fn
 

@@ -1,0 +1,591 @@
+"""Pallas emission backend: fused region lowering.
+
+Where :mod:`.lowering` schedules the transformed graph node by node (every
+Reader/Writer a flat HBM gather/scatter, every adapter a value-identity
+loop), this backend partitions the graph into **fused compute regions** —
+the maximal ``Memory → Reader → … → Writer → Memory`` chains between memory
+containers, with Sync boundaries realized by the Pallas pipeline itself —
+and emits each region as *one* blocked kernel.  The paper's pump factor M is
+realized structurally: as the **innermost temporal grid axis** of the
+region's grid, not as an in-kernel loop.
+
+    Mode T: the innermost grid dimension (extent G) splits into G/M wide
+            transactions × M narrow beats — offsets rewritten by the exact
+            substitution ``g -> g*M + _pump``.
+    Mode R: the output-carrying block dimension narrows by M and the ``_pump``
+            axis walks its M sub-tiles; operand blocks narrowed only where
+            they share the output's grid symbol.
+
+Each region is emitted at the highest tier its structure admits:
+
+``pallas``     a real ``pl.pallas_call``: every access has a *block-unit*
+               index map (offsets divide by the block), every compute a
+               per-tile body (``meta['tile_fn']``), and the output tiling
+               covers the memory.  Used on TPU; on CPU only when forced
+               (``pallas_mode='interpret'``), since interpret mode exists
+               for validation, not speed.
+``blockloop``  a structurally identical fused ``fori_loop`` over the same
+               grid with element-unit ``dynamic_slice`` blocks — the
+               ``jax.jit`` fallback of the pallas emission on CPU.  Handles
+               overlapping halo windows pallas block indexing cannot.
+``gather``     region-level fallback: one gather → compute-chain → scatter
+               per region (still fused; no per-node barriers or gearbox
+               loops).  Used when computes lack a tile form (e.g. the
+               dependency-carrying floyd-warshall pivot loop).
+
+Grid dimensions absent from the output access (plus the temporal axis when
+it splits one of them) are *reduction* dimensions: the emitted kernel
+zero-initializes the output tile on their first visit and accumulates with
+``+`` thereafter — computes marked ``meta['reduce']='add'`` return partial
+contributions per grid step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.executor import _toposort
+from repro.core.ir import Graph, NodeKind
+from repro.core.symbolic import (Affine, BlockedAccess, blocked_access,
+                                 narrow_block, split_temporal)
+
+from .lowering import LoweringError, _indices, scatter_indices
+
+PUMP_SYM = "_pump"
+_PASS_THROUGH = (NodeKind.STREAM, NodeKind.SYNC, NodeKind.ISSUER,
+                 NodeKind.PACKER, NodeKind.READER, NodeKind.WRITER)
+
+
+# ------------------------------------------------------------ region graph --
+@dataclasses.dataclass
+class Region:
+    """One fused region: the modules between memory containers."""
+
+    name: str
+    members: List[str]                       # non-memory node names
+    computes: List[str]                      # topo order
+    # per compute, operand sources in edge order:
+    #   ("mem", memory name, AccessPattern) | ("comp", upstream compute name)
+    bindings: Dict[str, List[Tuple]]
+    # (compute, memory, AccessPattern) writes out of the region
+    outputs: List[Tuple[str, str, Any]]
+    pump: int = 1
+    mode: str = "T"
+
+
+def _trace_to_source(g: Graph, edge) -> Tuple:
+    """Walk an in-edge backwards through pass-through modules to its origin:
+    a memory (with the reader's access pattern) or an upstream compute."""
+    e = edge
+    while True:
+        src = g.nodes[e.src]
+        if src.kind == NodeKind.MEMORY:
+            return ("mem", src.name, e.access)
+        if src.kind == NodeKind.COMPUTE:
+            return ("comp", src.name)
+        ins = g.in_edges(src.name)
+        if len(ins) != 1:
+            raise LoweringError(
+                f"pass-through module {src.name} has {len(ins)} inputs")
+        e = ins[0]
+
+
+def _trace_to_sink(g: Graph, edge) -> Optional[Tuple]:
+    """Walk an out-edge forward to a memory write; None when it feeds a
+    downstream compute inside the region instead."""
+    e = edge
+    while True:
+        dst = g.nodes[e.dst]
+        if dst.kind == NodeKind.MEMORY:
+            return (dst.name, e.access)
+        if dst.kind == NodeKind.COMPUTE:
+            return None
+        outs = g.out_edges(dst.name)
+        if len(outs) != 1:
+            raise LoweringError(
+                f"pass-through module {dst.name} has {len(outs)} outputs")
+        e = outs[0]
+
+
+def partition_regions(g: Graph) -> List[Region]:
+    """Split ``g`` into fused regions: connected components of the module/
+    stream subgraph, with memory containers as the region boundaries."""
+    # union-find over non-memory nodes
+    parent: Dict[str, str] = {n.name: n.name for n in g.nodes.values()
+                              if n.kind != NodeKind.MEMORY}
+
+    def root(n: str) -> str:
+        while parent[n] != n:
+            parent[n] = parent[parent[n]]
+            n = parent[n]
+        return n
+
+    for e in g.edges:
+        if e.src in parent and e.dst in parent:
+            parent[root(e.src)] = root(e.dst)
+
+    groups: Dict[str, List[str]] = {}
+    for n in parent:
+        groups.setdefault(root(n), []).append(n)
+
+    order = _toposort(g)
+    pos = {n: i for i, n in enumerate(order)}
+    regions = []
+    for members in groups.values():
+        members.sort(key=pos.__getitem__)
+        computes = [n for n in members
+                    if g.nodes[n].kind == NodeKind.COMPUTE]
+        if not computes:
+            continue   # dangling adapters with no compute: nothing to emit
+        bindings: Dict[str, List[Tuple]] = {}
+        outputs: List[Tuple[str, str, Any]] = []
+        for c in computes:
+            bindings[c] = [_trace_to_source(g, e) for e in g.in_edges(c)]
+            for e in g.out_edges(c):
+                sink = _trace_to_sink(g, e)
+                if sink is not None:
+                    outputs.append((c, sink[0], sink[1]))
+        pump = max((g.nodes[c].pump for c in computes), default=1)
+        mode = next((g.nodes[c].meta.get("pump_mode") for c in computes
+                     if g.nodes[c].meta.get("pump_mode")), "T")
+        regions.append(Region(name=computes[0], members=members,
+                              computes=computes, bindings=bindings,
+                              outputs=outputs, pump=pump, mode=mode))
+
+    # schedule regions by memory dataflow, not by node position: a region
+    # reading memory m must run after every region writing m (the node-level
+    # toposort guarantees this order exists)
+    writers: Dict[str, List[int]] = {}
+    for i, r in enumerate(regions):
+        for _c, mem, _a in r.outputs:
+            writers.setdefault(mem, []).append(i)
+    deps: Dict[int, set] = {i: set() for i in range(len(regions))}
+    for i, r in enumerate(regions):
+        for srcs in r.bindings.values():
+            for src in srcs:
+                if src[0] == "mem":
+                    deps[i].update(j for j in writers.get(src[1], ())
+                                   if j != i)
+    ordered: List[Region] = []
+    done: set = set()
+    while len(done) < len(regions):
+        ready = sorted(
+            (i for i in deps if i not in done and deps[i] <= done),
+            key=lambda i: pos[regions[i].computes[0]])
+        if not ready:   # pragma: no cover - node toposort forbids cycles
+            raise LoweringError("cyclic memory dependency between regions")
+        for i in ready:
+            done.add(i)
+            ordered.append(regions[i])
+    return ordered
+
+
+# ------------------------------------------------------------- region plan --
+@dataclasses.dataclass
+class RegionPlan:
+    """A tile-emittable region: unified grid + blocked views per operand."""
+
+    region: Region
+    grid: Tuple[Tuple[str, int], ...]        # outermost → innermost
+    reduce_syms: Tuple[str, ...]             # grid syms absent from output
+    blocks: Dict[Tuple[str, int], BlockedAccess]   # (compute, operand idx)
+    out_compute: str
+    out_mem: str
+    out_block: BlockedAccess
+    tile_fns: Dict[str, Callable]
+    pump: int = 1                            # realized temporal factor
+    mode: str = "T"
+    pallas_ok: bool = True                   # block-unit maps + full coverage
+
+
+def _tile_fn_of(g: Graph, name: str) -> Optional[Callable]:
+    n = g.nodes[name]
+    fn = n.meta.get("tile_fn")
+    if fn is None and n.meta.get("elementwise"):
+        fn = n.fn
+    return fn
+
+
+def plan_region(g: Graph, region: Region,
+                warn: Callable[[str], None]) -> Optional[RegionPlan]:
+    """Derive the blocked emission plan for a region, or None when the
+    region must fall back to gather emission (reason passed to ``warn``)."""
+    if len(region.outputs) != 1:
+        warn(f"region {region.name}: {len(region.outputs)} output memories; "
+             "tile emission needs exactly 1 — using gather fallback")
+        return None
+    out_compute, out_mem, out_access = region.outputs[0]
+    if out_access is None:
+        warn(f"region {region.name}: output access unknown")
+        return None
+
+    tile_fns = {}
+    for c in region.computes:
+        fn = _tile_fn_of(g, c)
+        if fn is None:
+            warn(f"region {region.name}: compute {c} has no per-tile body "
+                 "(meta['tile_fn']); using gather fallback")
+            return None
+        if not region.bindings[c]:
+            warn(f"region {region.name}: compute {c} has no operands")
+            return None
+        tile_fns[c] = fn
+
+    out_block = blocked_access(out_access, g.nodes[out_mem].shape)
+    if out_block is None:
+        warn(f"region {region.name}: output access is not block-affine")
+        return None
+
+    blocks: Dict[Tuple[str, int], BlockedAccess] = {}
+    extents: Dict[str, int] = dict(out_block.grid)
+    extra_syms: List[str] = []
+    for c in region.computes:
+        for k, src in enumerate(region.bindings[c]):
+            if src[0] != "mem":
+                continue
+            if src[2] is None:
+                warn(f"region {region.name}: operand {src[1]} of {c} has "
+                     "no access pattern")
+                return None
+            acc = blocked_access(src[2], g.nodes[src[1]].shape)
+            if acc is None:
+                warn(f"region {region.name}: operand {src[1]} of {c} is not "
+                     "block-affine")
+                return None
+            for s, e in acc.grid:
+                if extents.setdefault(s, e) != e:
+                    warn(f"region {region.name}: grid extent mismatch on "
+                         f"{s}: {extents[s]} vs {e}")
+                    return None
+                if s not in dict(out_block.grid) and s not in extra_syms:
+                    extra_syms.append(s)
+            blocks[(c, k)] = acc
+
+    # canonical grid: output order first, reduction symbols innermost
+    grid = tuple(out_block.grid) + tuple((s, extents[s]) for s in extra_syms)
+    reduce_syms = tuple(extra_syms)
+    plan = RegionPlan(region=region, grid=grid, reduce_syms=reduce_syms,
+                      blocks=blocks, out_compute=out_compute,
+                      out_mem=out_mem, out_block=out_block,
+                      tile_fns=tile_fns, mode=region.mode)
+    _apply_temporal(plan, region.pump, warn)
+    plan.pallas_ok = _pallas_expressible(g, plan)
+    return plan
+
+
+def _apply_temporal(plan: RegionPlan, factor: int,
+                    warn: Callable[[str], None]) -> None:
+    """Realize pump factor M as the innermost ``_pump`` grid axis."""
+    if factor <= 1:
+        return
+    if plan.mode == "T":
+        if not plan.grid:
+            warn(f"region {plan.region.name}: no grid dimension to pump")
+            return
+        sym, ext = plan.grid[-1]
+        if ext % factor:
+            warn(f"region {plan.region.name}: innermost grid extent {ext} "
+                 f"({sym}) not divisible by pump factor {factor}; temporal "
+                 "axis dropped")
+            return
+        plan.blocks = {k: split_temporal(a, sym, factor)
+                       for k, a in plan.blocks.items()}
+        plan.out_block = split_temporal(plan.out_block, sym, factor)
+        grid = [(s, e // factor if s == sym else e) for s, e in plan.grid]
+        plan.grid = tuple(grid) + ((PUMP_SYM, factor),)
+        if sym in plan.reduce_syms:
+            plan.reduce_syms = plan.reduce_syms + (PUMP_SYM,)
+    else:   # mode R: narrow the output-carrying block dimension
+        out = plan.out_block
+        d_out = max((d for d, b in enumerate(out.block) if b > 1),
+                    default=None)
+        if d_out is None or out.block[d_out] % factor:
+            warn(f"region {plan.region.name}: mode-R output block not "
+                 f"divisible by pump factor {factor}; temporal axis dropped")
+            return
+        b_wide = out.block[d_out]
+        dep = frozenset(out.offsets[d_out].symbols())
+        plan.out_block = narrow_block(out, d_out, factor)
+        narrowed = {}
+        for key, acc in plan.blocks.items():
+            new = acc
+            for d in reversed(range(len(acc.block))):
+                if acc.block[d] == b_wide \
+                        and frozenset(acc.offsets[d].symbols()) == dep:
+                    new = narrow_block(acc, d, factor)
+                    break
+            narrowed[key] = new
+        plan.blocks = narrowed
+        plan.grid = tuple(plan.grid) + ((PUMP_SYM, factor),)
+    plan.pump = factor
+
+
+def _pallas_expressible(g: Graph, plan: RegionPlan) -> bool:
+    """True when every access has a block-unit index map and the output
+    tiling covers its memory (pallas output buffers start uninitialized)."""
+    if plan.out_block.block_unit_offsets() is None:
+        return False
+    covered = 1
+    for b in plan.out_block.block:
+        covered *= b
+    for s, e in plan.grid:
+        if s not in plan.reduce_syms:
+            covered *= e
+    if covered != int(np.prod(g.nodes[plan.out_mem].shape)):
+        return False
+    return all(a.block_unit_offsets() is not None
+               for a in plan.blocks.values())
+
+
+# ---------------------------------------------------------------- emission --
+def _affine_eval(a: Affine, env: Mapping[str, Any]):
+    out = a.const
+    for s, c in a.terms:
+        out = out + c * env[s]
+    return out
+
+
+def _run_tiles(plan: RegionPlan, get_block: Callable[[str, int], Any]) -> Any:
+    """Evaluate the region's compute chain for one grid point;
+    ``get_block(compute, operand_idx)`` supplies memory operand blocks."""
+    tiles: Dict[str, Any] = {}
+    for c in plan.region.computes:
+        bound = {}
+        for k, src in enumerate(plan.region.bindings[c]):
+            if src[0] == "mem":
+                bound[f"in{k}"] = get_block(c, k)
+            else:
+                bound[f"in{k}"] = tiles[src[1]]
+        r = plan.tile_fns[c](**bound)
+        tiles[c] = r["out0"] if isinstance(r, dict) else r
+    return tiles[plan.out_compute]
+
+
+def emit_blockloop(g: Graph, plan: RegionPlan) -> Callable:
+    """Tier ``blockloop``: the pallas schedule as a fused ``fori_loop`` with
+    element-unit ``dynamic_slice`` blocks — the jit fallback on CPU."""
+    grid = plan.grid
+    sizes = [e for _, e in grid]
+    total = int(np.prod(sizes)) if sizes else 1
+    out_shape = g.nodes[plan.out_mem].shape
+    out_block = plan.out_block
+
+    def region_fn(mems: Dict[str, Any]) -> Any:
+        def body(step, buf):
+            env: Dict[str, Any] = {}
+            rem = step
+            for (sym, ext) in reversed(grid):
+                env[sym] = rem % ext
+                rem = rem // ext
+
+            def get_block(c, k):
+                acc = plan.blocks[(c, k)]
+                mem = mems[plan.region.bindings[c][k][1]]
+                starts = tuple(_affine_eval(a, env) for a in acc.offsets)
+                return jax.lax.dynamic_slice(mem, starts, acc.block)
+
+            tile = _run_tiles(plan, get_block)
+            tile = jnp.reshape(tile, out_block.block).astype(buf.dtype)
+            starts = tuple(_affine_eval(a, env) for a in out_block.offsets)
+            if plan.reduce_syms:
+                first = functools.reduce(
+                    jnp.logical_and,
+                    [env[s] == 0 for s in plan.reduce_syms])
+                prev = jax.lax.dynamic_slice(buf, starts, out_block.block)
+                tile = jnp.where(first, tile, prev + tile)
+            return jax.lax.dynamic_update_slice(buf, tile, starts)
+
+        init = mems[plan.out_mem]
+        return jax.lax.fori_loop(0, total, body, init)
+
+    return region_fn
+
+
+def emit_pallas(g: Graph, plan: RegionPlan, interpret: bool) -> Callable:
+    """Tier ``pallas``: one ``pl.pallas_call`` for the whole region, block
+    specs and index maps derived from the symbolic access patterns."""
+    from jax.experimental import pallas as pl
+
+    grid_sizes = tuple(e for _, e in plan.grid)
+    syms = [s for s, _ in plan.grid]
+    red_axes = [i for i, (s, _) in enumerate(plan.grid)
+                if s in plan.reduce_syms]
+
+    mem_order: List[Tuple[str, int]] = []    # (compute, operand idx), flat
+    for c in plan.region.computes:
+        for k, src in enumerate(plan.region.bindings[c]):
+            if src[0] == "mem":
+                mem_order.append((c, k))
+
+    def index_map_for(acc: BlockedAccess):
+        offs = acc.block_unit_offsets()
+
+        def index_map(*gids):
+            env = dict(zip(syms, gids))
+            return tuple(_affine_eval(a, env) for a in offs)
+
+        return index_map
+
+    in_specs = [pl.BlockSpec(plan.blocks[key].block,
+                             index_map_for(plan.blocks[key]))
+                for key in mem_order]
+    out_spec = pl.BlockSpec(plan.out_block.block,
+                            index_map_for(plan.out_block))
+    out_node = g.nodes[plan.out_mem]
+
+    def kernel(*refs):
+        in_refs, o_ref = refs[:-1], refs[-1]
+        blocks = {key: r[...] for key, r in zip(mem_order, in_refs)}
+        tile = _run_tiles(plan, lambda c, k: blocks[(c, k)])
+        tile = jnp.reshape(tile, plan.out_block.block).astype(o_ref.dtype)
+        if red_axes:
+            first = functools.reduce(
+                jnp.logical_and, [pl.program_id(a) == 0 for a in red_axes])
+
+            @pl.when(first)
+            def _init():
+                o_ref[...] = tile
+
+            @pl.when(jnp.logical_not(first))
+            def _acc():
+                o_ref[...] += tile
+        else:
+            o_ref[...] = tile
+
+    def region_fn(mems: Dict[str, Any]) -> Any:
+        args = [mems[plan.region.bindings[c][k][1]] for c, k in mem_order]
+        return pl.pallas_call(
+            kernel,
+            grid=grid_sizes,
+            in_specs=in_specs,
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct(out_node.shape, out_node.dtype),
+            interpret=interpret,
+        )(*args)
+
+    return region_fn
+
+
+def emit_gather(g: Graph, region: Region) -> Callable:
+    """Tier ``gather``: region-level fallback — one fused gather →
+    compute-chain → scatter, addresses frozen from the access patterns."""
+    idx_in: Dict[Tuple[str, int], np.ndarray] = {}
+    for c in region.computes:
+        if g.nodes[c].fn is None:
+            raise LoweringError(
+                f"compute module {c!r} has no fn body to lower")
+        if len(g.out_edges(c)) > 1:
+            raise LoweringError(
+                f"compute module {c!r} has multiple outputs; the fused "
+                "region lowering binds out0 only — use backend='jax'")
+        for k, src in enumerate(region.bindings[c]):
+            if src[0] == "mem":
+                if src[2] is None:
+                    raise LoweringError(
+                        f"operand {k} of {c} has no access pattern")
+                idx_in[(c, k)] = _indices(src[2], g.nodes[src[1]].shape)
+    idx_out = {}
+    for c, mem, access in region.outputs:
+        idx_out[(c, mem)] = scatter_indices(access, g.nodes[mem].shape,
+                                            where=f"{c}->{mem}")
+
+    def region_fn(mems: Dict[str, Any]) -> Dict[str, Any]:
+        tiles: Dict[str, Any] = {}
+        for c in region.computes:
+            bound = {}
+            for k, src in enumerate(region.bindings[c]):
+                if src[0] == "mem":
+                    flat = jnp.reshape(mems[src[1]], (-1,))
+                    bound[f"in{k}"] = jnp.take(flat, idx_in[(c, k)])
+                else:
+                    bound[f"in{k}"] = tiles[src[1]]
+            r = g.nodes[c].fn(**bound)
+            tiles[c] = r["out0"] if isinstance(r, dict) else r
+        outs = {}
+        for c, mem, _access in region.outputs:
+            target = mems[mem]
+            vals = jnp.reshape(jnp.asarray(tiles[c]), (-1,)) \
+                .astype(target.dtype)
+            flat = jnp.reshape(target, (-1,))
+            outs[mem] = jnp.reshape(flat.at[idx_out[(c, mem)]].set(vals),
+                                    target.shape)
+        return outs
+
+    return region_fn
+
+
+# ------------------------------------------------------------------ driver --
+def lower_pallas(g: Graph, jit: bool = True, pallas_mode: str = "auto",
+                 warn: Optional[Callable[[str], None]] = None,
+                 emission: Optional[dict] = None
+                 ) -> Callable[[Mapping[str, Any]], Dict[str, jax.Array]]:
+    """Lower ``g`` through the fused-region pallas backend.
+
+    ``pallas_mode``: ``'auto'`` emits real ``pl.pallas_call`` kernels only
+    when a TPU is attached (CPU gets the ``blockloop`` jit fallback),
+    ``'interpret'`` forces ``pl.pallas_call(interpret=True)`` for pallas-
+    expressible regions (validation path), ``'fallback'`` never emits
+    pallas calls.  ``emission`` (a dict) receives per-region provenance.
+    """
+    if pallas_mode not in ("auto", "interpret", "fallback"):
+        raise ValueError(f"unknown pallas_mode {pallas_mode!r}")
+    g.validate()
+    warn = warn or (lambda msg: None)
+    on_tpu = any(d.platform == "tpu" for d in jax.devices())
+    use_pallas = pallas_mode == "interpret" or \
+        (pallas_mode == "auto" and on_tpu)
+    # 'interpret' is a validation contract: force the interpreter even on
+    # TPU; 'auto' interprets only when no TPU can compile the kernel
+    interpret = pallas_mode == "interpret" or not on_tpu
+
+    regions = partition_regions(g)
+    emitted: List[Tuple[Region, str, Callable]] = []
+    for region in regions:
+        notes: List[str] = []
+        plan = plan_region(g, region, notes.append)
+        for n in notes:
+            warn(n)
+        if plan is not None and use_pallas and plan.pallas_ok:
+            tier = "pallas"
+            fn = emit_pallas(g, plan, interpret=interpret)
+        elif plan is not None:
+            tier = "blockloop"
+            fn = emit_blockloop(g, plan)
+        else:
+            tier = "gather"
+            fn = emit_gather(g, region)
+        if emission is not None:
+            emission[region.name] = {
+                "tier": tier,
+                "pump": plan.pump if plan is not None else 1,
+                "mode": region.mode,
+                "grid": [list(d) for d in plan.grid] if plan else None,
+                "reduce": list(plan.reduce_syms) if plan else None,
+            }
+        emitted.append((region, tier, fn))
+
+    def run_fn(inputs: Mapping[str, Any]) -> Dict[str, jax.Array]:
+        mems: Dict[str, jax.Array] = {}
+        for n in g.nodes.values():
+            if n.kind != NodeKind.MEMORY:
+                continue
+            if n.name in inputs:
+                mems[n.name] = jnp.asarray(inputs[n.name], dtype=n.dtype)
+            else:
+                mems[n.name] = jnp.zeros(n.shape, dtype=n.dtype)
+        for region, tier, fn in emitted:
+            if tier == "gather":
+                mems.update(fn(mems))
+            else:
+                # single-output tile emission
+                out_mem = region.outputs[0][1]
+                mems[out_mem] = fn(mems)
+        return mems
+
+    return jax.jit(run_fn) if jit else run_fn

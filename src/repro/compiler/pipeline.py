@@ -37,12 +37,25 @@ class PipelineReport:
     cache_key: Optional[str] = None
     served_from: Optional[str] = None   # None | "disk" | "memory"
     cache_hits: int = 0
+    # lowering-time degradation notes (misaligned pump factors, dropped
+    # temporal axes, emission-tier downgrades) — deduplicated messages
+    warnings: List[str] = dataclasses.field(default_factory=list)
+    # measured-runtime autotune provenance: {"winner", "timings_us",
+    # "backend", "replayed"} when compile(..., autotune='measure') ran or
+    # a measured plan was replayed from the cache
+    autotune: Optional[dict] = None
+    # pallas-backend emission provenance: {region name: {"tier", ...}}
+    emission: Optional[dict] = None
 
     def record(self, name: str) -> Optional[PassRecord]:
         for r in self.records:
             if r.name == name:
                 return r
         return None
+
+    @property
+    def warning_count(self) -> int:
+        return len(self.warnings)
 
     @property
     def factor(self) -> int:
@@ -61,7 +74,9 @@ class PipelineReport:
     def summary(self) -> str:
         parts = [f"{r.name}:{'+' if r.applied else '-'}" for r in self.records]
         cache = f" cache={self.served_from or 'miss'}({self.cache_hits})"
-        return f"[{self.graph}] " + " ".join(parts) + f" M={self.factor}" + cache
+        tail = f" warn={self.warning_count}" if self.warnings else ""
+        return (f"[{self.graph}] " + " ".join(parts) + f" M={self.factor}"
+                + cache + tail)
 
 
 class Pipeline:

@@ -35,6 +35,7 @@ class AutopumpResult:
     pump_report: Optional[PumpReport]
     estimate: KernelEstimate
     pipeline_report: object = None   # repro.compiler PipelineReport
+    kernel: object = None            # CompiledKernel when backend != 'none'
 
     def summary(self) -> str:
         r = self.graph.resources()
@@ -43,7 +44,24 @@ class AutopumpResult:
                 f"modeled_tp={self.estimate.throughput(self.spec.factor):.3g}/s")
 
 
+def _xp(a):
+    """numpy/jax dispatch for fn bodies that need library calls (not just
+    operators).  jax.numpy is imported lazily so repro.core stays jax-free
+    for reference-executor users; numpy arrays keep numpy semantics."""
+    if isinstance(a, np.ndarray):
+        return np
+    import jax.numpy as jnp
+    return jnp
+
+
 # ------------------------------------------------------------ IR builders --
+# fn bodies are numpy/jax polymorphic (operator-based) so the same body runs
+# in the reference executor and in the compiler's lowering backends.  The
+# optional meta['tile_fn'] is the *per-grid-step* form consumed by the Pallas
+# emission backend: it maps operand blocks (shaped per the blocked view of
+# the access pattern) to one output block, while fn maps whole FIFO
+# sequences.  meta['reduce']='add' marks tile_fn outputs as partial
+# contributions accumulated over grid dims absent from the output access.
 def _vecadd_graph(n: int, vector_width: int = 8, itemsize: int = 4):
     v = vector_width
     g = Graph("vecadd")
@@ -52,10 +70,8 @@ def _vecadd_graph(n: int, vector_width: int = 8, itemsize: int = 4):
     g.memory("z", (n,))
     dom = Domain.of(("i", 0, max(n // v, 1)))
     acc = AccessPattern(dom, (Affine.of("i", v),), width=v)
-    # fn is numpy/jax polymorphic (operator-based) so the same body runs in
-    # the reference executor and in the compiler's JAX lowering backend.
-    g.compute("add", dom, fn=lambda in0, in1: {"out0": in0 + in1},
-              vector_width=v)
+    add = lambda in0, in1: {"out0": in0 + in1}   # noqa: E731 - elementwise
+    g.compute("add", dom, fn=add, vector_width=v, tile_fn=add)
     g.connect("x", "add", acc)
     g.connect("y", "add", acc)
     g.connect("add", "z", acc)
@@ -99,6 +115,10 @@ def _matmul_graph(m: int, n: int, k: int, bm: int = 128, bn: int = 128,
             a = in0.reshape(nbm, nbn, nbk, bm, bk)
             b = in1.reshape(nbm, nbn, nbk, bk, bn)
             return {"out0": (a @ b).sum(axis=2).reshape(-1)}
+
+        # per-tile form: one MXU panel product, accumulated over the kk
+        # grid dimension (absent from the output access) by the backend
+        tile_fn = lambda in0, in1: {"out0": in0 @ in1}   # noqa: E731
     else:
         # Fallback (non-divisible shapes): corner-sampled transaction
         # schedule — enough for planning/legality, not executable.
@@ -108,9 +128,11 @@ def _matmul_graph(m: int, n: int, k: int, bm: int = 128, bn: int = 128,
                               width=1)
         acc_c = AccessPattern(dom, (Affine.of("i", bm), Affine.of("j", bn)),
                               width=1)
+        tile_fn = None
     if vector_width is None:
         vector_width = bm * bn // (128 * 128) or 1
-    g.compute("mxu_tile", dom, fn=fn, vector_width=vector_width)
+    g.compute("mxu_tile", dom, fn=fn, vector_width=vector_width,
+              tile_fn=tile_fn, reduce="add")
     g.connect("a", "mxu_tile", acc_a)
     g.connect("b", "mxu_tile", acc_b)
     g.connect("mxu_tile", "c", acc_c)
@@ -120,16 +142,37 @@ def _matmul_graph(m: int, n: int, k: int, bm: int = 128, bn: int = 128,
     return g, est
 
 
-def _stencil_graph(d0: int, d1: int, d2: int, itemsize: int = 4):
+def _stencil_graph(d0: int, d1: int, d2: int, itemsize: int = 4,
+                   coef: float = 0.25):
+    """Plane-sweep Jacobi update along axis 0: each interior plane i+1 of
+    ``y`` is rebuilt from the three-plane halo window x[i:i+3]; boundary
+    planes keep the output memory's initial contents (zeros)."""
     g = Graph("stencil")
     g.memory("x", (d0, d1, d2))
     g.memory("y", (d0, d1, d2))
-    dom = Domain.of(("i", 0, max(d0 - 2, 1)))
-    acc = AccessPattern(dom, (Affine.of("i"), Affine.constant(0),
-                              Affine.constant(0)), width=d1 * d2)
-    g.compute("plane_update", dom, vector_width=d1 * d2 // 128 or 1)
-    g.connect("x", "plane_update", acc)
-    g.connect("plane_update", "y", acc)
+    ni = max(d0 - 2, 1)
+    dom = Domain.of(("i", 0, ni))
+    # overlapping halo reads: plane window [i, i+3); interior-plane writes
+    acc_in = AccessPattern(dom, (Affine.of("i"), Affine.constant(0),
+                                 Affine.constant(0)), width=3 * d1 * d2)
+    acc_out = AccessPattern(dom, (Affine.of("i") + 1, Affine.constant(0),
+                                  Affine.constant(0)), width=d1 * d2)
+
+    def tile_fn(in0):
+        # one halo window (3, d1', d2') -> one interior plane (1, d1', d2');
+        # shape-polymorphic in the trailing dims (mode R narrows them)
+        return {"out0": coef * (in0[0:1] + in0[2:3])
+                + (1.0 - 2.0 * coef) * in0[1:2]}
+
+    def fn(in0):
+        w = in0.reshape(-1, 3, d1, d2)
+        out = coef * (w[:, 0] + w[:, 2]) + (1.0 - 2.0 * coef) * w[:, 1]
+        return {"out0": out.reshape(-1)}
+
+    g.compute("plane_update", dom, fn=fn, tile_fn=tile_fn,
+              vector_width=max(d1 * d2 // 128, 4))
+    g.connect("x", "plane_update", acc_in)
+    g.connect("plane_update", "y", acc_out)
     est = KernelEstimate(block_bytes_in=3 * d1 * d2 * itemsize,
                          block_bytes_out=d1 * d2 * itemsize,
                          flops_per_block=7.0 * d1 * d2)
@@ -137,15 +180,27 @@ def _stencil_graph(d0: int, d1: int, d2: int, itemsize: int = 4):
 
 
 def _floyd_graph(n: int, itemsize: int = 4):
+    """All-pairs shortest paths.  The k-relaxation carries a loop-borne
+    dependency through the whole matrix, so the IR models one compute whose
+    fn runs the full pivot loop; the access pattern streams the matrix
+    row-by-row (duplicate-free, so the graph is lowerable)."""
     g = Graph("floyd_warshall")
     g.memory("dist", (n, n))
     g.memory("out", (n, n))
-    dom = Domain.of(("k", 0, n))
-    acc_in = AccessPattern(dom, (Affine.constant(0), Affine.constant(0)),
-                           width=n * n)
-    g.compute("relax", dom, vector_width=n // 128 or 1)
-    g.connect("dist", "relax", acc_in)
-    g.connect("relax", "out", acc_in)
+    dom = Domain.of(("r", 0, n))
+    acc = AccessPattern(dom, (Affine.of("r"), Affine.constant(0)), width=n)
+
+    def fn(in0):
+        xp = _xp(in0)
+        d = in0.reshape(n, n)
+        for k in range(n):
+            d = xp.minimum(d, d[:, k:k + 1] + d[k:k + 1, :])
+        return {"out0": d.reshape(-1)}
+
+    g.compute("relax", dom, fn=fn, vector_width=max(n // 128, 4),
+              data_dependent_io=False)
+    g.connect("dist", "relax", acc)
+    g.connect("relax", "out", acc)
     est = KernelEstimate(block_bytes_in=2 * n * itemsize,   # pivot row+col
                          block_bytes_out=0.0,
                          flops_per_block=2.0 * n * n)
@@ -226,6 +281,7 @@ BUILDERS: Dict[str, Callable] = {
 
 def autopump(kernel: str, *args, mode: str = "T", max_factor: int = 16,
              vmem_budget: int = VMEM_BYTES, cache=None,
+             backend: str = "none", autotune=None,
              **kwargs) -> AutopumpResult:
     """Run the full §3 pipeline for a registered kernel.
 
@@ -236,6 +292,11 @@ def autopump(kernel: str, *args, mode: str = "T", max_factor: int = 16,
     semantics of data-centric transforms.  Pipeline decisions are memoized in
     the persistent compile cache (``cache=False`` disables), so repeated
     calls across benchmark/serve runs are O(1).
+
+    ``backend`` defaults to ``'none'`` (plan only); pass ``'pallas'`` or
+    ``'jax'`` to also lower the transformed graph (the executable lands in
+    ``AutopumpResult.kernel``), and ``autotune='measure'`` to pick the pump
+    factor from measured runtimes instead of the capacity model.
     """
     if kernel not in BUILDERS:
         raise KeyError(f"no IR builder for kernel {kernel!r}; "
@@ -247,7 +308,8 @@ def autopump(kernel: str, *args, mode: str = "T", max_factor: int = 16,
 
     kern = compiler.compile(g, factor="auto", mode=mode,
                             vmem_budget=vmem_budget, max_factor=max_factor,
-                            estimate=est, backend="none", cache=cache)
+                            estimate=est, backend=backend, cache=cache,
+                            autotune=autotune)
     report = kern.report
     srec = report.record("streaming")
     prec = report.record("multipump")
@@ -256,4 +318,5 @@ def autopump(kernel: str, *args, mode: str = "T", max_factor: int = 16,
         else StreamingReport()
     p_report = prec.report if prec is not None and prec.applied else None
     return AutopumpResult(kern.spec, kern.graph, s_report, p_report, est,
-                          pipeline_report=report)
+                          pipeline_report=report,
+                          kernel=kern if backend != "none" else None)

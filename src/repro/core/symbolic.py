@@ -187,6 +187,173 @@ class AccessPattern:
         return tuple(e.rename(mapping) for e in self.exprs)
 
 
+@dataclasses.dataclass(frozen=True)
+class BlockedAccess:
+    """A block-structured reading of an :class:`AccessPattern`.
+
+    The Pallas emission backend consumes this instead of the flat address
+    sequence: every grid point ``env`` (one integer per outer symbol) touches
+    the dense box ``[offsets[d](env) : offsets[d](env) + block[d]]`` per
+    memory dimension.  ``offsets`` are *element-unit* affines over the grid
+    symbols; dividing them by ``block`` (when exact) yields the block-unit
+    index map a ``pl.BlockSpec`` wants — see :meth:`block_unit_offsets`.
+    """
+
+    block: Tuple[int, ...]                 # slice extent per memory dim
+    grid: Tuple[Tuple[str, int], ...]      # (symbol, extent), outermost first
+    offsets: Tuple[Affine, ...]            # element-unit start per memory dim
+
+    @property
+    def grid_symbols(self) -> Tuple[str, ...]:
+        return tuple(s for s, _ in self.grid)
+
+    def block_unit_offsets(self) -> "Tuple[Affine, ...] | None":
+        """Offsets divided by the block extents, or None when any coefficient
+        is not an exact multiple (the access is then not expressible as a
+        Pallas block-index map, only as an element-unit ``dynamic_slice``)."""
+        out = []
+        for a, b in zip(self.offsets, self.block):
+            if b == 1:
+                out.append(a)
+                continue
+            if a.const % b or any(c % b for _, c in a.terms):
+                return None
+            out.append(Affine(tuple((s, c // b) for s, c in a.terms),
+                              a.const // b))
+        return tuple(out)
+
+    def covers(self, shape: Sequence[int]) -> bool:
+        """True when the grid×block tiling exactly covers ``shape`` element
+        count (no gaps) — the precondition for emitting this access as a
+        Pallas *output* whose buffer starts uninitialized."""
+        n = 1
+        for b in self.block:
+            n *= b
+        for _, e in self.grid:
+            n *= e
+        total = 1
+        for s in shape:
+            total *= s
+        return n == total
+
+
+def blocked_access(acc: AccessPattern,
+                   shape: Sequence[int]) -> "BlockedAccess | None":
+    """Derive a :class:`BlockedAccess` from ``acc`` over a memory ``shape``.
+
+    Two sources contribute to the block: the contiguous ``width`` (spilling
+    backwards over trailing dimensions whose expression is identically 0),
+    and a suffix of unit-coefficient, unit-step domain symbols that each walk
+    one dimension densely (e.g. the row symbol of a matmul panel).  Remaining
+    (outer) symbols become the grid.  Returns None when the pattern does not
+    decompose this way — callers fall back to flat gather/scatter lowering.
+    """
+    rank = len(shape)
+    if len(acc.exprs) != rank:
+        return None
+
+    block = [1] * rank
+    exprs = list(acc.exprs)
+
+    # 1. distribute the contiguous width over trailing dims
+    w = acc.width
+    d = rank - 1
+    while w > 1 and d >= 0:
+        if w >= shape[d]:
+            if w % shape[d] or exprs[d].terms or exprs[d].const:
+                return None        # spill requires a full, zero-based dim
+            block[d] = shape[d]
+            w //= shape[d]
+        else:
+            block[d] = w
+            w = 1
+        d -= 1
+    if w > 1:
+        return None
+
+    # 2. absorb a dense suffix of intra-block symbols (unit coeff/step/base)
+    dims = list(acc.domain.dims)
+    extents = list(acc.domain.extents)
+    while dims:
+        sym, start, _stop, step = dims[-1]
+        ext = extents[-1]
+        hits = [i for i, e in enumerate(exprs) if e.coeff(sym)]
+        if len(hits) != 1 or exprs[hits[0]].coeff(sym) != 1:
+            break
+        if start != 0 or step != 1:
+            break
+        i = hits[0]
+        if block[i] != 1:
+            break                   # width already owns this dimension
+        rest = exprs[i].substitute({sym: Affine.constant(0)})
+        if rest.const % ext or any(c % ext for _, c in rest.terms):
+            break                   # unaligned dense walk: keep as grid dim
+        block[i] = ext
+        exprs[i] = rest
+        dims.pop()
+        extents.pop()
+
+    # 3. remaining (outer) symbols form the grid; emission walks raw indices
+    #    0..extent-1, so they must be zero-based with unit step
+    for sym, start, _stop, step in dims:
+        if start != 0 or step != 1:
+            return None
+    grid = tuple((s, e) for (s, _, _, _), e in zip(dims, extents))
+    grid_syms = {s for s, _ in grid}
+    for e in exprs:
+        if any(s not in grid_syms for s in e.symbols()):
+            return None             # leftover intra symbol in an offset
+    # 4. every grid point's box must stay in bounds (no row straddling)
+    for d_i, (e, b) in enumerate(zip(exprs, block)):
+        lo = hi = e.const
+        for s, c in e.terms:
+            ext = dict(grid)[s]
+            if c >= 0:
+                hi += c * (ext - 1)
+            else:
+                lo += c * (ext - 1)
+        if lo < 0 or hi + b > shape[d_i]:
+            return None
+    return BlockedAccess(tuple(block), grid, tuple(exprs))
+
+
+def split_temporal(acc: BlockedAccess, sym: str, factor: int,
+                   pump_sym: str = "_pump") -> BlockedAccess:
+    """Mode-T temporal realization: split grid symbol ``sym`` (extent G) into
+    an outer symbol of extent G/factor and the innermost temporal symbol
+    ``pump_sym`` of extent ``factor`` — one wide transaction per outer step,
+    ``factor`` narrow beats per transaction.  Offsets are rewritten by the
+    exact substitution ``sym -> sym*factor + pump_sym``."""
+    repl = Affine.of(sym, factor) + Affine.of(pump_sym)
+    grid = []
+    for s, e in acc.grid:
+        if s == sym:
+            if e % factor:
+                raise ValueError(f"extent {e} of {sym} not divisible by "
+                                 f"pump factor {factor}")
+            grid.append((s, e // factor))
+        else:
+            grid.append((s, e))
+    grid.append((pump_sym, factor))
+    offsets = tuple(e.substitute({sym: repl}) for e in acc.offsets)
+    return BlockedAccess(acc.block, tuple(grid), offsets)
+
+
+def narrow_block(acc: BlockedAccess, dim: int, factor: int,
+                 pump_sym: str = "_pump") -> BlockedAccess:
+    """Mode-R temporal realization for one access: narrow ``block[dim]`` by
+    ``factor`` and walk the ``factor`` sub-tiles with the temporal symbol
+    (which the caller appends to the region grid)."""
+    b = acc.block[dim]
+    if b % factor:
+        raise ValueError(f"block extent {b} not divisible by {factor}")
+    block = list(acc.block)
+    block[dim] = b // factor
+    offsets = list(acc.offsets)
+    offsets[dim] = offsets[dim] + Affine.of(pump_sym, b // factor)
+    return BlockedAccess(tuple(block), acc.grid, tuple(offsets))
+
+
 def sequence_equivalent(
     a: AccessPattern, b: AccessPattern, shape: Sequence[int], probe: int = 4096
 ) -> bool:

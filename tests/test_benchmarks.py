@@ -1,0 +1,42 @@
+"""Tier-1 wiring for the compiler benchmark smoke path (`make bench-smoke`):
+runs the tiny-shape report in-process and checks the JSON contract the
+cross-PR perf tracking relies on."""
+import json
+
+import pytest
+
+
+@pytest.fixture()
+def bench_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "cache"))
+    return tmp_path
+
+
+def test_compiler_bench_smoke_writes_json(bench_cache, tmp_path, capsys):
+    from benchmarks import compiler_report
+
+    out = tmp_path / "BENCH_compiler_smoke.json"
+    report = compiler_report.run_report(smoke=True, out_path=out)
+    assert out.exists()
+    on_disk = json.loads(out.read_text())
+    assert on_disk["smoke"] is True
+
+    # one entry per kernel x backend x factor, every one bit-exact
+    kernels = {e["kernel"] for e in report["entries"]}
+    assert kernels == {"vecadd", "matmul"}
+    assert {e["backend"] for e in report["entries"]} == {"jax", "pallas"}
+    assert all(e["parity"] == "bitexact" for e in report["entries"])
+    for e in report["entries"]:
+        assert e["wall_us"] > 0 and e["compile_cold_us"] > 0
+        assert e["cache_warm"] in ("disk", "memory")
+
+    # autotune: repeat compile is a cache hit that skipped re-measurement
+    for name, a in report["autotune"].items():
+        assert a["replay_served_from"] == "disk", name
+        assert a["replay_skipped_measurement"] is True, name
+        assert a["replay_compile_us"] < a["measure_compile_us"], name
+
+    # the headline comparison exists for the tracked factors
+    assert set(report["matmul_pallas_speedup_vs_jax"]) == {"1", "2", "4"}
+    # CSV rows were emitted alongside the JSON
+    assert "compiler_matmul_pallas_M2" in capsys.readouterr().out

@@ -1,10 +1,12 @@
-"""repro.compiler tests: pass registry/pipeline, lowering backend vs the
-numpy reference executor (differential), persistent compile cache, and the
-two new passes (stream-fusion, fifo-depth).
+"""repro.compiler tests: pass registry/pipeline, lowering backends vs the
+numpy reference executor (differential), persistent compile cache, the two
+new passes (stream-fusion, fifo-depth), and the fused-region Pallas emission
+backend (region partitioning, blocked-view derivation, temporal grid axis,
+measured-runtime autotune).
 
 Differential data is integer-valued float32 so every backend computes the
 same exactly-representable values regardless of reduction order — the
-lowering is required to be *bit-exact* against the reference executor.
+lowerings are required to be *bit-exact* against the reference executor.
 """
 import numpy as np
 import pytest
@@ -12,7 +14,8 @@ import pytest
 import jax.numpy as jnp
 
 from repro import compiler
-from repro.compiler import (CompileCache, Pipeline, PASS_REGISTRY, make_pass)
+from repro.compiler import (CompileCache, LoweringError, Pipeline,
+                            PASS_REGISTRY, make_pass)
 from repro.compiler.cache import graph_fingerprint
 from repro.compiler.lowering import _temporal_rechunk
 from repro.compiler.passes import FifoDepthPass, StreamFusionPass
@@ -20,6 +23,7 @@ from repro.core import (AccessPattern, Affine, Domain, Graph, NodeKind,
                         apply_multipump, apply_streaming, autopump, executor)
 from repro.core.autopump import BUILDERS
 from repro.core.multipump import pump_spec_for
+from repro.core.symbolic import blocked_access
 
 
 def _ints(rng, shape, lo=-4, hi=5):
@@ -89,6 +93,277 @@ def test_reference_backend_matches_jax_backend(tmp_path):
                           memoize=False)
     np.testing.assert_array_equal(np.asarray(kj(inputs)["z"]),
                                   kr(inputs)["z"])
+
+
+# ------------------------------------ differential: all builders/backends --
+def _builder_cases():
+    rng = np.random.default_rng(0)
+
+    def ints(shape, lo=-4, hi=5):
+        return rng.integers(lo, hi, shape).astype(np.float32)
+
+    return {
+        "vecadd": ((64,), dict(vector_width=8),
+                   {"x": ints(64), "y": ints(64)}, "z",
+                   lambda i: i["x"] + i["y"]),
+        "matmul": ((32, 32, 32), dict(bm=16, bn=16, bk=16, vector_width=8),
+                   {"a": ints((32, 32), -3, 4), "b": ints((32, 32), -3, 4)},
+                   "c", lambda i: i["a"] @ i["b"]),
+        "stencil": ((10, 8, 8), dict(),
+                    {"x": ints((10, 8, 8))}, "y", None),
+        "floyd_warshall": ((16,), dict(),
+                           {"dist": ints((16, 16), 1, 9)}, "out", None),
+    }
+
+
+def _stencil_gold(x):
+    y = np.zeros_like(x)
+    y[1:-1] = 0.25 * (x[:-2] + x[2:]) + 0.5 * x[1:-1]
+    return y
+
+
+def _floyd_gold(d):
+    d = d.copy()
+    for k in range(d.shape[0]):
+        d = np.minimum(d, d[:, k:k + 1] + d[k:k + 1, :])
+    return d
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+@pytest.mark.parametrize("mode", ["T", "R"])
+@pytest.mark.parametrize("factor", [1, 2, 4])
+@pytest.mark.parametrize("kernel", ["vecadd", "matmul", "stencil",
+                                    "floyd_warshall"])
+def test_builders_differential_all_backends(tmp_path, kernel, factor, mode,
+                                            backend):
+    """Every executable builder graph, every backend, factors {1,2,4}, both
+    pump modes: bit-exact vs the reference executor and vs direct numpy."""
+    args, kw, inputs, out_name, gold_fn = _builder_cases()[kernel]
+    g, _ = BUILDERS[kernel](*args, **kw)
+    kern = compiler.compile(g, factor=factor, mode=mode, backend=backend,
+                            cache=CompileCache(tmp_path / "c.json"),
+                            memoize=False)
+    out = np.asarray(kern(inputs)[out_name])
+    ref = executor.run(kern.graph, dict(inputs))[out_name]
+    np.testing.assert_array_equal(out, ref)              # vs reference
+    if gold_fn is not None:
+        gold = gold_fn(inputs)
+    elif kernel == "stencil":
+        gold = _stencil_gold(inputs["x"])
+    else:
+        gold = _floyd_gold(inputs["dist"])
+    np.testing.assert_array_equal(out, gold)             # semantics
+
+
+# --------------------------------------------- pallas backend: structure --
+def test_region_partitioning_and_emission_tiers(tmp_path):
+    """Adapters/streams fuse into one region per compute chain; emission
+    picks blockloop for tile-able kernels and gather for the
+    dependency-carrying floyd pivot loop."""
+    g, _ = BUILDERS["matmul"](32, 32, 32, bm=16, bn=16, bk=16, vector_width=8)
+    kern = compiler.compile(g, factor=2, backend="pallas",
+                            cache=CompileCache(tmp_path / "c.json"),
+                            memoize=False)
+    assert list(kern.report.emission.values())[0]["tier"] == "blockloop"
+    # the temporal axis is the innermost grid dim, and kk + _pump reduce
+    em = list(kern.report.emission.values())[0]
+    assert em["grid"][-1][0] == "_pump" and em["grid"][-1][1] == 2
+    assert "_pump" in em["reduce"] and "kk" in em["reduce"]
+
+    g2, _ = BUILDERS["floyd_warshall"](16)
+    kern2 = compiler.compile(g2, factor=2, backend="pallas",
+                             cache=CompileCache(tmp_path / "c.json"),
+                             memoize=False)
+    assert list(kern2.report.emission.values())[0]["tier"] == "gather"
+    assert kern2.report.warnings                    # downgrade is visible
+
+
+def test_pallas_interpret_emission_matches_reference(tmp_path):
+    """Real pl.pallas_call (interpret mode on CPU) for pallas-expressible
+    regions, bit-exact in both modes."""
+    rng = np.random.default_rng(3)
+    inputs = {"a": rng.integers(-3, 4, (32, 32)).astype(np.float32),
+              "b": rng.integers(-3, 4, (32, 32)).astype(np.float32)}
+    for mode in ("T", "R"):
+        g, _ = BUILDERS["matmul"](32, 32, 32, bm=16, bn=16, bk=16,
+                                  vector_width=8)
+        kern = compiler.compile(g, factor=2, mode=mode, backend="pallas",
+                                pallas_mode="interpret",
+                                cache=CompileCache(tmp_path / "c.json"),
+                                memoize=False)
+        assert list(kern.report.emission.values())[0]["tier"] == "pallas"
+        out = np.asarray(kern(inputs)["c"])
+        np.testing.assert_array_equal(
+            out, executor.run(kern.graph, dict(inputs))["c"])
+        np.testing.assert_array_equal(out, inputs["a"] @ inputs["b"])
+
+
+def test_blocked_access_derivation():
+    """Symbolic access patterns decompose into block/grid/offset views."""
+    g, _ = BUILDERS["matmul"](64, 64, 64, bm=16, bn=16, bk=16, vector_width=8)
+    acc_a = g.in_edges("mxu_tile")[0].access
+    ba = blocked_access(acc_a, (64, 64))
+    assert ba.block == (16, 16)
+    assert ba.grid_symbols == ("i", "j", "kk")
+    assert ba.block_unit_offsets() is not None      # pallas-expressible
+
+    # stencil halo: overlapping windows are blockable but not block-unit
+    g2, _ = BUILDERS["stencil"](10, 8, 8)
+    ba2 = blocked_access(g2.in_edges("plane_update")[0].access, (10, 8, 8))
+    assert ba2.block == (3, 8, 8)
+    assert ba2.block_unit_offsets() is None
+
+
+def test_pallas_backend_on_fused_chain(tmp_path):
+    """Multi-compute regions (post stream-fusion) lower through the pallas
+    backend's gather tier and stay value-exact."""
+    g = chain_graph(32, 4)
+    kern = compiler.compile(g, factor=2, backend="pallas",
+                            cache=CompileCache(tmp_path / "c.json"),
+                            memoize=False)
+    assert "t" not in kern.graph.nodes
+    rng = np.random.default_rng(5)
+    x = _ints(rng, 32)
+    out = np.asarray(kern({"x": x})["z"])
+    np.testing.assert_array_equal(out, (x + 1.0) * 2.0)
+
+
+def test_pallas_region_order_respects_memory_deps(tmp_path):
+    """A region reading memory m must run after the region writing m, even
+    when declaration/toposort position order says otherwise (regression:
+    emission used to schedule by first-compute position)."""
+    g = Graph("xregion")
+    g.memory("y", (8,))
+    g.memory("x", (8,))
+    g.memory("m", (8,))
+    g.memory("z", (8,))
+    dom = Domain.of(("i", 0, 8))
+    acc = AccessPattern(dom, (Affine.of("i"),))
+    rev = AccessPattern(dom, (Affine.constant(7) - Affine.of("i"),))
+    # consumer region: c0 -> c1, where only the *second* compute reads m
+    # (c0's node-toposort position precedes the producer a0's, so position-
+    # based region scheduling would run this region first, against zeros;
+    # the reversed read defeats streaming/fusion, so m stays a boundary)
+    g.compute("c0", dom, fn=lambda in0: {"out0": in0 + 1.0})
+    g.compute("c1", dom, fn=lambda in0, in1: {"out0": in0 + in1})
+    g.connect("x", "c0", acc)
+    g.connect("c0", "c1")
+    g.connect("m", "c1", rev)
+    g.connect("c1", "z", acc)
+    # producer region declared last: m = 2 * y
+    g.compute("a0", dom, fn=lambda in0: {"out0": in0 * 2.0})
+    g.connect("y", "a0", acc)
+    g.connect("a0", "m", acc)
+
+    from repro.core.executor import _toposort
+    from repro.compiler.pallas_backend import partition_regions
+    order = _toposort(g)
+    assert order.index("c0") < order.index("a0")    # the trap this guards
+    assert [r.name for r in partition_regions(g)] == ["a0", "c0"]
+
+    rng = np.random.default_rng(9)
+    inputs = {"x": _ints(rng, 8), "y": _ints(rng, 8)}
+    kern = compiler.compile(g, factor=1, backend="pallas",
+                            cache=CompileCache(tmp_path / "c.json"),
+                            memoize=False)
+    out = np.asarray(kern(inputs)["z"])
+    gold = (inputs["x"] + 1.0) + (2.0 * inputs["y"])[::-1]
+    np.testing.assert_array_equal(out, gold)
+    np.testing.assert_array_equal(
+        out, executor.run(kern.graph, dict(inputs))["z"])
+
+
+# ------------------------------------------------ measured-runtime autotune --
+def test_autotune_measure_and_cache_replay(tmp_path):
+    path = tmp_path / "cache.json"
+    g, est = BUILDERS["vecadd"](256, vector_width=8)
+    k1 = compiler.compile(g, factor="auto", estimate=est, backend="pallas",
+                          autotune="measure", cache=CompileCache(path),
+                          memoize=False)
+    at = k1.report.autotune
+    assert at["policy"] == "measure" and at["replayed"] is False
+    assert len(at["timings_us"]) >= 2               # measured >= 2 candidates
+    assert at["winner"] == k1.spec.factor
+
+    # second compile (fresh cache instance ≙ fresh process): disk hit that
+    # replays the measured plan without re-measuring
+    g2, _ = BUILDERS["vecadd"](256, vector_width=8)
+    k2 = compiler.compile(g2, factor="auto", estimate=est, backend="pallas",
+                          autotune="measure", cache=CompileCache(path),
+                          memoize=False)
+    assert k2.report.served_from == "disk"
+    assert k2.report.autotune["replayed"] is True
+    assert k2.spec.factor == k1.spec.factor
+
+
+def test_autotune_measure_requires_executable_backend():
+    g, est = BUILDERS["vecadd"](64, vector_width=8)
+    with pytest.raises(ValueError):
+        compiler.compile(g, estimate=est, backend="none",
+                         autotune="measure", cache=False)
+
+
+def test_autotune_key_distinct_from_capacity_plan(tmp_path):
+    """A measured winner and a capacity-model guess for the same request
+    must not collide in the persistent cache."""
+    path = tmp_path / "cache.json"
+    g, est = BUILDERS["vecadd"](256, vector_width=8)
+    compiler.compile(g, factor="auto", estimate=est, backend="pallas",
+                     cache=CompileCache(path), memoize=False)
+    cache = CompileCache(path)
+    k = compiler.compile(g, factor="auto", estimate=est, backend="pallas",
+                         autotune="measure", cache=cache, memoize=False)
+    assert k.report.served_from is None             # not the heuristic entry
+    assert k.report.autotune and k.report.autotune["replayed"] is False
+
+
+def test_ops_pump_measure_routes_through_backend(tmp_path, monkeypatch):
+    """kernels.ops pump='measure' compiles the kernel's IR graph through the
+    pallas backend with measured autotuning and reuses the winning factor."""
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    x = jnp.arange(512, dtype=jnp.float32)
+    y = jnp.ones(512, jnp.float32)
+    out = ops.vecadd(x, y, pump="measure")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x + y))
+    assert (tmp_path / "compile_cache.json").exists()
+
+
+# --------------------------------------------- scatter-duplicate rejection --
+def test_duplicate_scatter_raises_lowering_error(tmp_path):
+    """A write pattern revisiting addresses (reduction dim absent from the
+    output) must fail loudly instead of silently last-write-wins."""
+    g = Graph("dup")
+    g.memory("x", (8,))
+    g.memory("z", (8,))
+    dom = Domain.of(("k", 0, 2))
+    g.compute("c", dom, fn=lambda in0: {"out0": in0})
+    g.connect("x", "c", AccessPattern(dom, (Affine.of("k", 4),), width=4))
+    g.connect("c", "z", AccessPattern(dom, (Affine.constant(0),), width=4))
+    for backend in ("jax", "pallas"):
+        with pytest.raises(LoweringError, match="duplicate address"):
+            compiler.compile(g, factor=1, backend=backend,
+                             cache=False, memoize=False)
+
+
+# --------------------------------------------- misaligned-pump visibility --
+def test_misaligned_pump_factor_warns_in_report(tmp_path):
+    """factor=3 does not divide the 64-element FIFO sequence: the gearbox
+    degrades to pass-through and the report says so (counted, not silent)."""
+    g, _ = BUILDERS["vecadd"](64, vector_width=2)
+    kern = compiler.compile(g, factor=3, backend="jax",
+                            cache=CompileCache(tmp_path / "c.json"),
+                            memoize=False)
+    assert kern.report.warning_count > 0
+    assert any("not divisible by pump factor 3" in w
+               for w in kern.report.warnings)
+    assert f"warn={kern.report.warning_count}" in kern.report.summary()
+    # degraded, but still value-exact
+    x = np.arange(64, dtype=np.float32)
+    y = np.ones(64, dtype=np.float32)
+    np.testing.assert_array_equal(np.asarray(kern({"x": x, "y": y})["z"]),
+                                  x + y)
 
 
 # ------------------------------------------------- issuer/packer identity --
