@@ -2,13 +2,21 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-compiler bench-smoke
+.PHONY: test test-fast test-diff bench bench-compiler bench-smoke
 
 test:
 	$(PY) -m pytest -x -q
 
 test-fast:
 	$(PY) -m pytest -x -q tests/test_compiler.py tests/test_core.py
+
+# differential harness on tiny shapes: every autopump.BUILDERS entry x
+# backends (reference/jax/pallas) x M in {1,2,4} x modes {T,R} vs the numpy
+# reference executor (tests/differential.py; second shapes for the carry /
+# grouped kernels run jax+pallas only — the full reference sweep is
+# `python tests/differential.py`).  Runs inside the tier-1 budget.
+test-diff:
+	$(PY) -m pytest -x -q tests/test_compiler.py -k "differential"
 
 bench:
 	$(PY) -m benchmarks.run

@@ -7,10 +7,14 @@ For every kernel × backend (per-node ``jax`` lowering vs fused-region
 ``pallas`` emission) × pump factor {1, 2, 4} it records execution wall time,
 cold/warm compile latency and cache layer, plus a measured-runtime autotune
 entry demonstrating that a repeat ``compile(..., autotune='measure')`` is a
-cache hit that skips re-measurement.  The JSON lands at the repo root
-(``--smoke`` uses tiny shapes and writes ``BENCH_compiler_smoke.json``) so
-the perf trajectory — in particular *fused backend beats per-node lowering
-on matmul at factor ≥ 2* — is diffable across PRs.
+cache hit that skips re-measurement.  Since the kernel library was subsumed
+by the compiler, the tracked set includes the three formerly hand-wired
+kernels — flash attention (multi-output carry region), the SSD scan
+(sequential-carry chunk loop) and grouped gemm (reduction-accumulated
+expert tiles).  The JSON lands at the repo root (``--smoke`` uses tiny
+shapes and writes ``BENCH_compiler_smoke.json``) so the perf trajectory —
+in particular *fused backend beats per-node lowering on matmul at factor ≥
+2* — is diffable across PRs.
 
 Also emits the standard ``name,us_per_call,derived`` CSV rows.
 """
@@ -42,27 +46,55 @@ def _cases(smoke: bool):
     def ints(shape, lo=-4, hi=5):
         return rng.integers(lo, hi, shape).astype(np.float32)
 
+    def ssd_inputs(b, l, h, n):
+        return {"x": ints((b, l, h, 4)),
+                "dt": np.abs(ints((b, l, h))) * 0.25 + 0.25,
+                "a": -(np.abs(ints((h,))) * 0.25 + 0.25),
+                "bmat": ints((b, l, h, n)), "cmat": ints((b, l, h, n))}
+
+    # (name, builder args, builder kwargs, out memory, inputs, exact?) —
+    # flash/ssd contain exp (numpy vs XLA differ by 1 ULP), so their parity
+    # contract is 'close' instead of bit-exact; see tests/differential.py
     if smoke:
         specs = [
             ("vecadd", (256,), dict(vector_width=8), "z",
-             lambda: {"x": ints(256), "y": ints(256)}),
+             lambda: {"x": ints(256), "y": ints(256)}, True),
             ("matmul", (64, 64, 64), dict(bm=16, bn=16, bk=16,
                                           vector_width=8), "c",
-             lambda: {"a": ints((64, 64)), "b": ints((64, 64))}),
+             lambda: {"a": ints((64, 64)), "b": ints((64, 64))}, True),
+            ("flash_attention", (1, 2, 16, 16, 8),
+             dict(bq=8, bkv=8, vector_width=8), "o",
+             lambda: {"q": ints((1, 2, 16, 8)), "k": ints((1, 2, 16, 8)),
+                      "v": ints((1, 2, 16, 8))}, False),
+            ("ssd_scan", (1, 16, 2, 4, 4), dict(chunk=4, vector_width=8),
+             "y", lambda: ssd_inputs(1, 16, 2, 4), False),
+            ("grouped_gemm", (2, 16, 8, 8),
+             dict(bc=8, bf=8, bd=8, vector_width=8), "o",
+             lambda: {"x": ints((2, 16, 8)), "w": ints((2, 8, 8))}, True),
         ]
     else:
         specs = [
             ("vecadd", (65536,), dict(vector_width=8), "z",
-             lambda: {"x": ints(65536), "y": ints(65536)}),
+             lambda: {"x": ints(65536), "y": ints(65536)}, True),
             ("matmul", (256, 256, 256), dict(bm=64, bn=64, bk=64,
                                              vector_width=8), "c",
-             lambda: {"a": ints((256, 256)), "b": ints((256, 256))}),
+             lambda: {"a": ints((256, 256)), "b": ints((256, 256))}, True),
             ("stencil", (34, 32, 32), dict(), "y",
-             lambda: {"x": ints((34, 32, 32))}),
+             lambda: {"x": ints((34, 32, 32))}, True),
             ("floyd_warshall", (48,), dict(), "out",
-             lambda: {"dist": ints((48, 48), 1, 9)}),
+             lambda: {"dist": ints((48, 48), 1, 9)}, True),
+            ("flash_attention", (2, 4, 128, 128, 32),
+             dict(bq=32, bkv=32, vector_width=8), "o",
+             lambda: {"q": ints((2, 4, 128, 32)), "k": ints((2, 4, 128, 32)),
+                      "v": ints((2, 4, 128, 32))}, False),
+            ("ssd_scan", (2, 256, 4, 4, 8), dict(chunk=16, vector_width=8),
+             "y", lambda: ssd_inputs(2, 256, 4, 8), False),
+            ("grouped_gemm", (8, 64, 64, 64),
+             dict(bc=32, bf=32, bd=32, vector_width=8), "o",
+             lambda: {"x": ints((8, 64, 64)), "w": ints((8, 64, 64))}, True),
         ]
-    return [(name, args, kw, out, mk()) for name, args, kw, out, mk in specs]
+    return [(name, args, kw, out, mk(), exact)
+            for name, args, kw, out, mk, exact in specs]
 
 
 def run_report(smoke: bool = False, out_path=None) -> dict:
@@ -77,7 +109,7 @@ def run_report(smoke: bool = False, out_path=None) -> dict:
         "autotune": {},
     }
 
-    for name, args, kw, out_name, inputs in _cases(smoke):
+    for name, args, kw, out_name, inputs, exact in _cases(smoke):
         for backend in BACKENDS:
             for factor in FACTORS:
                 g, _ = BUILDERS[name](*args, **kw)
@@ -95,7 +127,16 @@ def run_report(smoke: bool = False, out_path=None) -> dict:
                 wall_us = time_fn(kern.fn, inputs)
                 out = np.asarray(kern(inputs)[out_name])
                 gold = executor.run(kern.graph, dict(inputs))[out_name]
-                parity = bool(np.array_equal(out, gold))
+                if np.array_equal(out, gold):
+                    parity = "bitexact"
+                elif not exact and np.allclose(out, gold, rtol=1e-5,
+                                               atol=1e-4):
+                    # exp: numpy vs XLA differ by 1 ULP; benchmark shapes
+                    # accumulate it (tight bounds live in the tier-1
+                    # differential harness at tiny shapes)
+                    parity = "close"
+                else:
+                    parity = "MISMATCH"
                 tiers = sorted({v["tier"] for v in
                                 (kern.report.emission or {}).values()})
                 entry = {
@@ -107,7 +148,7 @@ def run_report(smoke: bool = False, out_path=None) -> dict:
                     "cache_cold": kern.report.served_from or "miss",
                     "cache_warm": kern2.report.served_from or "miss",
                     "emission": tiers,
-                    "parity": "bitexact" if parity else "MISMATCH",
+                    "parity": parity,
                 }
                 report["entries"].append(entry)
                 emit(f"compiler_{name}_{backend}_M{factor}", wall_us,

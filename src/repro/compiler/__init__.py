@@ -74,7 +74,13 @@ def _fn_signature(g: Graph) -> Tuple:
     miss."""
     sig = []
     for c in sorted(g.computes(), key=lambda n: n.name):
-        for label, fn in (("fn", c.fn), ("tile_fn", c.meta.get("tile_fn"))):
+        carry = c.meta.get("carry")
+        fns = [("fn", c.fn), ("tile_fn", c.meta.get("tile_fn"))]
+        if carry is not None:
+            sig.append((c.name, "carry", carry.signature()))
+            fns += [("carry_step", carry.step_fn),
+                    ("carry_final", carry.final_fn)]
+        for label, fn in fns:
             if fn is None:
                 sig.append((c.name, label, None))
                 continue
@@ -97,6 +103,20 @@ def _estimate_sig(estimate) -> Optional[Tuple]:
         return None
     return (estimate.block_bytes_in, estimate.block_bytes_out,
             estimate.flops_per_block, estimate.fixed_overhead_s)
+
+
+def _valid_plan(plan) -> bool:
+    """A usable cached plan must at least replay an integer pump factor —
+    anything else (truncated write, hand-edited JSON, schema drift) is
+    treated as a miss so a corrupted cache degrades to a cold compile
+    instead of crashing the build."""
+    if not isinstance(plan, dict):
+        return False
+    try:
+        int(plan["factor"])
+    except (KeyError, TypeError, ValueError):
+        return False
+    return True
 
 
 AUTOTUNE_CANDIDATES = (1, 2, 4, 8)
@@ -213,6 +233,8 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
                              pallas_mode=pallas_mode)
 
     plan = cache.get(key) if cache is not None else None
+    if plan is not None and not _valid_plan(plan):
+        plan = None         # corrupted entry: fall back to a cold compile
     if plan is not None:
         # replay the cached decision: no autotune search, no factor probing,
         # no re-measurement

@@ -35,7 +35,10 @@ from repro.core.symbolic import AccessPattern, Affine
 
 
 def _affine_sig(a: Affine):
-    return [list(map(list, a.terms)), a.const]
+    sig = [list(map(list, a.terms)), a.const]
+    if a.tables:        # group-indexed lookups are part of the structure
+        sig.append([[s, list(t)] for s, t in a.tables])
+    return sig
 
 
 def _access_sig(acc: Optional[AccessPattern]):
@@ -48,7 +51,17 @@ def _access_sig(acc: Optional[AccessPattern]):
     }
 
 
-_META_KEYS = ("factor", "pump_mode", "keep", "rate")
+_META_KEYS = ("factor", "pump_mode", "keep", "rate", "reduce", "axes")
+
+
+def _meta_sig(meta: dict) -> list:
+    sig = [[k, repr(meta[k])] for k in _META_KEYS if k in meta]
+    carry = meta.get("carry")
+    if carry is not None:
+        # CarrySpec's repr embeds function objects (unstable across
+        # processes); its signature() is the stable structural identity
+        sig.append(["carry", repr(carry.signature())])
+    return sig
 
 
 def graph_fingerprint(g: Graph) -> str:
@@ -59,8 +72,7 @@ def graph_fingerprint(g: Graph) -> str:
         nodes.append([
             name, n.kind.value, list(n.shape), n.dtype, n.space.value,
             n.elem_width, n.depth, n.vector_width, n.rate.value, n.pump,
-            bool(n.data_dependent_io),
-            [[k, repr(n.meta[k])] for k in _META_KEYS if k in n.meta],
+            bool(n.data_dependent_io), _meta_sig(n.meta),
         ])
     edges = [[e.src, e.dst, _access_sig(e.access), e.volume] for e in g.edges]
     blob = json.dumps([g.name, nodes, edges], sort_keys=True)
@@ -97,7 +109,8 @@ class CompileCache:
                 with open(self.path) as f:
                     data = json.load(f)
                 self._entries = dict(data.get("entries", {}))
-            except (OSError, ValueError):
+            except (OSError, ValueError, AttributeError, TypeError):
+                # truncated/corrupted/wrong-schema JSON: cold-compile path
                 self._entries = {}
         return self._entries
 
@@ -115,7 +128,7 @@ class CompileCache:
     # -- store API -----------------------------------------------------------
     def get(self, key: str) -> Optional[dict]:
         entry = self._load().get(key)
-        if entry is None:
+        if not isinstance(entry, dict):   # absent or corrupted value
             self.misses += 1
             return None
         self.hits += 1

@@ -19,7 +19,12 @@ Issuer /     temporal re-chunking: a ``fori_loop`` over the pump factor M
 Packer       copying one narrow phase per iteration (value identity — the
              paper's gearbox moves M narrow beats per wide transaction)
 Compute      the node's ``fn`` body applied to its FIFO-ordered operand
-             sequences; ``fn`` must be numpy/jax polymorphic (operator-based)
+             sequences; ``fn`` must be numpy/jax polymorphic (operator-based).
+             Sequential-carry computes (``meta['carry']``) lower to a
+             ``fori_loop`` over the step domain: per-step operand blocks are
+             ``dynamic_slice``-cut from the sequences and the loop-carried
+             state threads through the loop carry, resetting at each sweep
+             of the carry axis (see :func:`carry_sequence_apply`)
 Stream       value pass-through (FIFO order is the sequence order)
 ===========  ================================================================
 
@@ -27,6 +32,7 @@ Scatter targets with duplicate addresses are rejected at lowering time with
 :class:`LoweringError` — the reference executor's last-write-wins order is
 numpy-specific, and jax ``.at[].set`` makes no ordering guarantee, so a
 duplicate-address scatter would silently produce backend-dependent results.
+The error message names the offending producer→memory edge.
 """
 from __future__ import annotations
 
@@ -38,7 +44,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.executor import _toposort
+from repro.core.executor import _toposort, carry_layout, sink_access
 from repro.core.ir import Graph, NodeKind, PumpSpec
 
 
@@ -105,6 +111,101 @@ def _scatter(mem: jax.Array, idx: np.ndarray, seq) -> jax.Array:
     return jnp.reshape(flat.at[idx].set(vals), mem.shape)
 
 
+def _unflatten(step, extents):
+    """Decompose a flat (possibly traced) index into lexicographic coords."""
+    coords = []
+    rem = step
+    for ext in reversed(extents):
+        coords.append(rem % ext)
+        rem = rem // ext
+    return tuple(reversed(coords))
+
+
+def carry_sequence_apply(g: Graph, node) -> Callable[[Dict[str, Any]],
+                                                     Dict[str, Any]]:
+    """Lower one sequential-carry compute to a ``fori_loop`` over its step
+    domain, operating on whole FIFO sequences.
+
+    Returns ``run(bound) -> {"out0": seq, ...}`` where ``bound`` maps
+    ``in{k}`` to the gathered operand sequences.  Each iteration cuts one
+    block per operand out of its sequence, threads the carry state (reset at
+    the start of every sweep of the carry axis — the paper's fast-domain
+    accumulator staying inside the pumped region), and either appends one
+    output block per step or emits ``final_fn(state)`` once per sweep.
+    """
+    spec = node.meta["carry"]
+    n_steps, sweep, in_blocks, out_blocks, outer_syms = carry_layout(g, node)
+    outer_exts = node.domain.extents[:-1]
+    out_edges = g.out_edges(node.name)
+    n_out = len(out_edges)
+    out_dtypes = []
+    for e in out_edges:
+        mem, _acc = sink_access(g, e)
+        out_dtypes.append(mem.dtype if mem is not None else "float32")
+    out_sizes = [int(np.prod(blk)) if blk is not None else None
+                 for blk in out_blocks]
+    if any(sz is None for sz in out_sizes):
+        raise LoweringError(
+            f"carry compute {node.name!r}: output access does not decompose "
+            "into a blocked view")
+    n_emit = n_steps if spec.final_fn is None else n_steps // sweep
+
+    def run(bound: Dict[str, Any]) -> Dict[str, Any]:
+        seqs = [jnp.reshape(bound[f"in{k}"], (-1,))
+                for k in range(len(in_blocks))]
+        per_step = [s.shape[0] // n_steps for s in seqs]
+        init_state = tuple(jnp.asarray(a) for a in spec.init_arrays(jnp))
+        bufs = tuple(jnp.zeros(n_emit * out_sizes[k], dtype=out_dtypes[k])
+                     for k in range(n_out))
+
+        def body(i, st):
+            carry, bufs_t = st
+            pos = i % sweep
+            first = pos == 0
+            carry = tuple(jnp.where(first, ini, cur)
+                          for ini, cur in zip(init_state, carry))
+            blocks = []
+            for k, seq in enumerate(seqs):
+                blk = jax.lax.dynamic_slice(seq, (i * per_step[k],),
+                                            (per_step[k],))
+                if in_blocks[k] is not None:
+                    blk = jnp.reshape(blk, in_blocks[k])
+                blocks.append(blk)
+            kwargs = {}
+            if spec.pass_idx:
+                kwargs["idx"] = dict(
+                    step=pos, outer=_unflatten(i // sweep, outer_exts),
+                    pump=0)
+            carry2, souts = spec.step_fn(carry, *blocks, **kwargs)
+            if spec.final_fn is None:
+                bufs_t = tuple(
+                    jax.lax.dynamic_update_slice(
+                        buf,
+                        jnp.reshape(souts[f"out{k}"], (-1,)).astype(buf.dtype),
+                        (i * out_sizes[k],))
+                    for k, buf in enumerate(bufs_t))
+            else:
+                fouts = spec.final_fn(carry2)
+                j = i // sweep
+                last = pos == sweep - 1
+                bufs_t = tuple(
+                    jnp.where(
+                        last,
+                        jax.lax.dynamic_update_slice(
+                            buf,
+                            jnp.reshape(fouts[f"out{k}"],
+                                        (-1,)).astype(buf.dtype),
+                            (j * out_sizes[k],)),
+                        buf)
+                    for k, buf in enumerate(bufs_t))
+            return carry2, bufs_t
+
+        _carry, bufs = jax.lax.fori_loop(0, n_steps, body, (init_state, bufs))
+        return {f"out{k}": bufs[k] for k in range(n_out)}
+
+    return run
+
+
 def lower(g: Graph, jit: bool = True,
           warn: Optional[Callable[[str], None]] = None
           ) -> Callable[[Mapping[str, Any]], Dict[str, jax.Array]]:
@@ -133,8 +234,11 @@ def lower(g: Graph, jit: bool = True,
             idx_of[id(e)] = scatter_indices(e.access, dst.shape,
                                             where=f"{e.src}->{e.dst}")
 
+    carry_fns: Dict[str, Callable] = {}
     for comp in g.computes():
-        if comp.fn is None:
+        if comp.meta.get("carry") is not None:
+            carry_fns[comp.name] = carry_sequence_apply(g, comp)
+        elif comp.fn is None:
             raise LoweringError(
                 f"compute module {comp.name!r} has no fn body to lower")
 
@@ -180,7 +284,10 @@ def lower(g: Graph, jit: bool = True,
                         bound[f"in{k}"] = jnp.take(flat, idx_of[id(e)])
                     else:
                         bound[f"in{k}"] = edge_val[id(e)]
-                result = node.fn(**bound)
+                if name in carry_fns:
+                    result = carry_fns[name](bound)
+                else:
+                    result = node.fn(**bound)
                 if not isinstance(result, dict):
                     result = {"out0": result}
                 for k, e in enumerate(outs):

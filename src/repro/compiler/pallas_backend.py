@@ -38,6 +38,18 @@ it splits one of them) are *reduction* dimensions: the emitted kernel
 zero-initializes the output tile on their first visit and accumulates with
 ``+`` thereafter — computes marked ``meta['reduce']='add'`` return partial
 contributions per grid step.
+
+Sequential-carry regions (a compute with ``meta['carry']``, e.g. flash
+attention's online softmax or the SSD inter-chunk state) get a *carry-aware*
+emission: the carry axis stays the innermost sequential grid dimension, the
+loop-carried state threads through the fused loop (``blockloop`` carries it
+in the ``fori_loop`` state; ``pallas`` keeps it in VMEM scratch with
+``pl.when`` init/finalize — exactly the hand-written flash-attention
+schedule, now derived), and the region may write *multiple* output memories
+(the attention tile plus its running max/denominator).  Mode T splits the
+carry axis into wide transactions × M dependent beats; mode R narrows the
+block dimensions labelled by the compute's ``meta['axes']`` correspondence
+and runs each sub-tile through its own full sweep.
 """
 from __future__ import annotations
 
@@ -51,11 +63,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.executor import _toposort
-from repro.core.ir import Graph, NodeKind
+from repro.core.ir import CarrySpec, Graph, NodeKind
 from repro.core.symbolic import (Affine, BlockedAccess, blocked_access,
                                  narrow_block, split_temporal)
 
-from .lowering import LoweringError, _indices, scatter_indices
+from .lowering import (LoweringError, _indices, carry_sequence_apply,
+                       scatter_indices)
 
 PUMP_SYM = "_pump"
 _PASS_THROUGH = (NodeKind.STREAM, NodeKind.SYNC, NodeKind.ISSUER,
@@ -195,13 +208,31 @@ class RegionPlan:
     grid: Tuple[Tuple[str, int], ...]        # outermost → innermost
     reduce_syms: Tuple[str, ...]             # grid syms absent from output
     blocks: Dict[Tuple[str, int], BlockedAccess]   # (compute, operand idx)
-    out_compute: str
-    out_mem: str
-    out_block: BlockedAccess
+    # (compute, memory, blocked view) per region output, primary first
+    outputs: List[Tuple[str, str, BlockedAccess]]
     tile_fns: Dict[str, Callable]
     pump: int = 1                            # realized temporal factor
     mode: str = "T"
     pallas_ok: bool = True                   # block-unit maps + full coverage
+    # sequential-carry emission (single-compute regions only)
+    carry: Optional[CarrySpec] = None
+    carry_syms: Tuple[str, ...] = ()         # carry axis (+ mode-T _pump)
+    carry_narrow: Dict[int, Tuple[int, int]] = \
+        dataclasses.field(default_factory=dict)   # state idx -> (dim, M)
+    outer_syms: Tuple[str, ...] = ()         # step syms excluding the axis
+
+    # single-output convenience views (primary output)
+    @property
+    def out_compute(self) -> str:
+        return self.outputs[0][0]
+
+    @property
+    def out_mem(self) -> str:
+        return self.outputs[0][1]
+
+    @property
+    def out_block(self) -> BlockedAccess:
+        return self.outputs[0][2]
 
 
 def _tile_fn_of(g: Graph, name: str) -> Optional[Callable]:
@@ -216,19 +247,26 @@ def plan_region(g: Graph, region: Region,
                 warn: Callable[[str], None]) -> Optional[RegionPlan]:
     """Derive the blocked emission plan for a region, or None when the
     region must fall back to gather emission (reason passed to ``warn``)."""
-    if len(region.outputs) != 1:
-        warn(f"region {region.name}: {len(region.outputs)} output memories; "
-             "tile emission needs exactly 1 — using gather fallback")
+    carry: Optional[CarrySpec] = None
+    if len(region.computes) == 1:
+        carry = g.nodes[region.computes[0]].meta.get("carry")
+    elif any(g.nodes[c].meta.get("carry") for c in region.computes):
+        warn(f"region {region.name}: carry compute in a multi-compute "
+             "region; using gather fallback")
         return None
-    out_compute, out_mem, out_access = region.outputs[0]
-    if out_access is None:
+    if len(region.outputs) != 1 and carry is None:
+        warn(f"region {region.name}: {len(region.outputs)} output memories; "
+             "tile emission needs exactly 1 (or a carry compute) — using "
+             "gather fallback")
+        return None
+    if any(a is None for _c, _m, a in region.outputs):
         warn(f"region {region.name}: output access unknown")
         return None
 
     tile_fns = {}
     for c in region.computes:
         fn = _tile_fn_of(g, c)
-        if fn is None:
+        if fn is None and not (carry is not None and c == region.computes[0]):
             warn(f"region {region.name}: compute {c} has no per-tile body "
                  "(meta['tile_fn']); using gather fallback")
             return None
@@ -237,10 +275,15 @@ def plan_region(g: Graph, region: Region,
             return None
         tile_fns[c] = fn
 
-    out_block = blocked_access(out_access, g.nodes[out_mem].shape)
-    if out_block is None:
-        warn(f"region {region.name}: output access is not block-affine")
-        return None
+    outputs: List[Tuple[str, str, BlockedAccess]] = []
+    for c, mem, acc in region.outputs:
+        ba = blocked_access(acc, g.nodes[mem].shape)
+        if ba is None:
+            warn(f"region {region.name}: output access to {mem} is not "
+                 "block-affine")
+            return None
+        outputs.append((c, mem, ba))
+    out_block = outputs[0][2]
 
     blocks: Dict[Tuple[str, int], BlockedAccess] = {}
     extents: Dict[str, int] = dict(out_block.grid)
@@ -267,19 +310,99 @@ def plan_region(g: Graph, region: Region,
                     extra_syms.append(s)
             blocks[(c, k)] = acc
 
-    # canonical grid: output order first, reduction symbols innermost
+    # canonical grid: output order first, extra symbols innermost
     grid = tuple(out_block.grid) + tuple((s, extents[s]) for s in extra_syms)
     reduce_syms = tuple(extra_syms)
+    carry_syms: Tuple[str, ...] = ()
+    outer_syms: Tuple[str, ...] = ()
+    if carry is not None:
+        if not grid or grid[-1][0] != carry.axis:
+            warn(f"region {region.name}: carry axis {carry.axis!r} is not "
+                 "the innermost grid dimension; using gather fallback")
+            return None
+        if any(s != carry.axis for s in extra_syms):
+            warn(f"region {region.name}: reduction symbols "
+                 f"{[s for s in extra_syms if s != carry.axis]} alongside a "
+                 "carry axis; using gather fallback")
+            return None
+        carry_syms = (carry.axis,)
+        reduce_syms = ()
+        dom = g.nodes[region.computes[0]].domain
+        outer_syms = tuple(s for s in dom.symbols if s != carry.axis)
+
+    # full coverage is a *pre-temporal* property (the temporal rewrite
+    # below moves extents between grid and block but never the product)
+    covered = all(ba.covers(g.nodes[mem].shape) for _c, mem, ba in outputs)
     plan = RegionPlan(region=region, grid=grid, reduce_syms=reduce_syms,
-                      blocks=blocks, out_compute=out_compute,
-                      out_mem=out_mem, out_block=out_block,
-                      tile_fns=tile_fns, mode=region.mode)
-    _apply_temporal(plan, region.pump, warn)
-    plan.pallas_ok = _pallas_expressible(g, plan)
+                      blocks=blocks, outputs=outputs, tile_fns=tile_fns,
+                      mode=region.mode, carry=carry, carry_syms=carry_syms,
+                      outer_syms=outer_syms)
+    _apply_temporal(g, plan, region.pump, warn)
+    plan.pallas_ok = covered and _block_unit_ok(plan)
     return plan
 
 
-def _apply_temporal(plan: RegionPlan, factor: int,
+def _append_pump(plan: RegionPlan, factor: int) -> None:
+    """Insert the mode-R ``_pump`` grid axis.  For carry regions it goes
+    *outside* the carry symbols (each sub-tile runs its own full sweep —
+    interleaving sub-tiles inside a sweep would tear the carried state);
+    otherwise innermost, walking the output sub-tiles per grid step."""
+    if plan.carry_syms:
+        idx0 = min(i for i, (s, _e) in enumerate(plan.grid)
+                   if s in plan.carry_syms)
+        plan.grid = plan.grid[:idx0] + ((PUMP_SYM, factor),) \
+            + plan.grid[idx0:]
+    else:
+        plan.grid = tuple(plan.grid) + ((PUMP_SYM, factor),)
+
+
+def _narrow_labelled(g: Graph, plan: RegionPlan, factor: int,
+                     warn: Callable[[str], None]) -> bool:
+    """Mode-R narrowing via the compute's declared axis correspondence
+    (``meta['axes']``): narrow every block dimension labelled with the
+    compute's ``narrow`` axis — output(s), operands and carry state alike.
+    Exact by construction: a dimension is narrowed because the compute says
+    it corresponds, not because its size or grid symbol happens to match.
+    """
+    comp = plan.out_compute
+    axes = g.nodes[comp].meta.get("axes")
+    name = axes.get("narrow") if axes else None
+    if not name:
+        return False
+    out_maps, in_maps = axes.get("outs", ()), axes.get("ins", ())
+    carry_maps = axes.get("carry", ())
+
+    def dim_of(mapping) -> Optional[int]:
+        hits = [d for d, nm in mapping.items() if nm == name]
+        return hits[0] if hits else None
+
+    d0 = dim_of(out_maps[0]) if out_maps else None
+    if d0 is None or plan.outputs[0][2].block[d0] % factor:
+        warn(f"region {plan.region.name}: mode-R axis {name!r} not "
+             f"divisible by pump factor {factor}; temporal axis dropped")
+        return True     # handled (by dropping), do not fall back
+    new_outs = []
+    for oi, (c, mem, ba) in enumerate(plan.outputs):
+        d = dim_of(out_maps[oi]) if oi < len(out_maps) else None
+        new_outs.append((c, mem, narrow_block(ba, d, factor)
+                         if d is not None else ba))
+    plan.outputs = new_outs
+    narrowed = {}
+    for (c, k), acc in plan.blocks.items():
+        d = dim_of(in_maps[k]) if c == comp and k < len(in_maps) else None
+        narrowed[(c, k)] = narrow_block(acc, d, factor) \
+            if d is not None else acc
+    plan.blocks = narrowed
+    for si, mapping in enumerate(carry_maps):
+        d = dim_of(mapping)
+        if d is not None:
+            plan.carry_narrow[si] = (d, factor)
+    _append_pump(plan, factor)
+    plan.pump = factor
+    return True
+
+
+def _apply_temporal(g: Graph, plan: RegionPlan, factor: int,
                     warn: Callable[[str], None]) -> None:
     """Realize pump factor M as the innermost ``_pump`` grid axis."""
     if factor <= 1:
@@ -294,53 +417,66 @@ def _apply_temporal(plan: RegionPlan, factor: int,
                  f"({sym}) not divisible by pump factor {factor}; temporal "
                  "axis dropped")
             return
-        plan.blocks = {k: split_temporal(a, sym, factor)
-                       for k, a in plan.blocks.items()}
-        plan.out_block = split_temporal(plan.out_block, sym, factor)
+        try:
+            plan.blocks = {k: split_temporal(a, sym, factor)
+                           for k, a in plan.blocks.items()}
+            plan.outputs = [(c, mem, split_temporal(ba, sym, factor))
+                            for c, mem, ba in plan.outputs]
+        except ValueError as err:    # e.g. a group-indexed (table) symbol
+            warn(f"region {plan.region.name}: cannot split {sym}: {err}; "
+                 "temporal axis dropped")
+            return
         grid = [(s, e // factor if s == sym else e) for s, e in plan.grid]
         plan.grid = tuple(grid) + ((PUMP_SYM, factor),)
         if sym in plan.reduce_syms:
             plan.reduce_syms = plan.reduce_syms + (PUMP_SYM,)
-    else:   # mode R: narrow the output-carrying block dimension
-        out = plan.out_block
-        d_out = max((d for d, b in enumerate(out.block) if b > 1),
-                    default=None)
-        if d_out is None or out.block[d_out] % factor:
-            warn(f"region {plan.region.name}: mode-R output block not "
-                 f"divisible by pump factor {factor}; temporal axis dropped")
-            return
-        b_wide = out.block[d_out]
-        dep = frozenset(out.offsets[d_out].symbols())
-        plan.out_block = narrow_block(out, d_out, factor)
-        narrowed = {}
-        for key, acc in plan.blocks.items():
-            new = acc
-            for d in reversed(range(len(acc.block))):
-                if acc.block[d] == b_wide \
-                        and frozenset(acc.offsets[d].symbols()) == dep:
-                    new = narrow_block(acc, d, factor)
-                    break
-            narrowed[key] = new
-        plan.blocks = narrowed
-        plan.grid = tuple(plan.grid) + ((PUMP_SYM, factor),)
+        if sym in plan.carry_syms:
+            # the M beats of one wide transaction continue the sweep
+            plan.carry_syms = plan.carry_syms + (PUMP_SYM,)
+        plan.pump = factor
+        return
+    # ---- mode R: narrow the output-carrying block dimension(s) -------------
+    if _narrow_labelled(g, plan, factor, warn):
+        return
+    if plan.carry is not None:
+        warn(f"region {plan.region.name}: carry region without a mode-R "
+             "axis correspondence (meta['axes']); temporal axis dropped")
+        return
+    out = plan.out_block
+    d_out = max((d for d, b in enumerate(out.block) if b > 1),
+                default=None)
+    if d_out is None or out.block[d_out] % factor:
+        warn(f"region {plan.region.name}: mode-R output block not "
+             f"divisible by pump factor {factor}; temporal axis dropped")
+        return
+    b_wide = out.block[d_out]
+    dep = out.offsets[d_out]
+    c0, mem0, _ = plan.outputs[0]
+    plan.outputs = [(c0, mem0, narrow_block(out, d_out, factor))]
+    narrowed = {}
+    for key, acc in plan.blocks.items():
+        new = acc
+        for d in reversed(range(len(acc.block))):
+            # dataflow correspondence: the operand dimension walks the
+            # same offset expression as the output dimension being
+            # narrowed (symbol-set matching is not enough — see the
+            # mode-R regression tests)
+            if acc.block[d] == b_wide and acc.offsets[d] == dep:
+                new = narrow_block(acc, d, factor)
+                break
+        narrowed[key] = new
+    plan.blocks = narrowed
+    _append_pump(plan, factor)
     plan.pump = factor
 
 
-def _pallas_expressible(g: Graph, plan: RegionPlan) -> bool:
-    """True when every access has a block-unit index map and the output
-    tiling covers its memory (pallas output buffers start uninitialized)."""
-    if plan.out_block.block_unit_offsets() is None:
-        return False
-    covered = 1
-    for b in plan.out_block.block:
-        covered *= b
-    for s, e in plan.grid:
-        if s not in plan.reduce_syms:
-            covered *= e
-    if covered != int(np.prod(g.nodes[plan.out_mem].shape)):
-        return False
-    return all(a.block_unit_offsets() is not None
-               for a in plan.blocks.values())
+def _block_unit_ok(plan: RegionPlan) -> bool:
+    """True when every access (operands and outputs) has a block-unit index
+    map — the post-temporal half of pallas expressibility."""
+    return all(ba.block_unit_offsets() is not None
+               for _c, _m, ba in plan.outputs) \
+        and all(a.block_unit_offsets() is not None
+                for a in plan.blocks.values())
 
 
 # ---------------------------------------------------------------- emission --
@@ -348,7 +484,31 @@ def _affine_eval(a: Affine, env: Mapping[str, Any]):
     out = a.const
     for s, c in a.terms:
         out = out + c * env[s]
+    for s, t in a.tables:
+        # group-indexed lookup: static table, traced (grid) index
+        out = out + jnp.asarray(np.asarray(t, dtype=np.int32))[env[s]]
     return out
+
+
+def _carry_predicates(plan: RegionPlan, env: Mapping[str, Any]):
+    """(first, last, step, idx-kwargs) for one grid point of a carry plan."""
+    exts = dict(plan.grid)
+    first = functools.reduce(
+        jnp.logical_and, [env[s] == 0 for s in plan.carry_syms])
+    last = functools.reduce(
+        jnp.logical_and,
+        [env[s] == exts[s] - 1 for s in plan.carry_syms])
+    step = 0
+    for s in plan.carry_syms:
+        step = step * exts[s] + env[s]
+    kwargs = {}
+    if plan.carry.pass_idx:
+        kwargs["idx"] = dict(
+            step=step,
+            outer=tuple(env[s] for s in plan.outer_syms),
+            pump=env.get(PUMP_SYM, 0) if PUMP_SYM not in plan.carry_syms
+            else 0)
+    return first, last, kwargs
 
 
 def _run_tiles(plan: RegionPlan, get_block: Callable[[str, int], Any]) -> Any:
@@ -369,28 +529,83 @@ def _run_tiles(plan: RegionPlan, get_block: Callable[[str, int], Any]) -> Any:
 
 def emit_blockloop(g: Graph, plan: RegionPlan) -> Callable:
     """Tier ``blockloop``: the pallas schedule as a fused ``fori_loop`` with
-    element-unit ``dynamic_slice`` blocks — the jit fallback on CPU."""
+    element-unit ``dynamic_slice`` blocks — the jit fallback on CPU.  Carry
+    plans thread the loop-carried state through the ``fori_loop`` carry and
+    may write several output memories; region functions return
+    ``{memory name: array}``."""
     grid = plan.grid
     sizes = [e for _, e in grid]
     total = int(np.prod(sizes)) if sizes else 1
-    out_shape = g.nodes[plan.out_mem].shape
-    out_block = plan.out_block
 
-    def region_fn(mems: Dict[str, Any]) -> Any:
+    def unflatten(step) -> Dict[str, Any]:
+        env: Dict[str, Any] = {}
+        rem = step
+        for (sym, ext) in reversed(grid):
+            env[sym] = rem % ext
+            rem = rem // ext
+        return env
+
+    def make_get_block(mems, env):
+        def get_block(c, k):
+            acc = plan.blocks[(c, k)]
+            mem = mems[plan.region.bindings[c][k][1]]
+            starts = tuple(_affine_eval(a, env) for a in acc.offsets)
+            return jax.lax.dynamic_slice(mem, starts, acc.block)
+        return get_block
+
+    def write_block(buf, ba: BlockedAccess, env, tile):
+        tile = jnp.reshape(tile, ba.block).astype(buf.dtype)
+        starts = tuple(_affine_eval(a, env) for a in ba.offsets)
+        return jax.lax.dynamic_update_slice(buf, tile, starts)
+
+    if plan.carry is not None:
+        spec = plan.carry
+        mems_order = [mem for _c, mem, _ba in plan.outputs]
+
+        def region_fn(mems: Dict[str, Any]) -> Dict[str, Any]:
+            init_state = tuple(
+                jnp.asarray(a)
+                for a in spec.init_arrays(jnp, narrow=plan.carry_narrow))
+            bufs0 = tuple(mems[m] for m in mems_order)
+
+            def body(step, st):
+                carry, bufs = st
+                env = unflatten(step)
+                first, last, kwargs = _carry_predicates(plan, env)
+                carry = tuple(jnp.where(first, ini, cur)
+                              for ini, cur in zip(init_state, carry))
+                get_block = make_get_block(mems, env)
+                blocks = [get_block(plan.out_compute, k)
+                          for k in range(
+                              len(plan.region.bindings[plan.out_compute]))]
+                carry2, souts = spec.step_fn(carry, *blocks, **kwargs)
+                if spec.final_fn is None:
+                    bufs = tuple(
+                        write_block(buf, ba, env, souts[f"out{k}"])
+                        for k, (buf, (_c, _m, ba))
+                        in enumerate(zip(bufs, plan.outputs)))
+                else:
+                    fouts = spec.final_fn(carry2)
+                    bufs = tuple(
+                        jnp.where(last,
+                                  write_block(buf, ba, env, fouts[f"out{k}"]),
+                                  buf)
+                        for k, (buf, (_c, _m, ba))
+                        in enumerate(zip(bufs, plan.outputs)))
+                return carry2, bufs
+
+            _carry, bufs = jax.lax.fori_loop(0, total, body,
+                                             (init_state, bufs0))
+            return dict(zip(mems_order, bufs))
+
+        return region_fn
+
+    out_mem, out_block = plan.out_mem, plan.out_block
+
+    def region_fn(mems: Dict[str, Any]) -> Dict[str, Any]:
         def body(step, buf):
-            env: Dict[str, Any] = {}
-            rem = step
-            for (sym, ext) in reversed(grid):
-                env[sym] = rem % ext
-                rem = rem // ext
-
-            def get_block(c, k):
-                acc = plan.blocks[(c, k)]
-                mem = mems[plan.region.bindings[c][k][1]]
-                starts = tuple(_affine_eval(a, env) for a in acc.offsets)
-                return jax.lax.dynamic_slice(mem, starts, acc.block)
-
-            tile = _run_tiles(plan, get_block)
+            env = unflatten(step)
+            tile = _run_tiles(plan, make_get_block(mems, env))
             tile = jnp.reshape(tile, out_block.block).astype(buf.dtype)
             starts = tuple(_affine_eval(a, env) for a in out_block.offsets)
             if plan.reduce_syms:
@@ -401,15 +616,17 @@ def emit_blockloop(g: Graph, plan: RegionPlan) -> Callable:
                 tile = jnp.where(first, tile, prev + tile)
             return jax.lax.dynamic_update_slice(buf, tile, starts)
 
-        init = mems[plan.out_mem]
-        return jax.lax.fori_loop(0, total, body, init)
+        init = mems[out_mem]
+        return {out_mem: jax.lax.fori_loop(0, total, body, init)}
 
     return region_fn
 
 
 def emit_pallas(g: Graph, plan: RegionPlan, interpret: bool) -> Callable:
     """Tier ``pallas``: one ``pl.pallas_call`` for the whole region, block
-    specs and index maps derived from the symbolic access patterns."""
+    specs and index maps derived from the symbolic access patterns.  Carry
+    plans keep their state in VMEM scratch with ``pl.when``-gated sweep
+    init/finalize — the hand-written flash-attention schedule, derived."""
     from jax.experimental import pallas as pl
 
     grid_sizes = tuple(e for _, e in plan.grid)
@@ -426,18 +643,102 @@ def emit_pallas(g: Graph, plan: RegionPlan, interpret: bool) -> Callable:
     def index_map_for(acc: BlockedAccess):
         offs = acc.block_unit_offsets()
 
+        def eval_scalar(a: Affine, env):
+            # pallas index maps must not capture constant arrays, so
+            # group-indexed tables unroll to a select-sum over scalar
+            # comparisons instead of a gather (tables are small: per-head
+            # or per-tile ids)
+            out = a.const
+            for s, c in a.terms:
+                out = out + c * env[s]
+            for s, t in a.tables:
+                for j, v in enumerate(t):
+                    if v:
+                        out = out + v * (env[s] == j)
+            return out
+
         def index_map(*gids):
             env = dict(zip(syms, gids))
-            return tuple(_affine_eval(a, env) for a in offs)
+            return tuple(eval_scalar(a, env) for a in offs)
 
         return index_map
 
     in_specs = [pl.BlockSpec(plan.blocks[key].block,
                              index_map_for(plan.blocks[key]))
                 for key in mem_order]
-    out_spec = pl.BlockSpec(plan.out_block.block,
-                            index_map_for(plan.out_block))
-    out_node = g.nodes[plan.out_mem]
+    out_specs = [pl.BlockSpec(ba.block, index_map_for(ba))
+                 for _c, _m, ba in plan.outputs]
+    out_shapes = [jax.ShapeDtypeStruct(g.nodes[mem].shape,
+                                       g.nodes[mem].dtype)
+                  for _c, mem, _ba in plan.outputs]
+    mems_order = [mem for _c, mem, _ba in plan.outputs]
+    n_out = len(plan.outputs)
+
+    if plan.carry is not None:
+        from jax.experimental.pallas import tpu as pltpu
+
+        spec = plan.carry
+        state_shapes = []
+        for i, entry in enumerate(spec.state):
+            shape = entry[0]
+            if i in plan.carry_narrow:
+                d, factor = plan.carry_narrow[i]
+                shape = tuple(s // factor if j == d else s
+                              for j, s in enumerate(shape))
+            state_shapes.append((shape, entry[1]))
+        scratch_shapes = [pltpu.VMEM(shape, jnp.dtype(dt))
+                          for shape, dt in state_shapes]
+        # scalar fills, not captured init arrays: a pallas kernel body must
+        # not close over constant arrays
+        fills = [float(entry[2]) if len(entry) > 2 else 0.0
+                 for entry in spec.state]
+
+        def kernel(*refs):
+            in_refs = refs[:len(mem_order)]
+            out_refs = refs[len(mem_order):len(mem_order) + n_out]
+            st_refs = refs[len(mem_order) + n_out:]
+            env = {s: pl.program_id(i) for i, s in enumerate(syms)}
+            first, last, kwargs = _carry_predicates(plan, env)
+
+            @pl.when(first)
+            def _init():
+                for ref, fill in zip(st_refs, fills):
+                    ref[...] = jnp.full(ref.shape, fill, ref.dtype)
+
+            blocks = [r[...] for r in in_refs]
+            carry = tuple(r[...] for r in st_refs)
+            carry2, souts = spec.step_fn(carry, *blocks, **kwargs)
+            for ref, val in zip(st_refs, carry2):
+                ref[...] = val
+            if spec.final_fn is None:
+                for k, ref in enumerate(out_refs):
+                    ref[...] = jnp.reshape(
+                        souts[f"out{k}"],
+                        plan.outputs[k][2].block).astype(ref.dtype)
+            else:
+                fouts = spec.final_fn(carry2)
+
+                @pl.when(last)
+                def _finish():
+                    for k, ref in enumerate(out_refs):
+                        ref[...] = jnp.reshape(
+                            fouts[f"out{k}"],
+                            plan.outputs[k][2].block).astype(ref.dtype)
+
+        def region_fn(mems: Dict[str, Any]) -> Dict[str, Any]:
+            args = [mems[plan.region.bindings[c][k][1]] for c, k in mem_order]
+            outs = pl.pallas_call(
+                kernel,
+                grid=grid_sizes,
+                in_specs=in_specs,
+                out_specs=out_specs,
+                out_shape=out_shapes,
+                scratch_shapes=scratch_shapes,
+                interpret=interpret,
+            )(*args)
+            return dict(zip(mems_order, outs))
+
+        return region_fn
 
     def kernel(*refs):
         in_refs, o_ref = refs[:-1], refs[-1]
@@ -458,45 +759,57 @@ def emit_pallas(g: Graph, plan: RegionPlan, interpret: bool) -> Callable:
         else:
             o_ref[...] = tile
 
-    def region_fn(mems: Dict[str, Any]) -> Any:
+    def region_fn(mems: Dict[str, Any]) -> Dict[str, Any]:
         args = [mems[plan.region.bindings[c][k][1]] for c, k in mem_order]
-        return pl.pallas_call(
+        out = pl.pallas_call(
             kernel,
             grid=grid_sizes,
             in_specs=in_specs,
-            out_specs=out_spec,
-            out_shape=jax.ShapeDtypeStruct(out_node.shape, out_node.dtype),
+            out_specs=out_specs[0],
+            out_shape=out_shapes[0],
             interpret=interpret,
         )(*args)
+        return {mems_order[0]: out}
 
     return region_fn
 
 
 def emit_gather(g: Graph, region: Region) -> Callable:
     """Tier ``gather``: region-level fallback — one fused gather →
-    compute-chain → scatter, addresses frozen from the access patterns."""
+    compute-chain → scatter, addresses frozen from the access patterns.
+    Multi-output computes scatter each named output; carry computes run
+    the ``fori_loop`` sequence form shared with the per-node lowering."""
+    carry_fns: Dict[str, Callable] = {}
     idx_in: Dict[Tuple[str, int], np.ndarray] = {}
     for c in region.computes:
-        if g.nodes[c].fn is None:
+        if g.nodes[c].meta.get("carry") is not None:
+            carry_fns[c] = carry_sequence_apply(g, g.nodes[c])
+        elif g.nodes[c].fn is None:
             raise LoweringError(
                 f"compute module {c!r} has no fn body to lower")
-        if len(g.out_edges(c)) > 1:
-            raise LoweringError(
-                f"compute module {c!r} has multiple outputs; the fused "
-                "region lowering binds out0 only — use backend='jax'")
         for k, src in enumerate(region.bindings[c]):
             if src[0] == "mem":
                 if src[2] is None:
                     raise LoweringError(
                         f"operand {k} of {c} has no access pattern")
                 idx_in[(c, k)] = _indices(src[2], g.nodes[src[1]].shape)
-    idx_out = {}
-    for c, mem, access in region.outputs:
-        idx_out[(c, mem)] = scatter_indices(access, g.nodes[mem].shape,
-                                            where=f"{c}->{mem}")
+    # per compute: (out-edge position, sink memory, scatter indices) —
+    # keyed by edge position so output name binding (out0, out1, ...)
+    # matches the executor's edge-order convention
+    idx_out: Dict[str, List[Tuple[int, str, np.ndarray]]] = {}
+    for c in region.computes:
+        for kpos, e in enumerate(g.out_edges(c)):
+            sunk = _trace_to_sink(g, e)
+            if sunk is not None:
+                mem, access = sunk
+                idx_out.setdefault(c, []).append(
+                    (kpos, mem,
+                     scatter_indices(access, g.nodes[mem].shape,
+                                     where=f"{c}->{mem}")))
 
     def region_fn(mems: Dict[str, Any]) -> Dict[str, Any]:
         tiles: Dict[str, Any] = {}
+        results: Dict[str, Dict[str, Any]] = {}
         for c in region.computes:
             bound = {}
             for k, src in enumerate(region.bindings[c]):
@@ -505,16 +818,22 @@ def emit_gather(g: Graph, region: Region) -> Callable:
                     bound[f"in{k}"] = jnp.take(flat, idx_in[(c, k)])
                 else:
                     bound[f"in{k}"] = tiles[src[1]]
-            r = g.nodes[c].fn(**bound)
-            tiles[c] = r["out0"] if isinstance(r, dict) else r
+            if c in carry_fns:
+                r = carry_fns[c](bound)
+            else:
+                r = g.nodes[c].fn(**bound)
+            if not isinstance(r, dict):
+                r = {"out0": r}
+            results[c] = r
+            tiles[c] = r["out0"]
         outs = {}
-        for c, mem, _access in region.outputs:
-            target = mems[mem]
-            vals = jnp.reshape(jnp.asarray(tiles[c]), (-1,)) \
-                .astype(target.dtype)
-            flat = jnp.reshape(target, (-1,))
-            outs[mem] = jnp.reshape(flat.at[idx_out[(c, mem)]].set(vals),
-                                    target.shape)
+        for c, sinks in idx_out.items():
+            for kpos, mem, idx in sinks:
+                target = outs.get(mem, mems[mem])
+                vals = jnp.reshape(jnp.asarray(results[c][f"out{kpos}"]),
+                                   (-1,)).astype(target.dtype)
+                flat = jnp.reshape(target, (-1,))
+                outs[mem] = jnp.reshape(flat.at[idx].set(vals), target.shape)
         return outs
 
     return region_fn
@@ -555,7 +874,7 @@ def lower_pallas(g: Graph, jit: bool = True, pallas_mode: str = "auto",
             tier = "pallas"
             fn = emit_pallas(g, plan, interpret=interpret)
         elif plan is not None:
-            tier = "blockloop"
+            tier = "carryloop" if plan.carry is not None else "blockloop"
             fn = emit_blockloop(g, plan)
         else:
             tier = "gather"
@@ -567,6 +886,8 @@ def lower_pallas(g: Graph, jit: bool = True, pallas_mode: str = "auto",
                 "mode": region.mode,
                 "grid": [list(d) for d in plan.grid] if plan else None,
                 "reduce": list(plan.reduce_syms) if plan else None,
+                "carry": list(plan.carry_syms) if plan else None,
+                "outputs": [mem for _c, mem, _a in region.outputs],
             }
         emitted.append((region, tier, fn))
 
@@ -579,13 +900,8 @@ def lower_pallas(g: Graph, jit: bool = True, pallas_mode: str = "auto",
                 mems[n.name] = jnp.asarray(inputs[n.name], dtype=n.dtype)
             else:
                 mems[n.name] = jnp.zeros(n.shape, dtype=n.dtype)
-        for region, tier, fn in emitted:
-            if tier == "gather":
-                mems.update(fn(mems))
-            else:
-                # single-output tile emission
-                out_mem = region.outputs[0][1]
-                mems[out_mem] = fn(mems)
+        for _region, _tier, fn in emitted:
+            mems.update(fn(mems))
         return mems
 
     return jax.jit(run_fn) if jit else run_fn

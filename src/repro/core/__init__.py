@@ -9,8 +9,8 @@ Public API:
     )
 """
 from .symbolic import Affine, AccessPattern, Domain, sequence_equivalent
-from .ir import (Edge, Graph, Node, NodeKind, PumpSpec, RateDomain, Space,
-                 effective_rate)
+from .ir import (CarrySpec, Edge, Graph, Node, NodeKind, PumpSpec,
+                 RateDomain, Space, effective_rate)
 from .streaming import apply_streaming, streamable_subgraph, StreamingReport
 from .multipump import (apply_multipump, check_multipump, PumpReport,
                         throughput_model, pump_spec_for)
@@ -34,7 +34,8 @@ def __getattr__(name):
 
 __all__ = [
     "Affine", "AccessPattern", "Domain", "sequence_equivalent",
-    "Edge", "Graph", "Node", "NodeKind", "PumpSpec", "RateDomain", "Space",
+    "CarrySpec", "Edge", "Graph", "Node", "NodeKind", "PumpSpec",
+    "RateDomain", "Space",
     "effective_rate", "apply_streaming", "streamable_subgraph",
     "StreamingReport", "apply_multipump", "check_multipump", "PumpReport",
     "throughput_model", "pump_spec_for", "KernelEstimate", "best_pump_factor",

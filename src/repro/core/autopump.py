@@ -17,11 +17,11 @@ or identifies the streamable subgraph by hand.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .ir import Graph, PumpSpec
+from .ir import CarrySpec, Graph, PumpSpec
 from .multipump import PumpReport
 from .pump_plan import KernelEstimate, VMEM_BYTES
 from .symbolic import AccessPattern, Affine, Domain
@@ -62,6 +62,11 @@ def _xp(a):
 # the access pattern) to one output block, while fn maps whole FIFO
 # sequences.  meta['reduce']='add' marks tile_fn outputs as partial
 # contributions accumulated over grid dims absent from the output access.
+# Kernels with a loop-carried dependency declare meta['carry'] (a CarrySpec:
+# per-step step_fn + per-sweep final_fn over block-shaped operands) instead
+# of fn/tile_fn, and meta['axes'] labels each operand/output/state dimension
+# with a logical axis so mode-R narrowing follows the dataflow
+# correspondence rather than a size/symbol heuristic.
 def _vecadd_graph(n: int, vector_width: int = 8, itemsize: int = 4):
     v = vector_width
     g = Graph("vecadd")
@@ -207,64 +212,352 @@ def _floyd_graph(n: int, itemsize: int = 4):
     return g, est
 
 
+NEG_INF = -1e30
+
+
+def _blk(sym: str, size: int, nblocks: int) -> Affine:
+    """Block-offset expression ``sym*size``; collapses to the constant 0
+    when the axis has a single block (a symbolically nonzero expression on a
+    width-spanned dimension would defeat blocked-view derivation)."""
+    return Affine.of(sym, size) if nblocks > 1 else Affine.constant(0)
+
+
 def _flash_graph(b: int, h: int, s: int, t: int, d: int, bq: int = 128,
-                 bkv: int = 128, itemsize: int = 2):
+                 bkv: int = 128, itemsize: int = 2, hkv: Optional[int] = None,
+                 causal: bool = False, scale: Optional[float] = None,
+                 dtype: str = "float32", vector_width: Optional[int] = None):
+    """Flash attention as an executable carry graph.
+
+    The online-softmax recurrence over KV blocks is the sequential-carry
+    axis (``ji``); the compute is *multi-output* — the attention tile plus
+    its running max and denominator land in three memories (``o``, ``m``,
+    ``l``).  GQA head folding is a group-indexed table on the KV head dim.
+    """
+    hkv = hkv or h
     g = Graph("flash_attention")
-    g.memory("kv", (t, 2 * d))
-    g.memory("o", (s, d))
-    dom = Domain.of(("j", 0, max(t // bkv, 1)))
-    acc = AccessPattern(dom, (Affine.of("j", bkv), Affine.constant(0)),
-                        width=bkv)
-    g.compute("online_softmax", dom, vector_width=bq * d // 128 or 1)
-    g.connect("kv", "online_softmax", acc)
-    out_dom = Domain.of(("j", 0, 1))
-    g.connect("online_softmax", "o",
-              AccessPattern(out_dom, (Affine.constant(0),
-                                      Affine.constant(0)), width=bq))
+    g.memory("q", (b, h, s, d), dtype=dtype)
+    g.memory("k", (b, hkv, t, d), dtype=dtype)
+    g.memory("v", (b, hkv, t, d), dtype=dtype)
+    g.memory("o", (b, h, s, d), dtype=dtype)
+    g.memory("m", (b, h, s))
+    g.memory("l", (b, h, s))
+    bq, bkv = min(bq, s), min(bkv, t)
+    if scale is None:
+        scale = d ** -0.5
+    if vector_width is None:
+        vector_width = bq * d // 128 or 1
     est = KernelEstimate(block_bytes_in=2 * bkv * d * itemsize,
                          block_bytes_out=0.0,
                          flops_per_block=4.0 * bq * bkv * d)
+
+    nq, nj = s // bq, t // bkv
+    dom = Domain.of(("bi", 0, b), ("hi", 0, h), ("qi", 0, max(nq, 1)),
+                    ("ji", 0, max(nj, 1)))
+    if s % bq or t % bkv or h % hkv:
+        # corner-sampled transaction schedule: planning/legality only
+        acc_kv = AccessPattern(dom, (Affine.of("bi"), Affine.of("hi"),
+                                     Affine.of("ji", bkv),
+                                     Affine.constant(0)), width=1)
+        acc_o = AccessPattern(dom, (Affine.of("bi"), Affine.of("hi"),
+                                    Affine.of("qi", bq), Affine.constant(0)),
+                              width=1)
+        g.compute("online_softmax", dom, vector_width=vector_width)
+        g.connect("q", "online_softmax", acc_o)
+        g.connect("k", "online_softmax", acc_kv)
+        g.connect("v", "online_softmax", acc_kv)
+        g.connect("online_softmax", "o", acc_o)
+        return g, est
+
+    group = h // hkv
+    head = Affine.of("hi") if group == 1 else \
+        Affine.table("hi", [i // group for i in range(h)])
+    dom_q = Domain.of(("bi", 0, b), ("hi", 0, h), ("qi", 0, nq),
+                      ("ji", 0, nj), ("r", 0, bq))
+    acc_q = AccessPattern(dom_q, (Affine.of("bi"), Affine.of("hi"),
+                                  _blk("qi", bq, nq) + Affine.of("r"),
+                                  Affine.constant(0)), width=d)
+    dom_kv = Domain.of(("bi", 0, b), ("hi", 0, h), ("qi", 0, nq),
+                       ("ji", 0, nj), ("r", 0, bkv))
+    acc_kv = AccessPattern(dom_kv, (Affine.of("bi"), head,
+                                    _blk("ji", bkv, nj) + Affine.of("r"),
+                                    Affine.constant(0)), width=d)
+    dom_o = Domain.of(("bi", 0, b), ("hi", 0, h), ("qi", 0, nq),
+                      ("r", 0, bq))
+    acc_o = AccessPattern(dom_o, (Affine.of("bi"), Affine.of("hi"),
+                                  _blk("qi", bq, nq) + Affine.of("r"),
+                                  Affine.constant(0)), width=d)
+    acc_ml = AccessPattern(dom_o, (Affine.of("bi"), Affine.of("hi"),
+                                   _blk("qi", bq, nq) + Affine.of("r")),
+                           width=1)
+
+    def step_fn(carry, q_blk, k_blk, v_blk, idx=None):
+        xp = _xp(q_blk)
+        m_run, l_run, acc = carry
+        f32 = xp.float32
+        q2 = q_blk.reshape(q_blk.shape[-2], q_blk.shape[-1]).astype(f32)
+        k2 = k_blk.reshape(k_blk.shape[-2], k_blk.shape[-1]).astype(f32)
+        v2 = v_blk.reshape(v_blk.shape[-2], v_blk.shape[-1]).astype(f32)
+        sc = (q2 * f32(scale)) @ k2.T                       # (bq', bkv)
+        if causal:
+            q_pos = idx["outer"][2] * bq + idx["pump"] * q2.shape[0] \
+                + xp.arange(q2.shape[0])[:, None]
+            k_pos = idx["step"] * bkv + xp.arange(k2.shape[0])[None, :]
+            sc = xp.where(q_pos >= k_pos, sc, f32(NEG_INF))
+        m_new = xp.maximum(m_run, sc.max(axis=-1, keepdims=True))
+        alpha = xp.exp(m_run - m_new)
+        prob = xp.exp(sc - m_new)
+        l_new = l_run * alpha + prob.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + prob @ v2
+        return (m_new, l_new, acc_new), None
+
+    def final_fn(carry):
+        xp = _xp(carry[0])
+        m_run, l_run, acc = carry
+        l_safe = xp.where(l_run == 0.0, xp.float32(1.0), l_run)
+        o_blk = acc / l_safe
+        return {"out0": o_blk[None, None],            # (1, 1, bq', d)
+                "out1": m_run[None, None, :, 0],      # (1, 1, bq')
+                "out2": l_run[None, None, :, 0]}
+
+    g.compute(
+        "online_softmax", dom, vector_width=vector_width,
+        carry=CarrySpec(
+            axis="ji",
+            state=(((bq, 1), "float32", NEG_INF), ((bq, 1), "float32"),
+                   ((bq, d), "float32")),
+            step_fn=step_fn, final_fn=final_fn, pass_idx=True),
+        axes=dict(ins=({2: "q", 3: "d"}, {2: "kv", 3: "d"}, {2: "kv", 3: "d"}),
+                  outs=({2: "q", 3: "d"}, {2: "q"}, {2: "q"}),
+                  carry=({0: "q"}, {0: "q"}, {0: "q", 1: "d"}),
+                  narrow="q"))
+    g.connect("q", "online_softmax", acc_q)
+    g.connect("k", "online_softmax", acc_kv)
+    g.connect("v", "online_softmax", acc_kv)
+    g.connect("online_softmax", "o", acc_o)
+    g.connect("online_softmax", "m", acc_ml)
+    g.connect("online_softmax", "l", acc_ml)
     return g, est
 
 
 def _ssd_graph(b: int, l: int, h: int, p: int, n: int, chunk: int = 64,
-               itemsize: int = 2):
+               itemsize: int = 2, n_groups: Optional[int] = None,
+               dtype: str = "float32", vector_width: Optional[int] = None):
+    """Mamba-2 SSD chunked scan as an executable carry graph.
+
+    The inter-chunk state recurrence is the sequential-carry axis (``ci``);
+    each step consumes one chunk of (x, dt, B, C), emits one chunk of y, and
+    threads the (n, p) state.  Group→head folding (B/C shared by ``h/g``
+    heads) is a group-indexed table on the head symbol.
+    """
+    grp = n_groups or h
     g = Graph("ssd_scan")
-    g.memory("xs", (l, p))
-    g.memory("ys", (l, p))
-    dom = Domain.of(("c", 0, max(l // chunk, 1)))
-    acc = AccessPattern(dom, (Affine.of("c", chunk), Affine.constant(0)),
-                        width=chunk)
-    g.compute("chunk_update", dom, vector_width=chunk * p // 128 or 1)
-    g.connect("xs", "chunk_update", acc)
-    g.connect("chunk_update", "ys", acc)
+    g.memory("x", (b, l, h, p), dtype=dtype)
+    g.memory("dt", (b, l, h), dtype=dtype)
+    g.memory("a", (h,), dtype=dtype)
+    g.memory("bmat", (b, l, grp, n), dtype=dtype)
+    g.memory("cmat", (b, l, grp, n), dtype=dtype)
+    g.memory("y", (b, l, h, p), dtype=dtype)
+    chunk = min(chunk, l)
+    if vector_width is None:
+        vector_width = chunk * p // 128 or 1
     est = KernelEstimate(block_bytes_in=chunk * (p + 1 + 2 * n) * itemsize,
                          block_bytes_out=chunk * p * itemsize,
                          flops_per_block=2.0 * chunk * chunk * (n + p))
+
+    nc = l // chunk
+    dom = Domain.of(("bi", 0, b), ("hi", 0, h), ("ci", 0, max(nc, 1)))
+    if l % chunk or h % grp:
+        acc = AccessPattern(dom, (Affine.of("bi"), Affine.of("ci", chunk),
+                                  Affine.of("hi"), Affine.constant(0)),
+                            width=1)
+        g.compute("chunk_update", dom, vector_width=vector_width)
+        g.connect("x", "chunk_update", acc)
+        g.connect("chunk_update", "y", acc)
+        return g, est
+
+    hpg = h // grp
+    gexpr = Affine.of("hi") if hpg == 1 else \
+        Affine.table("hi", [i // hpg for i in range(h)])
+    dom_r = Domain.of(("bi", 0, b), ("hi", 0, h), ("ci", 0, nc),
+                      ("r", 0, chunk))
+    row = _blk("ci", chunk, nc) + Affine.of("r")
+    acc_x = AccessPattern(dom_r, (Affine.of("bi"), row, Affine.of("hi"),
+                                  Affine.constant(0)), width=p)
+    acc_dt = AccessPattern(dom_r, (Affine.of("bi"), row, Affine.of("hi")),
+                           width=1)
+    acc_a = AccessPattern(dom, (Affine.of("hi"),), width=1)
+    acc_bc = AccessPattern(dom_r, (Affine.of("bi"), row, gexpr,
+                                   Affine.constant(0)), width=n)
+
+    def step_fn(carry, x_blk, dt_blk, a_blk, b_blk, c_blk):
+        xp = _xp(x_blk)
+        f32 = xp.float32
+        (state,) = carry                                   # (n, p')
+        xc = x_blk.reshape(x_blk.shape[1], x_blk.shape[-1]).astype(f32)
+        dtc = dt_blk.reshape(-1).astype(f32)               # (c,)
+        a_dec = a_blk.reshape(-1)[0].astype(f32)
+        bc_ = b_blk.reshape(b_blk.shape[1], b_blk.shape[-1]).astype(f32)
+        cc_ = c_blk.reshape(c_blk.shape[1], c_blk.shape[-1]).astype(f32)
+        logp = xp.cumsum(a_dec * dtc)                      # (c,) running decay
+        y_carry = xp.exp(logp)[:, None] * (cc_ @ state)    # (c, p')
+        cb = cc_ @ bc_.T                                   # (c, c)
+        ratio = logp[:, None] - logp[None, :]
+        t_idx = xp.arange(dtc.shape[0])
+        mask = t_idx[:, None] >= t_idx[None, :]
+        gmat = xp.where(mask,
+                        cb * xp.exp(xp.where(mask, ratio, f32(0.0)))
+                        * dtc[None, :], f32(0.0))
+        y = y_carry + gmat @ xc
+        w = xp.exp(logp[-1] - logp) * dtc                  # (c,)
+        state = state * xp.exp(logp[-1]) + (bc_ * w[:, None]).T @ xc
+        return (state,), {"out0": y[None, :, None, :]}     # (1, c, 1, p')
+
+    g.compute(
+        "chunk_update", dom, vector_width=vector_width,
+        carry=CarrySpec(axis="ci", state=(((n, p), "float32"),),
+                        step_fn=step_fn),
+        axes=dict(ins=({3: "p"}, {}, {}, {}, {}),
+                  outs=({3: "p"},),
+                  carry=({1: "p"},),
+                  narrow="p"))
+    g.connect("x", "chunk_update", acc_x)
+    g.connect("dt", "chunk_update", acc_dt)
+    g.connect("a", "chunk_update", acc_a)
+    g.connect("bmat", "chunk_update", acc_bc)
+    g.connect("cmat", "chunk_update", acc_bc)
+    g.connect("chunk_update", "y", acc_x)
     return g, est
 
 
 def _grouped_gemm_graph(e: int, c: int, d: int, f: int, bc: int = 128,
-                        bf: int = 128, bd: int = 128, itemsize: int = 2):
-    g = Graph("grouped_gemm")
-    g.memory("x", (e, c, d))
-    g.memory("w", (e, d, f))
-    g.memory("o", (e, c, f))
-    dom = Domain.of(("e", 0, e), ("i", 0, max(c // bc, 1)),
-                    ("j", 0, max(f // bf, 1)), ("k", 0, max(d // bd, 1)))
-    acc_x = AccessPattern(dom, (Affine.of("e"), Affine.of("i", bc),
-                                Affine.of("k", bd)))
-    acc_w = AccessPattern(dom, (Affine.of("e"), Affine.of("k", bd),
-                                Affine.of("j", bf)))
-    acc_o = AccessPattern(dom, (Affine.of("e"), Affine.of("i", bc),
-                                Affine.of("j", bf)))
-    g.compute("expert_tile", dom, vector_width=bc * bf // (128 * 128) or 1)
-    g.connect("x", "expert_tile", acc_x)
-    g.connect("w", "expert_tile", acc_w)
-    g.connect("expert_tile", "o", acc_o)
+                        bf: int = 128, bd: int = 128, itemsize: int = 2,
+                        group_sizes: Optional[Sequence[int]] = None,
+                        dtype: str = "float32",
+                        vector_width: Optional[int] = None):
+    """Grouped (per-expert) GEMM as an executable IR graph.
+
+    Dense form (``group_sizes=None``): ``o[e] = x[e] @ w[e]`` with the
+    expert axis as the outermost grid symbol — a derivable BlockSpec per
+    operand, the contraction accumulated over the ``ki`` reduction symbol.
+
+    Ragged form: ``x`` is a row-major concatenation of per-expert row
+    groups (``sum(group_sizes)`` rows).  The iteration flattens to a *tile
+    list*: group-indexed tables map each row-tile id to its expert slab and
+    its row offset (the megablocks idiom) — still a derivable BlockSpec,
+    via table-affine index maps.  Each group size must divide the row
+    block ``bc``.
+    """
+    bc, bf, bd = min(bc, c), min(bf, f), min(bd, d)
+    if vector_width is None:
+        vector_width = bc * bf // (128 * 128) or 1
     est = KernelEstimate(block_bytes_in=(bc * bd + bd * bf) * itemsize,
                          block_bytes_out=0.0,
                          flops_per_block=2.0 * bc * bf * bd)
+    nbf, nbd = f // bf, d // bd
+
+    if group_sizes is not None:
+        sizes = [int(sz) for sz in group_sizes]
+        if len(sizes) != e:
+            raise ValueError(f"{len(sizes)} group sizes for {e} experts")
+        rows = sum(sizes)
+        g = Graph("grouped_gemm")
+        g.memory("x", (rows, d), dtype=dtype)
+        g.memory("w", (e, d, f), dtype=dtype)
+        g.memory("o", (rows, f), dtype=dtype)
+        if any(sz % bc for sz in sizes) or f % bf or d % bd:
+            dom = Domain.of(("ti", 0, max(rows // bc, 1)))
+            acc = AccessPattern(dom, (Affine.of("ti", bc),
+                                      Affine.constant(0)), width=1)
+            g.compute("expert_tile", dom, vector_width=vector_width)
+            g.connect("x", "expert_tile", acc)
+            g.connect("expert_tile", "o", acc)
+            return g, est
+        experts, row_starts = [], []
+        for ei, sz in enumerate(sizes):
+            for r0 in range(0, sz, bc):
+                experts.append(ei)
+                row_starts.append(sum(sizes[:ei]) + r0)
+        nt = len(experts)
+        row0 = Affine.table("ti", row_starts)
+        dom_x = Domain.of(("ti", 0, nt), ("ji", 0, nbf), ("ki", 0, nbd),
+                          ("r", 0, bc))
+        acc_x = AccessPattern(dom_x, (row0 + Affine.of("r"),
+                                      _blk("ki", bd, nbd)), width=bd)
+        dom_w = Domain.of(("ti", 0, nt), ("ji", 0, nbf), ("ki", 0, nbd),
+                          ("r", 0, bd))
+        acc_w = AccessPattern(dom_w, (Affine.table("ti", experts),
+                                      _blk("ki", bd, nbd) + Affine.of("r"),
+                                      _blk("ji", bf, nbf)), width=bf)
+        dom_o = Domain.of(("ti", 0, nt), ("ji", 0, nbf), ("r", 0, bc))
+        acc_o = AccessPattern(dom_o, (row0 + Affine.of("r"),
+                                      _blk("ji", bf, nbf)), width=bf)
+
+        def fn(in0, in1):
+            x_ = in0.reshape(nt, nbf, nbd, bc, bd)
+            w_ = in1.reshape(nt, nbf, nbd, bd, bf)
+            return {"out0": (x_ @ w_).sum(axis=2).reshape(-1)}
+
+        tile_fn = lambda in0, in1: {"out0": in0 @ in1[0]}   # noqa: E731
+        g.compute("expert_tile", Domain.of(("ti", 0, nt), ("ji", 0, nbf),
+                                           ("ki", 0, nbd)),
+                  fn=fn, tile_fn=tile_fn, reduce="add",
+                  vector_width=vector_width,
+                  axes=dict(ins=({0: "c", 1: "k"}, {1: "k", 2: "f"}),
+                            outs=({0: "c", 1: "f"},), carry=(), narrow="f"))
+        g.connect("x", "expert_tile", acc_x)
+        g.connect("w", "expert_tile", acc_w)
+        g.connect("expert_tile", "o", acc_o)
+        return g, est
+
+    g = Graph("grouped_gemm")
+    g.memory("x", (e, c, d), dtype=dtype)
+    g.memory("w", (e, d, f), dtype=dtype)
+    g.memory("o", (e, c, f), dtype=dtype)
+    nbc = c // bc
+    dom = Domain.of(("ei", 0, e), ("ii", 0, max(nbc, 1)),
+                    ("ji", 0, max(nbf, 1)), ("ki", 0, max(nbd, 1)))
+    if c % bc or f % bf or d % bd:
+        acc_x = AccessPattern(dom, (Affine.of("ei"), Affine.of("ii", bc),
+                                    Affine.of("ki", bd)))
+        acc_w = AccessPattern(dom, (Affine.of("ei"), Affine.of("ki", bd),
+                                    Affine.of("ji", bf)))
+        acc_o = AccessPattern(dom, (Affine.of("ei"), Affine.of("ii", bc),
+                                    Affine.of("ji", bf)))
+        g.compute("expert_tile", dom, vector_width=vector_width)
+        g.connect("x", "expert_tile", acc_x)
+        g.connect("w", "expert_tile", acc_w)
+        g.connect("expert_tile", "o", acc_o)
+        return g, est
+
+    dom_x = Domain.of(("ei", 0, e), ("ii", 0, nbc), ("ji", 0, nbf),
+                      ("ki", 0, nbd), ("r", 0, bc))
+    acc_x = AccessPattern(dom_x, (Affine.of("ei"),
+                                  _blk("ii", bc, nbc) + Affine.of("r"),
+                                  _blk("ki", bd, nbd)), width=bd)
+    dom_w = Domain.of(("ei", 0, e), ("ii", 0, nbc), ("ji", 0, nbf),
+                      ("ki", 0, nbd), ("r", 0, bd))
+    acc_w = AccessPattern(dom_w, (Affine.of("ei"),
+                                  _blk("ki", bd, nbd) + Affine.of("r"),
+                                  _blk("ji", bf, nbf)), width=bf)
+    dom_o = Domain.of(("ei", 0, e), ("ii", 0, nbc), ("ji", 0, nbf),
+                      ("r", 0, bc))
+    acc_o = AccessPattern(dom_o, (Affine.of("ei"),
+                                  _blk("ii", bc, nbc) + Affine.of("r"),
+                                  _blk("ji", bf, nbf)), width=bf)
+
+    def fn(in0, in1):
+        x_ = in0.reshape(e, nbc, nbf, nbd, bc, bd)
+        w_ = in1.reshape(e, nbc, nbf, nbd, bd, bf)
+        return {"out0": (x_ @ w_).sum(axis=3).reshape(-1)}
+
+    tile_fn = lambda in0, in1: {"out0": in0 @ in1}   # noqa: E731
+    g.compute("expert_tile", dom, fn=fn, tile_fn=tile_fn, reduce="add",
+              vector_width=vector_width,
+              axes=dict(ins=({1: "c", 2: "k"}, {1: "k", 2: "f"}),
+                        outs=({1: "c", 2: "f"},), carry=(), narrow="f"))
+    g.connect("x", "expert_tile", acc_x)
+    g.connect("w", "expert_tile", acc_w)
+    g.connect("expert_tile", "o", acc_o)
     return g, est
 
 

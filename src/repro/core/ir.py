@@ -45,6 +45,70 @@ class NodeKind(enum.Enum):
     PACKER = "packer"   # M narrow transactions -> 1 wide transaction
 
 
+@dataclasses.dataclass(frozen=True)
+class CarrySpec:
+    """Sequential-carry (associative/online-scan) description of a compute.
+
+    A compute carrying state across one domain axis — flash attention's
+    running (max, denominator, accumulator) over KV blocks, the SSD scan's
+    inter-chunk state — cannot be expressed as a pure map/reduce ``fn``.
+    Instead the node declares:
+
+    ``axis``      the domain symbol swept sequentially (must be the *last*
+                  symbol of the compute's step domain: lexicographic walk
+                  order makes each sweep contiguous)
+    ``state``     tuple of ``(shape, dtype[, fill])`` per loop-carried
+                  array; each sweep of the carry axis starts from
+                  ``full(shape, fill)`` (fill defaults to 0 — flash
+                  attention's running max uses ``-inf``-like fills)
+    ``step_fn``   ``(carry, *in_blocks[, idx=...]) -> (carry', outs|None)``
+                  one sequential step; operands arrive as block-shaped
+                  arrays (the blocked view of each access pattern) and
+                  ``outs`` is a ``{"out0": block, ...}`` dict for kernels
+                  that emit per step (SSD), or None
+    ``final_fn``  ``carry -> {"out0": block, ...}`` — emitted once per sweep
+                  after the last step, for kernels whose outputs are a
+                  function of the final state (flash attention's tile plus
+                  its max/denominator).  When set, *all* node outputs come
+                  from ``final_fn``; otherwise all come from ``step_fn``.
+    ``pass_idx``  pass ``idx=dict(step=<position along the carry sweep>,
+                  outer=<coords of the non-carry step symbols>,
+                  pump=<mode-R sub-tile index, 0 elsewhere>)`` to both fns
+                  (causal masks and other position-dependent bodies)
+
+    Multi-pumping legality is unchanged — a sequential carry is exactly the
+    dependency pattern temporal vectorization tolerates (paper §2): mode T
+    runs M dependent steps per wide transaction; the state never leaves the
+    fast domain.
+    """
+
+    axis: str
+    state: Tuple[Tuple, ...]          # (shape, dtype[, fill]) per array
+    step_fn: Callable
+    final_fn: Optional[Callable] = None
+    pass_idx: bool = False
+
+    def init_arrays(self, xp=np,
+                    narrow: "Optional[Dict[int, Tuple[int, int]]]" = None):
+        """Fresh per-sweep state arrays; ``narrow`` maps state-array index →
+        (dim, factor): mode-R narrowing of the labelled state dimension."""
+        out = []
+        for i, entry in enumerate(self.state):
+            shape, dtype = entry[0], entry[1]
+            fill = entry[2] if len(entry) > 2 else 0.0
+            if narrow and i in narrow:
+                d, factor = narrow[i]
+                shape = tuple(s // factor if j == d else s
+                              for j, s in enumerate(shape))
+            out.append(xp.full(shape, fill, dtype=dtype))
+        return tuple(out)
+
+    def signature(self) -> Tuple:
+        """Stable identity for cache/memo keys (no object ids)."""
+        return ("carry", self.axis, self.state, bool(self.final_fn),
+                self.pass_idx)
+
+
 @dataclasses.dataclass
 class Node:
     name: str

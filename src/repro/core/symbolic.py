@@ -11,6 +11,15 @@ Access patterns are tuples of affine expressions over a rectangular iteration
 domain.  Two patterns are *sequence-equivalent* when, walking their domains in
 lexicographic order, they touch the same addresses in the same order — the
 condition under which a memory edge can be replaced by a FIFO stream.
+
+For grouped / ragged iteration (a MoE expert id selecting a weight slab, a
+tile id selecting its group's row offset) the pure-affine subset is extended
+with *group-indexed table terms*: ``Affine.table(sym, values)`` contributes
+``values[sym]`` — a static integer lookup keyed by a domain symbol.  Tables
+keep every analysis static (the lookup is data-independent, fixed at graph
+construction), so streaming legality, blocked-view derivation and Pallas
+index maps all continue to work; only the expression is no longer linear in
+the table symbol.
 """
 from __future__ import annotations
 
@@ -21,10 +30,17 @@ from typing import Dict, Iterable, Mapping, Sequence, Tuple
 
 @dataclasses.dataclass(frozen=True)
 class Affine:
-    """``const + Σ coeff[sym] * sym`` with integer coefficients."""
+    """``const + Σ coeff[sym]·sym + Σ table[sym]`` with integer coefficients.
+
+    ``tables`` holds group-indexed lookup terms ``(sym, values)``: the term
+    contributes ``values[sym]`` — ragged row offsets, expert→slab ids, GQA
+    head folding.  Lookups are static integer tables, so the expression
+    stays analyzable; they are simply not linear in the table symbol.
+    """
 
     terms: Tuple[Tuple[str, int], ...] = ()
     const: int = 0
+    tables: Tuple[Tuple[str, Tuple[int, ...]], ...] = ()
 
     # -- constructors -------------------------------------------------------
     @staticmethod
@@ -37,22 +53,29 @@ class Affine:
     def constant(c: int) -> "Affine":
         return Affine((), c)
 
+    @staticmethod
+    def table(sym: str, values: Iterable[int]) -> "Affine":
+        """Group-indexed term ``values[sym]`` (static integer lookup)."""
+        return Affine((), 0, ((sym, tuple(int(v) for v in values)),))
+
     def _as_dict(self) -> Dict[str, int]:
         return dict(self.terms)
 
     @staticmethod
-    def _from_dict(d: Mapping[str, int], const: int) -> "Affine":
+    def _from_dict(d: Mapping[str, int], const: int,
+                   tables: Tuple = ()) -> "Affine":
         items = tuple(sorted((s, c) for s, c in d.items() if c != 0))
-        return Affine(items, const)
+        return Affine(items, const, tables)
 
     # -- algebra -------------------------------------------------------------
     def __add__(self, other: "Affine | int") -> "Affine":
         if isinstance(other, int):
-            return Affine(self.terms, self.const + other)
+            return Affine(self.terms, self.const + other, self.tables)
         d = self._as_dict()
         for s, c in other.terms:
             d[s] = d.get(s, 0) + c
-        return Affine._from_dict(d, self.const + other.const)
+        return Affine._from_dict(d, self.const + other.const,
+                                 self.tables + other.tables)
 
     def __radd__(self, other: int) -> "Affine":
         return self.__add__(other)
@@ -60,7 +83,9 @@ class Affine:
     def __mul__(self, k: int) -> "Affine":
         if not isinstance(k, int):
             raise TypeError("Affine supports multiplication by int only")
-        return Affine._from_dict({s: c * k for s, c in self.terms}, self.const * k)
+        return Affine._from_dict(
+            {s: c * k for s, c in self.terms}, self.const * k,
+            tuple((s, tuple(v * k for v in t)) for s, t in self.tables))
 
     __rmul__ = __mul__
 
@@ -71,16 +96,33 @@ class Affine:
 
     # -- queries --------------------------------------------------------------
     def symbols(self) -> Tuple[str, ...]:
-        return tuple(s for s, _ in self.terms)
+        return tuple(s for s, _ in self.terms) \
+            + tuple(s for s, _ in self.tables)
 
     def coeff(self, sym: str) -> int:
         return self._as_dict().get(sym, 0)
 
+    def table_range(self) -> Tuple[int, int]:
+        """(min, max) total contribution of the table terms."""
+        lo = hi = 0
+        for _s, t in self.tables:
+            lo += min(t)
+            hi += max(t)
+        return lo, hi
+
     def evaluate(self, env: Mapping[str, int]) -> int:
-        return self.const + sum(c * env[s] for s, c in self.terms)
+        out = self.const + sum(c * env[s] for s, c in self.terms)
+        for s, t in self.tables:
+            out += t[env[s]]
+        return out
 
     def substitute(self, mapping: Mapping[str, "Affine"]) -> "Affine":
-        out = Affine.constant(self.const)
+        for s, _t in self.tables:
+            if s in mapping:
+                raise ValueError(
+                    f"cannot substitute table-indexed symbol {s!r}; "
+                    "group-indexed lookups are not linear")
+        out = Affine((), self.const, self.tables)
         for s, c in self.terms:
             repl = mapping.get(s)
             if repl is None:
@@ -91,11 +133,13 @@ class Affine:
 
     def rename(self, mapping: Mapping[str, str]) -> "Affine":
         return Affine._from_dict(
-            {mapping.get(s, s): c for s, c in self.terms}, self.const
+            {mapping.get(s, s): c for s, c in self.terms}, self.const,
+            tuple((mapping.get(s, s), t) for s, t in self.tables)
         )
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         parts = [f"{c}*{s}" for s, c in self.terms]
+        parts += [f"tbl[{s}]" for s, _ in self.tables]
         if self.const or not parts:
             parts.append(str(self.const))
         return " + ".join(parts)
@@ -216,10 +260,13 @@ class BlockedAccess:
             if b == 1:
                 out.append(a)
                 continue
-            if a.const % b or any(c % b for _, c in a.terms):
+            if a.const % b or any(c % b for _, c in a.terms) \
+                    or any(v % b for _, t in a.tables for v in t):
                 return None
             out.append(Affine(tuple((s, c // b) for s, c in a.terms),
-                              a.const // b))
+                              a.const // b,
+                              tuple((s, tuple(v // b for v in t))
+                                    for s, t in a.tables)))
         return tuple(out)
 
     def covers(self, shape: Sequence[int]) -> bool:
@@ -286,7 +333,8 @@ def blocked_access(acc: AccessPattern,
         if block[i] != 1:
             break                   # width already owns this dimension
         rest = exprs[i].substitute({sym: Affine.constant(0)})
-        if rest.const % ext or any(c % ext for _, c in rest.terms):
+        if rest.const % ext or any(c % ext for _, c in rest.terms) \
+                or any(v % ext for _, t in rest.tables for v in t):
             break                   # unaligned dense walk: keep as grid dim
         block[i] = ext
         exprs[i] = rest
@@ -305,7 +353,9 @@ def blocked_access(acc: AccessPattern,
             return None             # leftover intra symbol in an offset
     # 4. every grid point's box must stay in bounds (no row straddling)
     for d_i, (e, b) in enumerate(zip(exprs, block)):
-        lo = hi = e.const
+        tlo, thi = e.table_range()
+        lo = e.const + tlo
+        hi = e.const + thi
         for s, c in e.terms:
             ext = dict(grid)[s]
             if c >= 0:

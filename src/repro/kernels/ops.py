@@ -1,13 +1,23 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Jit'd public wrappers around the kernel library.
 
 Responsibilities: shape padding to block multiples, dtype policy, automatic
-pump-factor planning (``pump='auto'`` asks ``core.pump_plan`` for the best
-factor under the VMEM capacity model), and the interpret/compile switch
-(CPU container validates with interpret=True; on TPU pass interpret=False).
+pump-factor planning (``pump='auto'`` asks the capacity model, ``'measure'``
+times candidates), and the interpret/compile switch (CPU container validates
+with interpret=True; on TPU pass interpret=False).
+
+Flash attention, the SSD scan and grouped GEMM are **compiled, not
+hand-scheduled**: their default path builds the kernel's executable IR graph
+(:mod:`repro.core.autopump`) and routes it through
+``repro.compiler.compile(backend='pallas')`` — the fused-region emission
+derives the BlockSpecs, carry scratch and pump schedule that the hand-wired
+Pallas kernels in this package previously encoded by hand.  The hand-wired
+kernels remain as a differential reference and as the fallback
+(``impl='pallas'`` or any compiler-route failure, which warns visibly).
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -66,6 +76,53 @@ def _measured_spec(kernel, builder_args, builder_kwargs):
                       stacklevel=3)
         return None
     return kern.spec
+
+
+def _pump_request(pump):
+    """Normalize a ``pump`` argument into ``(factor, mode, autotune)`` for
+    ``compiler.compile``: ``'auto'`` → capacity-model factor, ``'measure'``
+    → measured-runtime autotune, int/PumpSpec → explicit."""
+    if pump == "auto":
+        return "auto", "T", None
+    if pump == "measure":
+        return "auto", "T", "measure"
+    if isinstance(pump, PumpSpec):
+        return pump.factor, pump.mode, None
+    return int(pump), "T", None
+
+
+def _on_accelerator() -> bool:
+    return any(d.platform == "tpu" for d in jax.devices())
+
+
+def _use_compiler_route(impl: str, interpret: bool) -> bool:
+    """The compiler route serves CPU validation (its carryloop/blockloop jit
+    tiers) and real TPU emission.  ``interpret=False`` on CPU is an explicit
+    request for *compiled* pallas execution, which the hand-wired path
+    reports loudly instead of being silently downgraded."""
+    return impl == "compiler" and (interpret or _on_accelerator())
+
+
+@functools.lru_cache(maxsize=256)
+def _compile_kernel_cached(kernel: str, builder_args, builder_kwargs_items,
+                           pump):
+    """Build the kernel's IR graph and compile it through the fused-region
+    pallas backend.  The lru layer skips per-call graph reconstruction and
+    fingerprint hashing on repeat shapes (the compiler's own memo already
+    makes the compile itself O(1))."""
+    from repro import compiler
+    from repro.core.autopump import BUILDERS
+    factor, mode, autotune = _pump_request(pump)
+    g, est = BUILDERS[kernel](*builder_args, **dict(builder_kwargs_items))
+    return compiler.compile(g, factor=factor, mode=mode, estimate=est,
+                            backend="pallas", autotune=autotune)
+
+
+def _compile_kernel(kernel: str, builder_args, builder_kwargs, pump):
+    return _compile_kernel_cached(kernel, tuple(builder_args),
+                                  tuple(sorted(builder_kwargs.items())),
+                                  pump if isinstance(pump, (PumpSpec, str))
+                                  else int(pump))
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0):
@@ -182,9 +239,38 @@ def _flash(q, k, v, causal, bq, bkv, pump_factor, interpret):
     return out[:, :, :s0, :]
 
 
+def _flash_compiled(q, k, v, causal, bq, bkv, pump):
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    bq, bkv = min(bq, s), min(bkv, t)
+    if t % bkv:
+        raise ValueError(f"T={t} %% bkv={bkv} != 0")
+    qp, s0 = _pad_to(q, 2, bq)
+    kern = _compile_kernel(
+        "flash_attention", (b, hq, qp.shape[2], t, d),
+        dict(bq=bq, bkv=bkv, hkv=hkv, causal=causal, dtype=str(q.dtype),
+             itemsize=q.dtype.itemsize), pump)
+    out = kern({"q": qp, "k": k, "v": v})["o"]
+    return out[:, :, :s0, :]
+
+
 def flash_attention(q, k, v, *, causal: bool = False, bq: int = 128,
                     bkv: int = 128, pump: PumpSpec | int | str = 1,
-                    interpret: bool = True):
+                    interpret: bool = True, impl: str = "compiler"):
+    """Multi-head attention (GQA folded via a group-indexed table).
+
+    ``impl='compiler'`` (default) compiles the executable IR builder through
+    ``repro.compiler`` — BlockSpecs, the online-softmax carry and the pump
+    schedule are all derived; ``impl='pallas'`` forces the hand-wired kernel
+    (kept as the differential reference).  ``interpret=False`` on CPU keeps
+    the hand-wired path's loud failure semantics."""
+    if _use_compiler_route(impl, interpret):
+        try:
+            return _flash_compiled(q, k, v, causal, bq, bkv, pump)
+        except Exception as e:
+            warnings.warn(f"flash_attention: compiler route failed ({e}); "
+                          "falling back to the hand-wired kernel",
+                          stacklevel=2)
     d = q.shape[-1]
     spec = _as_spec(pump,
                     block_bytes_in=2 * bkv * d * q.dtype.itemsize,
@@ -203,8 +289,31 @@ def _ssd_jit(x, dt, A, B, C, chunk, pump_factor, interpret):
                                 pump=pump_factor, interpret=interpret)
 
 
+def _ssd_compiled(x, dt, A, B, C, chunk, pump):
+    b, l, h, p = x.shape
+    grp, n = B.shape[2], B.shape[3]
+    chunk = min(chunk, l)
+    if l % chunk:
+        raise ValueError(f"L={l} %% chunk={chunk} != 0")
+    kern = _compile_kernel(
+        "ssd_scan", (b, l, h, p, n),
+        dict(chunk=chunk, n_groups=grp, dtype=str(x.dtype),
+             itemsize=x.dtype.itemsize), pump)
+    return kern({"x": x, "dt": dt, "a": A, "bmat": B, "cmat": C})["y"]
+
+
 def ssd_scan(x, dt, A, B, C, *, chunk: int = 16,
-             pump: PumpSpec | int | str = 1, interpret: bool = True):
+             pump: PumpSpec | int | str = 1, interpret: bool = True,
+             impl: str = "compiler"):
+    """Mamba-2 SSD chunked scan.  ``impl='compiler'`` (default) compiles the
+    carry-graph IR builder; ``impl='pallas'`` forces the hand-wired kernel
+    (the differential reference)."""
+    if _use_compiler_route(impl, interpret):
+        try:
+            return _ssd_compiled(x, dt, A, B, C, chunk, pump)
+        except Exception as e:
+            warnings.warn(f"ssd_scan: compiler route failed ({e}); falling "
+                          "back to the hand-wired kernel", stacklevel=2)
     b, l, h, p = x.shape
     n = B.shape[-1]
     spec = _as_spec(pump,
@@ -231,9 +340,37 @@ def _grouped(x, w, bc, bf, bd, pump_factor, pump_mode, interpret):
     return out[:, :c0, :f0]
 
 
+def _grouped_compiled(x, w, bc, bf, bd, pump):
+    e, c, d = x.shape
+    f = w.shape[2]
+    bc, bf, bd = min(bc, c), min(bf, f), min(bd, d)
+    xp_, c0 = _pad_to(x, 1, bc)
+    xp_, _ = _pad_to(xp_, 2, bd)
+    wp, _ = _pad_to(w, 1, bd)
+    wp, f0 = _pad_to(wp, 2, bf)
+    kern = _compile_kernel(
+        "grouped_gemm", (e, xp_.shape[1], xp_.shape[2], wp.shape[2]),
+        dict(bc=bc, bf=bf, bd=bd, dtype=str(x.dtype),
+             itemsize=x.dtype.itemsize), pump)
+    out = kern({"x": xp_, "w": wp})["o"]
+    return out[:, :c0, :f0]
+
+
 def grouped_gemm(x, w, *, bc: int = 128, bf: int = 128, bd: int = 128,
-                 pump: PumpSpec | int | str = 1, interpret: bool = True):
-    """Per-expert batched GEMM (MoE hot-spot).  x (E,C,D) @ w (E,D,F)."""
+                 pump: PumpSpec | int | str = 1, interpret: bool = True,
+                 impl: str = "compiler"):
+    """Per-expert batched GEMM (MoE hot-spot).  x (E,C,D) @ w (E,D,F).
+
+    ``impl='compiler'`` (default) compiles the IR builder (expert axis as
+    the outermost grid symbol, contraction accumulated over the reduction
+    symbol); ``impl='pallas'`` forces the hand-wired kernel."""
+    if _use_compiler_route(impl, interpret):
+        try:
+            return _grouped_compiled(x, w, bc, bf, bd, pump)
+        except Exception as e:
+            warnings.warn(f"grouped_gemm: compiler route failed ({e}); "
+                          "falling back to the hand-wired kernel",
+                          stacklevel=2)
     spec = _as_spec(pump,
                     block_bytes_in=(bc * bd + bd * bf) * x.dtype.itemsize,
                     block_bytes_out=0,

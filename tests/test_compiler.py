@@ -1,13 +1,19 @@
 """repro.compiler tests: pass registry/pipeline, lowering backends vs the
-numpy reference executor (differential), persistent compile cache, the two
-new passes (stream-fusion, fifo-depth), and the fused-region Pallas emission
-backend (region partitioning, blocked-view derivation, temporal grid axis,
-measured-runtime autotune).
+numpy reference executor (differential — driven by the reusable harness in
+``tests/differential.py``), persistent compile cache (including corruption
+negative paths), the two passes (stream-fusion, fifo-depth), and the
+fused-region Pallas emission backend (region partitioning, blocked-view
+derivation, temporal grid axis, carry-aware emission, measured-runtime
+autotune).
 
 Differential data is integer-valued float32 so every backend computes the
 same exactly-representable values regardless of reduction order — the
-lowerings are required to be *bit-exact* against the reference executor.
+lowerings are required to be *bit-exact* against the reference executor
+wherever the kernel math permits (see ``tests/differential.py`` for the
+exp caveat on flash attention / SSD).
 """
+import json
+
 import numpy as np
 import pytest
 
@@ -24,6 +30,9 @@ from repro.core import (AccessPattern, Affine, Domain, Graph, NodeKind,
 from repro.core.autopump import BUILDERS
 from repro.core.multipump import pump_spec_for
 from repro.core.symbolic import blocked_access
+
+from differential import FACTORS, MODES, Case, cases as diff_cases, run_case
+from hypothesis_compat import given, settings, st
 
 
 def _ints(rng, shape, lo=-4, hi=5):
@@ -47,39 +56,54 @@ def chain_graph(n=32, v=4):
     return g
 
 
-# ------------------------------------------------- differential: lowering --
-@pytest.mark.parametrize("mode", ["T", "R"])
-@pytest.mark.parametrize("factor", [1, 2, 4])
-def test_vecadd_lowering_matches_reference(tmp_path, factor, mode):
-    g, _ = BUILDERS["vecadd"](64, vector_width=8)
-    rng = np.random.default_rng(factor * 10 + ord(mode))
-    inputs = {"x": _ints(rng, 64), "y": _ints(rng, 64)}
-
-    kern = compiler.compile(g, factor=factor, mode=mode,
-                            cache=CompileCache(tmp_path / "c.json"),
-                            memoize=False)
-    assert kern.spec.factor == factor and kern.spec.mode == mode
-    out = np.asarray(kern(inputs)["z"])
-    gold = executor.run(kern.graph, dict(inputs))["z"]
-    np.testing.assert_array_equal(out, gold)                 # vs reference
-    np.testing.assert_array_equal(out, inputs["x"] + inputs["y"])  # semantics
+# ------------------------------------------------- differential harness --
+# the copy-pasted per-kernel differential tests were replaced by the
+# registry-driven sweep in tests/differential.py: every BUILDERS entry ×
+# backend × M ∈ {1,2,4} × modes {T,R}, asserted against the reference
+# executor (bit-exact where the math permits) and an independent numpy gold
+_DIFF0 = diff_cases(0)
+_DIFF1 = {k: v for k, v in diff_cases(1).items()
+          if k in ("flash_attention", "ssd_scan", "grouped_gemm",
+                   "grouped_gemm_ragged")}
 
 
-@pytest.mark.parametrize("mode", ["T", "R"])
-@pytest.mark.parametrize("factor", [1, 2, 4])
-def test_matmul_lowering_matches_reference(tmp_path, factor, mode):
-    g, _ = BUILDERS["matmul"](32, 32, 32, bm=16, bn=16, bk=16, vector_width=8)
-    rng = np.random.default_rng(factor * 100 + ord(mode))
-    inputs = {"a": _ints(rng, (32, 32), -3, 4), "b": _ints(rng, (32, 32), -3, 4)}
+@pytest.mark.parametrize("backend", ["reference", "jax", "pallas"])
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("factor", FACTORS)
+@pytest.mark.parametrize("kernel", sorted(_DIFF0))
+def test_differential_all_builders(kernel, factor, mode, backend):
+    run_case(_DIFF0[kernel], factor, mode, backend)
 
-    kern = compiler.compile(g, factor=factor, mode=mode,
-                            cache=CompileCache(tmp_path / "c.json"),
-                            memoize=False)
-    assert kern.spec.factor == factor
-    out = np.asarray(kern(inputs)["c"])
-    gold = executor.run(kern.graph, dict(inputs))["c"]
-    np.testing.assert_array_equal(out, gold)                 # vs reference
-    np.testing.assert_array_equal(out, inputs["a"] @ inputs["b"])  # semantics
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("factor", FACTORS)
+@pytest.mark.parametrize("kernel", sorted(_DIFF1))
+def test_differential_second_shapes(kernel, factor, mode, backend):
+    """Acceptance: the three subsumed kernels hold on a second, structurally
+    different shape (GQA folding, grouped B/C, different raggedness)."""
+    run_case(_DIFF1[kernel], factor, mode, backend)
+
+
+@settings(max_examples=8, deadline=None)
+@given(nblocks=st.integers(1, 4), v=st.integers(1, 8))
+def test_differential_vecadd_shape_property(nblocks, v):
+    """Shape-parametrized via hypothesis (skips without it installed)."""
+    n = nblocks * v * 2
+    run_case(Case("vecadd", (n,), dict(vector_width=v),
+                  {"x": (n,), "y": (n,)}, ("z",)), 2, "T", "jax")
+
+
+@settings(max_examples=6, deadline=None)
+@given(sizes=st.lists(st.integers(1, 3), min_size=1, max_size=3))
+def test_differential_ragged_shape_property(sizes):
+    from differential import _grouped_gold_ragged
+    sizes = tuple(s * 8 for s in sizes)
+    rows = sum(sizes)
+    run_case(Case("grouped_gemm", (len(sizes), 16, 8, 8),
+                  dict(bc=8, bf=8, bd=8, group_sizes=sizes, vector_width=8),
+                  {"x": (rows, 8), "w": (len(sizes), 8, 8)}, ("o",),
+                  gold=_grouped_gold_ragged(sizes)), 2, "T", "pallas")
 
 
 def test_reference_backend_matches_jax_backend(tmp_path):
@@ -93,66 +117,6 @@ def test_reference_backend_matches_jax_backend(tmp_path):
                           memoize=False)
     np.testing.assert_array_equal(np.asarray(kj(inputs)["z"]),
                                   kr(inputs)["z"])
-
-
-# ------------------------------------ differential: all builders/backends --
-def _builder_cases():
-    rng = np.random.default_rng(0)
-
-    def ints(shape, lo=-4, hi=5):
-        return rng.integers(lo, hi, shape).astype(np.float32)
-
-    return {
-        "vecadd": ((64,), dict(vector_width=8),
-                   {"x": ints(64), "y": ints(64)}, "z",
-                   lambda i: i["x"] + i["y"]),
-        "matmul": ((32, 32, 32), dict(bm=16, bn=16, bk=16, vector_width=8),
-                   {"a": ints((32, 32), -3, 4), "b": ints((32, 32), -3, 4)},
-                   "c", lambda i: i["a"] @ i["b"]),
-        "stencil": ((10, 8, 8), dict(),
-                    {"x": ints((10, 8, 8))}, "y", None),
-        "floyd_warshall": ((16,), dict(),
-                           {"dist": ints((16, 16), 1, 9)}, "out", None),
-    }
-
-
-def _stencil_gold(x):
-    y = np.zeros_like(x)
-    y[1:-1] = 0.25 * (x[:-2] + x[2:]) + 0.5 * x[1:-1]
-    return y
-
-
-def _floyd_gold(d):
-    d = d.copy()
-    for k in range(d.shape[0]):
-        d = np.minimum(d, d[:, k:k + 1] + d[k:k + 1, :])
-    return d
-
-
-@pytest.mark.parametrize("backend", ["jax", "pallas"])
-@pytest.mark.parametrize("mode", ["T", "R"])
-@pytest.mark.parametrize("factor", [1, 2, 4])
-@pytest.mark.parametrize("kernel", ["vecadd", "matmul", "stencil",
-                                    "floyd_warshall"])
-def test_builders_differential_all_backends(tmp_path, kernel, factor, mode,
-                                            backend):
-    """Every executable builder graph, every backend, factors {1,2,4}, both
-    pump modes: bit-exact vs the reference executor and vs direct numpy."""
-    args, kw, inputs, out_name, gold_fn = _builder_cases()[kernel]
-    g, _ = BUILDERS[kernel](*args, **kw)
-    kern = compiler.compile(g, factor=factor, mode=mode, backend=backend,
-                            cache=CompileCache(tmp_path / "c.json"),
-                            memoize=False)
-    out = np.asarray(kern(inputs)[out_name])
-    ref = executor.run(kern.graph, dict(inputs))[out_name]
-    np.testing.assert_array_equal(out, ref)              # vs reference
-    if gold_fn is not None:
-        gold = gold_fn(inputs)
-    elif kernel == "stencil":
-        gold = _stencil_gold(inputs["x"])
-    else:
-        gold = _floyd_gold(inputs["dist"])
-    np.testing.assert_array_equal(out, gold)             # semantics
 
 
 # --------------------------------------------- pallas backend: structure --
@@ -196,6 +160,67 @@ def test_pallas_interpret_emission_matches_reference(tmp_path):
         np.testing.assert_array_equal(
             out, executor.run(kern.graph, dict(inputs))["c"])
         np.testing.assert_array_equal(out, inputs["a"] @ inputs["b"])
+
+
+def test_carry_region_emission_structure(tmp_path):
+    """Carry regions emit the carry-aware tier: flash attention's online
+    softmax becomes a multi-output carryloop whose carry axis is the
+    innermost grid dimension; mode T splits it into transactions × beats."""
+    g, _ = BUILDERS["flash_attention"](1, 2, 32, 32, 8, bq=16, bkv=8,
+                                       vector_width=8)
+    kern = compiler.compile(g, factor=2, backend="pallas",
+                            cache=CompileCache(tmp_path / "c.json"),
+                            memoize=False)
+    em = list(kern.report.emission.values())[0]
+    assert em["tier"] == "carryloop"
+    assert em["carry"] == ["ji", "_pump"]          # M beats continue the sweep
+    assert em["grid"][-1] == ["_pump", 2]
+    assert set(em["outputs"]) == {"o", "m", "l"}   # multi-output region
+
+    # mode R: the _pump axis sits OUTSIDE the carry sweep (sub-tiles run
+    # their own full sweeps) and narrows the labelled 'q' axis
+    g2, _ = BUILDERS["flash_attention"](1, 2, 32, 32, 8, bq=16, bkv=8,
+                                        vector_width=8)
+    kern2 = compiler.compile(g2, factor=2, mode="R", backend="pallas",
+                             cache=CompileCache(tmp_path / "c.json"),
+                             memoize=False)
+    em2 = list(kern2.report.emission.values())[0]
+    syms2 = [s for s, _e in em2["grid"]]
+    assert em2["carry"] == ["ji"]
+    assert syms2.index("_pump") < syms2.index("ji")
+
+
+def test_carry_pallas_interpret_emission(tmp_path):
+    """Real pl.pallas_call emission for carry regions (interpret mode):
+    state in VMEM scratch, pl.when-gated init/finalize — the hand-written
+    flash-attention schedule, derived from the IR."""
+    for kernel in ("flash_attention", "ssd_scan"):
+        case = _DIFF0[kernel]
+        run_case(case, 2, "T", "pallas", pallas_mode="interpret")
+        g, _ = BUILDERS[case.kernel](*case.args, **case.kwargs)
+        kern = compiler.compile(g, factor=2, backend="pallas",
+                                pallas_mode="interpret",
+                                cache=CompileCache(tmp_path / "c.json"),
+                                memoize=False)
+        assert list(kern.report.emission.values())[0]["tier"] == "pallas"
+
+
+def test_ragged_blockspec_derivation():
+    """Group-indexed (table) access decomposes into a blocked view whose
+    offsets carry the lookup — and still divides into block units, so the
+    ragged grouped gemm gets a real derivable BlockSpec."""
+    g, _ = BUILDERS["grouped_gemm"](2, 32, 16, 8, bc=8, bf=8, bd=8,
+                                    group_sizes=(16, 24))
+    acc_x = g.in_edges("expert_tile")[0].access
+    ba = blocked_access(acc_x, (40, 16))
+    assert ba.block == (8, 8)
+    assert ba.grid_symbols == ("ti", "ji", "ki")
+    assert ba.offsets[0].tables               # row offsets are a table term
+    assert ba.block_unit_offsets() is not None
+    # the w operand maps each tile to its expert slab via a table
+    acc_w = g.in_edges("expert_tile")[1].access
+    bw = blocked_access(acc_w, (2, 16, 8))
+    assert bw.offsets[0].tables and bw.block == (1, 8, 8)
 
 
 def test_blocked_access_derivation():
@@ -333,18 +358,126 @@ def test_ops_pump_measure_routes_through_backend(tmp_path, monkeypatch):
 # --------------------------------------------- scatter-duplicate rejection --
 def test_duplicate_scatter_raises_lowering_error(tmp_path):
     """A write pattern revisiting addresses (reduction dim absent from the
-    output) must fail loudly instead of silently last-write-wins."""
+    output) must fail loudly instead of silently last-write-wins — and the
+    error must carry the offending producer→memory edge by name."""
     g = Graph("dup")
     g.memory("x", (8,))
     g.memory("z", (8,))
     dom = Domain.of(("k", 0, 2))
-    g.compute("c", dom, fn=lambda in0: {"out0": in0})
-    g.connect("x", "c", AccessPattern(dom, (Affine.of("k", 4),), width=4))
-    g.connect("c", "z", AccessPattern(dom, (Affine.constant(0),), width=4))
+    g.compute("badwrite", dom, fn=lambda in0: {"out0": in0})
+    g.connect("x", "badwrite", AccessPattern(dom, (Affine.of("k", 4),),
+                                             width=4))
+    g.connect("badwrite", "z", AccessPattern(dom, (Affine.constant(0),),
+                                             width=4))
     for backend in ("jax", "pallas"):
-        with pytest.raises(LoweringError, match="duplicate address"):
+        with pytest.raises(LoweringError, match="duplicate address") as ei:
             compiler.compile(g, factor=1, backend=backend,
                              cache=False, memoize=False)
+        assert "badwrite" in str(ei.value) and "z" in str(ei.value)
+
+
+# ------------------------------------------------ cache corruption paths --
+@pytest.mark.parametrize("payload", [
+    "{not valid json!!",              # syntactically broken
+    '{"version": 1, "entries"',       # truncated mid-write
+    json.dumps([1, 2, 3]),            # wrong top-level schema
+    json.dumps({"version": 1, "entries": {"k": "not-a-plan"}}),
+])
+def test_corrupted_cache_falls_back_to_cold_compile(tmp_path, payload):
+    """A corrupted/truncated compile-cache file must degrade to a cold
+    compile (cache-off behaviour), never crash the build."""
+    path = tmp_path / "cache.json"
+    path.write_text(payload)
+    g, _ = BUILDERS["vecadd"](64, vector_width=8)
+    kern = compiler.compile(g, factor=2, cache=CompileCache(path),
+                            memoize=False)
+    assert kern.report.served_from is None         # cold, not crashed
+    x = np.arange(64, dtype=np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(kern({"x": x, "y": x})["z"]), x + x)
+
+
+def test_corrupted_cache_entry_value_is_a_miss(tmp_path):
+    """An entry whose *value* lost its factor (schema drift, hand edits)
+    must be treated as a miss and recompiled cold."""
+    path = tmp_path / "cache.json"
+    g, _ = BUILDERS["vecadd"](64, vector_width=8)
+    compiler.compile(g, factor=2, cache=CompileCache(path), memoize=False)
+    blob = json.loads(path.read_text())
+    blob["entries"] = {k: {"mode": "T"} for k in blob["entries"]}  # no factor
+    path.write_text(json.dumps(blob))
+    kern = compiler.compile(g, factor=2, cache=CompileCache(path),
+                            memoize=False)
+    assert kern.report.served_from is None
+    assert kern.spec.factor == 2
+
+
+# ------------------------------------------------- mode-R axis narrowing --
+def _modeR_regression_graph(labelled: bool):
+    """z[j·b+r] = c[j·b+r] · Σ x[j·b : (j+1)·b] — both operands walk the
+    same offset expression with the same block size, but only ``c``'s axis
+    corresponds to the output: narrowing ``x`` splits the Σ and corrupts
+    the result.  The old grid-symbol heuristic (and even offset-expression
+    matching) narrows both; the declared axis correspondence narrows only
+    the labelled operand."""
+    n, b = 16, 8
+    g = Graph("modeR")
+    g.memory("c", (n,))
+    g.memory("x", (n,))
+    g.memory("z", (n,))
+    dom_b = Domain.of(("j", 0, n // b), ("r", 0, b))
+    dom_j = Domain.of(("j", 0, n // b))
+    acc_elem = AccessPattern(dom_b, (Affine.of("j", b) + Affine.of("r"),),
+                             width=1)
+    acc_block = AccessPattern(dom_j, (Affine.of("j", b),), width=b)
+
+    def fn(in0, in1):
+        c2 = in0.reshape(n // b, b)
+        x2 = in1.reshape(n // b, b)
+        return {"out0": (c2 * x2.sum(axis=1, keepdims=True)).reshape(-1)}
+
+    tile_fn = lambda in0, in1: {"out0": in0 * in1.sum()}   # noqa: E731
+    meta = dict(fn=fn, tile_fn=tile_fn, vector_width=8)
+    if labelled:
+        meta["axes"] = dict(ins=({0: "n"}, {}), outs=({0: "n"},),
+                            carry=(), narrow="n")
+    g.compute("scalecol", dom_j, **meta)
+    g.connect("c", "scalecol", acc_elem)
+    g.connect("x", "scalecol", acc_block)
+    g.connect("scalecol", "z", acc_elem)
+    return g
+
+
+def test_mode_r_narrowing_uses_axis_correspondence(tmp_path):
+    """Regression for the grid-symbol narrowing heuristic: with the compute's
+    declared axis correspondence, mode R narrows only the operand dimension
+    that actually corresponds to the output axis — the whole-block operand
+    (a Σ over the block) stays wide, and the result stays bit-exact."""
+    rng = np.random.default_rng(17)
+    inputs = {"c": _ints(rng, 16), "x": _ints(rng, 16)}
+    gold = (inputs["c"].reshape(2, 8)
+            * inputs["x"].reshape(2, 8).sum(axis=1, keepdims=True)
+            ).reshape(-1)
+
+    g = _modeR_regression_graph(labelled=True)
+    kern = compiler.compile(g, factor=2, mode="R", backend="pallas",
+                            cache=CompileCache(tmp_path / "c.json"),
+                            memoize=False)
+    em = list(kern.report.emission.values())[0]
+    assert em["pump"] == 2                        # temporal axis realized
+    out = np.asarray(kern(inputs)["z"])
+    np.testing.assert_array_equal(out, gold)
+    np.testing.assert_array_equal(
+        out, executor.run(kern.graph, dict(inputs))["z"])
+
+    # the unlabelled graph shows why the heuristic cannot be fixed without
+    # the correspondence: both operands walk the same offset expression
+    # with the same block size, so narrowing picks both and splits the Σ
+    g2 = _modeR_regression_graph(labelled=False)
+    kern2 = compiler.compile(g2, factor=2, mode="R", backend="pallas",
+                             cache=CompileCache(tmp_path / "c2.json"),
+                             memoize=False)
+    assert not np.array_equal(np.asarray(kern2(inputs)["z"]), gold)
 
 
 # --------------------------------------------- misaligned-pump visibility --
