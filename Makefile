@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-diff bench bench-compiler bench-smoke
+.PHONY: test test-fast test-diff bench bench-compiler bench-smoke \
+	bench-serve bench-serve-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -28,3 +29,13 @@ bench-compiler:
 # runs the same path in-process via tests/test_benchmarks.py
 bench-smoke:
 	$(PY) -m benchmarks.run --mode compiler --smoke
+
+# serving-path benchmark: measured plan registry vs default-pump direct ops
+# (writes BENCH_serve.json — per-layer step time, plan hit rate, measured
+# vs default pump).  The smoke variant is wired into tier-1 alongside
+# bench-smoke via tests/test_benchmarks.py.
+bench-serve:
+	$(PY) -m benchmarks.run --mode serve
+
+bench-serve-smoke:
+	$(PY) -m benchmarks.run --mode serve --smoke

@@ -3,10 +3,11 @@
     PYTHONPATH=src python -m benchmarks.run [--mode MODE] [--smoke]
     PYTHONPATH=src python -m benchmarks.run table3          # legacy spelling
 
-Modes: table2 | table3 | table45 | table6 | roofline | compiler | all.
-Prints ``name,us_per_call,derived`` CSV rows; the compiler mode additionally
-writes ``BENCH_compiler.json`` (``--smoke``: tiny shapes,
-``BENCH_compiler_smoke.json``) at the repo root for cross-PR tracking.
+Modes: table2 | table3 | table45 | table6 | roofline | compiler | serve | all.
+Prints ``name,us_per_call,derived`` CSV rows; the compiler and serve modes
+additionally write ``BENCH_compiler.json`` / ``BENCH_serve.json``
+(``--smoke``: tiny shapes, ``BENCH_*_smoke.json``) at the repo root for
+cross-PR tracking.
 """
 from __future__ import annotations
 
@@ -18,9 +19,10 @@ def main(argv=None) -> None:
     ap.add_argument("legacy", nargs="?", default=None,
                     help="positional mode (legacy spelling)")
     ap.add_argument("--mode", default=None,
-                    help="table2|table3|table45|table6|roofline|compiler|all")
+                    help="table2|table3|table45|table6|roofline|compiler|"
+                         "serve|all")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny shapes (compiler mode smoke test)")
+                    help="tiny shapes (compiler/serve mode smoke test)")
     ns = ap.parse_args(argv)
     which = ns.mode or ns.legacy or "all"
 
@@ -44,6 +46,9 @@ def main(argv=None) -> None:
     if which in ("all", "compiler"):
         from . import compiler_report
         compiler_report.main(smoke=ns.smoke)
+    if which in ("all", "serve"):
+        from . import serve_report
+        serve_report.main(smoke=ns.smoke)
 
 
 if __name__ == "__main__":

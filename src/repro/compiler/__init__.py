@@ -37,6 +37,8 @@ from .passes import (PASS_REGISTRY, FifoDepthPass, FusionReport, GraphPass,
                      MultipumpPass, StreamFusionPass, StreamingPass,
                      make_pass, register_pass)
 from .pipeline import PassRecord, Pipeline, PipelineReport
+from .registry import (BucketPolicy, PlanRegistry, default_registry,
+                       set_default_registry)
 
 # memo value: (kernel, plan) — the plan is re-used to write-through to a
 # caller-supplied persistent cache that hasn't seen this request yet
@@ -120,6 +122,8 @@ def _valid_plan(plan) -> bool:
 
 
 AUTOTUNE_CANDIDATES = (1, 2, 4, 8)
+# relative runtime band within which measured candidates count as tied
+AUTOTUNE_TIE_BAND = 0.05
 
 
 def _build(graph: Graph, *, factor, mode, vmem_budget, max_factor, estimate,
@@ -155,6 +159,18 @@ def _build(graph: Graph, *, factor, mode, vmem_budget, max_factor, estimate,
                           backend=backend)
 
 
+def _trace_state_clean() -> bool:
+    """True when no jax trace is active.  Measured autotune must not run
+    inside a trace: the candidate executions there are re-traced per call
+    (orders of magnitude slower) and the recorded timings are meaningless,
+    yet would be persisted as a cross-process plan."""
+    try:
+        from jax import core as _core
+        return bool(_core.trace_state_clean())
+    except Exception:  # pragma: no cover — future jax API drift
+        return True
+
+
 def _measure_inputs(graph: Graph) -> Dict[str, np.ndarray]:
     """Synthetic operands for autotune timing: zeros for every memory that
     nothing in the graph writes (the external inputs)."""
@@ -163,8 +179,11 @@ def _measure_inputs(graph: Graph) -> Dict[str, np.ndarray]:
             if n.kind == NodeKind.MEMORY and not graph.in_edges(n.name)}
 
 
-def _time_kernel(fn, inputs, repeats: int = 3) -> float:
-    """Best-of-N wall time in µs (first call compiles and is discarded)."""
+def _time_kernel(fn, inputs, repeats: int = 5) -> float:
+    """Best-of-N wall time in µs (first call compiles and is discarded).
+    Five repeats: the candidate factors on the carry kernels sit within a
+    few percent of each other on CPU, and best-of-3 let scheduler noise
+    flip the persisted winner between otherwise identical processes."""
     import jax
     jax.block_until_ready(fn(inputs))
     best = float("inf")
@@ -232,6 +251,7 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
                              estimate=estimate, backend=backend, jit=jit,
                              pallas_mode=pallas_mode)
 
+    persist = True
     plan = cache.get(key) if cache is not None else None
     if plan is not None and not _valid_plan(plan):
         plan = None         # corrupted entry: fall back to a cold compile
@@ -245,6 +265,20 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
         served = "disk"
         if plan.get("autotune"):
             kern.report.autotune = dict(plan["autotune"], replayed=True)
+    elif autotune == "measure" and not _trace_state_clean():
+        # replaying a measured plan under a trace is fine (no timing runs,
+        # handled above); *measuring* is not — compile with the requested
+        # factor policy instead, and do NOT persist or memoize the result
+        # under the measure key, so an eager context (registry warmup) can
+        # still produce the real measured plan later
+        kern = build(factor)
+        served = None
+        persist = False
+        kern.report.warnings.append(
+            "autotune='measure' requested inside an active jax trace: "
+            "in-trace timings are meaningless — compiled without "
+            "measurement; measure from an eager context (e.g. plan-registry "
+            "warmup) to persist a real measured plan")
     elif autotune == "measure":
         inputs = _measure_inputs(graph)
         timings: Dict[int, float] = {}
@@ -258,7 +292,14 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
                 continue
             kernels[achieved] = k
             timings[achieved] = _time_kernel(k.fn, inputs)
-        winner = min(timings, key=timings.get)
+        # statistical ties go to the smallest factor: candidates within the
+        # noise band of the best are indistinguishable by measurement, and
+        # persisting an arbitrary exotic winner costs VMEM/beats for nothing
+        # (and flips between otherwise identical processes).  Genuine
+        # multi-pump wins exceed the band and are kept.
+        best_t = min(timings.values())
+        winner = min(f for f, t in timings.items()
+                     if t <= best_t * (1.0 + AUTOTUNE_TIE_BAND))
         kern = kernels[winner]
         served = None
         kern.report.autotune = {
@@ -282,9 +323,9 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
         if report.autotune:
             plan["autotune"] = {k: v for k, v in report.autotune.items()
                                 if k != "replayed"}
-        if cache is not None:
+        if cache is not None and persist:
             cache.put(key, plan)
-    if memoize:
+    if memoize and persist:
         _KERNEL_MEMO[memo_key] = (kern, plan)
     return kern
 
@@ -332,4 +373,6 @@ __all__ = [
     "CompileCache", "default_cache", "graph_fingerprint", "request_key",
     "CompiledKernel", "LoweringError", "lower",
     "lower_pallas", "partition_regions",
+    "BucketPolicy", "PlanRegistry", "default_registry",
+    "set_default_registry",
 ]

@@ -79,9 +79,24 @@ def graph_fingerprint(g: Graph) -> str:
     return hashlib.sha256(blob.encode()).hexdigest()
 
 
+def _env_fingerprint() -> str:
+    """Toolchain identity folded into every request key.  Measured-runtime
+    plans (``autotune='measure'``) are only as good as the jax build that
+    timed them — a winner measured under one version must not be silently
+    replayed under another, so the jax version is part of the key and an
+    upgrade degrades to a cold re-measure instead of stale replay."""
+    try:
+        import jax
+        return f"jax-{jax.__version__}"
+    except Exception:  # pragma: no cover — jax-free planning contexts
+        return "jax-none"
+
+
 def request_key(g: Graph, **params) -> str:
-    """Cache key for one compile request: structure hash + parameters."""
-    blob = json.dumps([graph_fingerprint(g), sorted(params.items())],
+    """Cache key for one compile request: structure hash + parameters +
+    toolchain fingerprint (jax version)."""
+    blob = json.dumps([graph_fingerprint(g), _env_fingerprint(),
+                       sorted(params.items())],
                       sort_keys=True, default=repr)
     return hashlib.sha256(blob.encode()).hexdigest()
 

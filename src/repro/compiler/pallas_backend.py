@@ -316,14 +316,19 @@ def plan_region(g: Graph, region: Region,
     carry_syms: Tuple[str, ...] = ()
     outer_syms: Tuple[str, ...] = ()
     if carry is not None:
+        # mixed carry+reduction first: naming the extra reduction symbols is
+        # strictly more actionable than the generic innermost-axis message
+        # (a serving-path regression to the gather tier must be diagnosable
+        # from PipelineReport.warnings alone)
+        mixed = [s for s in extra_syms if s != carry.axis]
+        if mixed:
+            warn(f"region {region.name}: mixed carry+reduction grid — "
+                 f"carry axis {carry.axis!r} with extra reduction symbols "
+                 f"{mixed}; using gather fallback")
+            return None
         if not grid or grid[-1][0] != carry.axis:
             warn(f"region {region.name}: carry axis {carry.axis!r} is not "
                  "the innermost grid dimension; using gather fallback")
-            return None
-        if any(s != carry.axis for s in extra_syms):
-            warn(f"region {region.name}: reduction symbols "
-                 f"{[s for s in extra_syms if s != carry.axis]} alongside a "
-                 "carry axis; using gather fallback")
             return None
         carry_syms = (carry.axis,)
         reduce_syms = ()

@@ -1,0 +1,395 @@
+"""Process-level plan registry: shape-bucketed measured execution plans.
+
+The compile cache (:mod:`.cache`) makes a *repeat* compile O(1), but the
+serving layers never see that win when every decode step arrives with a
+slightly different shape — each (batch, seq) pair is a distinct graph and a
+cold ``autotune='measure'`` search.  The registry closes that gap:
+
+* **Shape bucketing** — batch and sequence dims are padded up to a small
+  ladder of buckets (powers of two by default), so the unbounded space of
+  serve-time shapes collapses onto a handful of graphs.  Padding is value-
+  preserving by construction: attention pads KV only under a causal mask
+  (padded keys sit at positions no real query may attend), the SSD scan pads
+  timesteps with ``dt=0`` (an identity step for the carried state), and the
+  grouped GEMM pads rows with zeros whose outputs are sliced away.
+* **Measured plans** — every bucket compiles through
+  ``compiler.compile(autotune='measure', backend='pallas')``: the pump
+  factor M is chosen from measured runtimes, persisted in the compile cache,
+  and replayed (no re-measurement) by every later process.
+* **Warm lookup** — an in-process ``{request → CompiledKernel}`` map serves
+  steady-state decode in O(1); :meth:`PlanRegistry.warmup` pre-measures the
+  whole bucket grid at launch so the first real request is already a hit.
+
+``models/*`` route their kernel hot paths here when
+``ModelConfig.kernel_plan == 'measure'`` (the default); the direct
+``kernels.ops`` path stays available behind ``kernel_plan='direct'`` as the
+differential reference.  A corrupted persistent cache degrades to a cold
+compile (the :class:`~repro.compiler.cache.CompileCache` contract); a
+lowering failure degrades to the direct ops path with a visible warning.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
+def _fit_block(block: int, n: int) -> int:
+    """Largest block size ≤ ``block`` that divides ``n`` (n ≥ 1)."""
+    cand = min(block, n)
+    if n % cand:
+        cand = math.gcd(n, cand)
+    return max(cand, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """How call shapes are rounded up to plan buckets.
+
+    ``seq_min``/``batch_min`` floor the respective ladders; buckets are the
+    powers of two above the floor, so a growing decode context touches
+    O(log T) plans instead of O(T).  ``row_block`` is the ragged grouped-GEMM
+    row tile: each expert's token group pads to a power-of-two multiple of
+    it (0 stays 0 — empty experts contribute no tiles at all).
+    """
+    seq_min: int = 16
+    batch_min: int = 1
+    row_block: int = 16
+
+    def bucket_seq(self, n: int, multiple: int = 1) -> int:
+        b = max(self.seq_min, _next_pow2(max(n, 1)))
+        if multiple > 1 and b % multiple:
+            b = -(-b // multiple) * multiple
+        return b
+
+    def bucket_batch(self, n: int) -> int:
+        return max(self.batch_min, _next_pow2(max(n, 1)))
+
+    def bucket_group(self, n: int) -> int:
+        """Ragged group-size bucket: 0, or a pow2 multiple of row_block."""
+        if n <= 0:
+            return 0
+        tiles = -(-n // self.row_block)
+        return self.row_block * _next_pow2(tiles)
+
+    def seq_grid(self, max_len: int, multiple: int = 1) -> List[int]:
+        """All seq buckets from the floor up to ``bucket_seq(max_len)``."""
+        top = self.bucket_seq(max_len, multiple)
+        out, b = [], self.bucket_seq(1, multiple)
+        while b < top:
+            out.append(b)
+            b = self.bucket_seq(b + 1, multiple)
+        out.append(top)
+        return out
+
+
+@dataclasses.dataclass
+class RegistryStats:
+    hits: int = 0
+    misses: int = 0
+    measure_s: float = 0.0    # cold measured-autotune compiles
+    compile_s: float = 0.0    # replayed / non-measured compiles
+    fallbacks: int = 0        # lookups that fell back to the direct path
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_rate": round(self.hit_rate, 4),
+                "measure_s": round(self.measure_s, 4),
+                "compile_s": round(self.compile_s, 4),
+                "fallbacks": self.fallbacks}
+
+
+class PlanRegistry:
+    """Shape-bucketed front for ``compiler.compile`` on the serving path.
+
+    ``pump`` is ``'measure'`` (measured-runtime autotune, the default),
+    ``'auto'`` (capacity model) or an explicit int factor.  ``cache`` is a
+    :class:`~repro.compiler.cache.CompileCache`, ``None`` for the default
+    persistent cache or ``False`` to disable disk persistence.
+    """
+
+    def __init__(self, policy: Optional[BucketPolicy] = None, *,
+                 pump="measure", ragged_pump="auto", backend: str = "pallas",
+                 cache=None):
+        self.policy = policy or BucketPolicy()
+        self.pump = pump
+        # ragged grouped-GEMM plans are keyed on the per-expert padded-size
+        # tuple, which shifts with routing: a measured autotune (seconds of
+        # timing runs) on every fresh tuple would land mid-request, so the
+        # ragged path defaults to capacity-model planning ('auto', a
+        # milliseconds-cold compile).  Set ragged_pump='measure' only when
+        # the routing patterns are known and pre-warmed.
+        self.ragged_pump = ragged_pump
+        self.backend = backend
+        self._cache = cache
+        self._plans: Dict[Tuple, Any] = {}
+        self.stats = RegistryStats()
+
+    # ------------------------------------------------------------- lookup --
+    def _request(self, pump=None) -> Tuple[Any, str, Optional[str]]:
+        pump = self.pump if pump is None else pump
+        if pump == "measure":
+            return "auto", "T", "measure"
+        if pump == "auto":
+            return "auto", "T", None
+        return int(pump), "T", None
+
+    def kernel(self, kernel: str, builder_args: Tuple,
+               builder_kwargs: Dict[str, Any], pump=None):
+        """Compiled kernel for one canonical (bucketed) request — the only
+        place the registry talks to the compiler.  ``pump`` overrides the
+        registry-wide policy for this request (the ragged path uses it)."""
+        pump = self.pump if pump is None else pump
+        key = (kernel, tuple(builder_args),
+               tuple(sorted(builder_kwargs.items())), pump, self.backend)
+        if key in self._plans:
+            self.stats.hits += 1
+            return self._plans[key]
+        from repro import compiler
+        if pump == "measure" and not compiler._trace_state_clean():
+            # a cold miss inside a jit trace must not run the measured
+            # autotune (in-trace timings are garbage and catastrophically
+            # slow): serve this lookup from the capacity-model plan space
+            # instead, and leave the measure slot empty so warmup()/an
+            # eager call can still fill it with a real measured plan
+            warnings.warn(
+                f"plan registry: cold miss for {kernel}{tuple(builder_args)}"
+                " inside a jax trace — using capacity-model planning; call "
+                "warmup() at launch to pre-measure this bucket",
+                stacklevel=3)
+            return self.kernel(kernel, builder_args, builder_kwargs,
+                               pump="auto")
+        self.stats.misses += 1
+        from repro.core.autopump import BUILDERS
+        factor, mode, autotune = self._request(pump)
+        g, est = BUILDERS[kernel](*builder_args, **builder_kwargs)
+        t0 = time.perf_counter()
+        kern = compiler.compile(g, factor=factor, mode=mode, estimate=est,
+                                backend=self.backend, autotune=autotune,
+                                cache=self._cache)
+        dt = time.perf_counter() - t0
+        tuned = kern.report.autotune
+        if tuned and not tuned.get("replayed"):
+            self.stats.measure_s += dt   # paid the timing runs
+        else:
+            self.stats.compile_s += dt   # replayed plan / plain compile
+        self._plans[key] = kern
+        return kern
+
+    def plans(self) -> List[Dict[str, Any]]:
+        """Summaries of every resident plan (benchmark/report surface)."""
+        out = []
+        for (kernel, args, kwargs, pump, backend), kern in self._plans.items():
+            tuned = kern.report.autotune or {}
+            out.append({
+                "kernel": kernel, "args": list(args),
+                "factor": kern.spec.factor, "mode": kern.spec.mode,
+                "pump": pump, "backend": backend,
+                "measured": tuned.get("policy") == "measure",
+                "replayed": bool(tuned.get("replayed")),
+                "served_from": kern.report.served_from,
+            })
+        return out
+
+    def reset(self) -> None:
+        self._plans.clear()
+        self.stats = RegistryStats()
+
+    # ----------------------------------------------------------- requests --
+    # Canonical (builder_args, builder_kwargs, padded dims) per kernel.
+    # Wrappers and warmup() share these so a warmed bucket is a guaranteed
+    # hit for the real call.
+    def flash_request(self, *, b: int, h: int, hkv: int, s: int, t: int,
+                      d: int, causal: bool, dtype: str, bq: int = 128,
+                      bkv: int = 128):
+        bb = self.policy.bucket_batch(b)
+        sb = self.policy.bucket_seq(s)
+        bq_e = _fit_block(bq, sb)
+        # KV padding is masked out only under causality (padded keys sit at
+        # positions ≥ every real query); non-causal keeps the exact length.
+        tb = self.policy.bucket_seq(t) if causal else t
+        bkv_e = _fit_block(bkv, tb)     # always divides tb
+        itemsize = jnp.dtype(dtype).itemsize
+        args = (bb, h, sb, tb, d)
+        kwargs = dict(bq=bq_e, bkv=bkv_e, hkv=hkv, causal=causal,
+                      dtype=dtype, itemsize=itemsize)
+        return args, kwargs, (bb, sb, tb)
+
+    def ssd_request(self, *, b: int, l: int, h: int, p: int, n: int,
+                    chunk: int, n_groups: int, dtype: str):
+        bb = self.policy.bucket_batch(b)
+        lb = self.policy.bucket_seq(l)
+        chunk_e = _fit_block(chunk, lb)
+        itemsize = jnp.dtype(dtype).itemsize
+        args = (bb, lb, h, p, n)
+        kwargs = dict(chunk=chunk_e, n_groups=n_groups, dtype=dtype,
+                      itemsize=itemsize)
+        return args, kwargs, (bb, lb)
+
+    def grouped_request(self, *, e: int, d: int, f: int,
+                        group_sizes: Sequence[int], dtype: str,
+                        bf: int = 128, bd: int = 128):
+        bc = self.policy.row_block
+        padded = tuple(self.policy.bucket_group(int(sz))
+                       for sz in group_sizes)
+        bd_e, bf_e = _fit_block(bd, d), _fit_block(bf, f)
+        # the execution path (ops.ragged_grouped_gemm_compiled) compiles
+        # under the same canonical request — one source of truth, so a
+        # warmed key always matches the real call's key
+        from repro.kernels.ops import ragged_request_args
+        args, kwargs = ragged_request_args(
+            e, d, f, padded, bc, bf_e, bd_e, dtype,
+            jnp.dtype(dtype).itemsize)
+        return args, kwargs, padded
+
+    # ------------------------------------------------------------ wrappers --
+    def flash_attention(self, q, k, v, *, causal: bool = False,
+                        bq: int = 128, bkv: int = 128):
+        """Bucketed flash attention.  q: (B, H, S, D); k/v: (B, Hkv, T, D)."""
+        b, h, s, d = q.shape
+        hkv, t = k.shape[1], k.shape[2]
+        try:
+            args, kwargs, (bb, sb, tb) = self.flash_request(
+                b=b, h=h, hkv=hkv, s=s, t=t, d=d, causal=causal,
+                dtype=str(q.dtype), bq=bq, bkv=bkv)
+            kern = self.kernel("flash_attention", args, kwargs)
+        except Exception as e:  # noqa: BLE001 — serving must not die
+            self.stats.fallbacks += 1
+            warnings.warn(f"plan registry: flash_attention fell back to the "
+                          f"direct ops path ({e})", stacklevel=2)
+            from repro.kernels.ops import flash_attention as _flash
+            return _flash(q, k, v, causal=causal, bq=bq, bkv=bkv)
+        qp = _pad_axes(q, {0: bb, 2: sb})
+        kp = _pad_axes(k, {0: bb, 2: tb})
+        vp = _pad_axes(v, {0: bb, 2: tb})
+        out = kern({"q": qp, "k": kp, "v": vp})["o"]
+        if (bb, sb) == (b, s):
+            return out          # exact bucket: skip the slice dispatch
+        return out[:b, :, :s, :]
+
+    def ssd_scan(self, x, dt, A, B, C, *, chunk: int = 16):
+        """Bucketed SSD scan.  x: (B, L, H, P); dt zero-padding is an
+        identity step for the carried state, so L-padding is exact."""
+        b, l, h, p = x.shape
+        grp, n = B.shape[2], B.shape[3]
+        try:
+            args, kwargs, (bb, lb) = self.ssd_request(
+                b=b, l=l, h=h, p=p, n=n, chunk=chunk, n_groups=grp,
+                dtype=str(x.dtype))
+            kern = self.kernel("ssd_scan", args, kwargs)
+        except Exception as e:  # noqa: BLE001
+            self.stats.fallbacks += 1
+            warnings.warn(f"plan registry: ssd_scan fell back to the direct "
+                          f"ops path ({e})", stacklevel=2)
+            from repro.kernels.ops import ssd_scan as _ssd
+            return _ssd(x, dt, A, B, C, chunk=chunk)
+        xp = _pad_axes(x, {0: bb, 1: lb})
+        dtp = _pad_axes(dt, {0: bb, 1: lb})
+        bp = _pad_axes(B, {0: bb, 1: lb})
+        cp = _pad_axes(C, {0: bb, 1: lb})
+        out = kern({"x": xp, "dt": dtp, "a": A, "bmat": bp, "cmat": cp})["y"]
+        if (bb, lb) == (b, l):
+            return out          # exact bucket: skip the slice dispatch
+        return out[:b, :l]
+
+    def grouped_gemm(self, x, w, *, group_sizes: Sequence[int],
+                     bf: int = 128, bd: int = 128):
+        """Bucketed ragged grouped GEMM.  x: (sum(group_sizes), D) rows
+        grouped by expert; w: (E, D, F).  Empty groups emit no tiles."""
+        sizes = [int(sz) for sz in group_sizes]
+        e, d, f = w.shape
+        try:
+            args, kwargs, padded = self.grouped_request(
+                e=e, d=d, f=f, group_sizes=sizes, dtype=str(x.dtype),
+                bf=bf, bd=bd)
+            from repro.kernels.ops import ragged_grouped_gemm_compiled
+            return ragged_grouped_gemm_compiled(
+                x, w, sizes, padded, kwargs["bc"], kwargs["bf"],
+                kwargs["bd"],
+                kernel_fn=lambda a, kw: self.kernel("grouped_gemm", a, kw,
+                                                    pump=self.ragged_pump))
+        except Exception as err:  # noqa: BLE001 — serving must not die
+            self.stats.fallbacks += 1
+            warnings.warn(f"plan registry: grouped_gemm fell back to "
+                          f"per-group matmul ({err})", stacklevel=2)
+            # compiler-free reference: one matmul per non-empty group
+            outs, off = [], 0
+            for ei, sz in enumerate(sizes):
+                if sz:
+                    outs.append(x[off:off + sz] @ w[ei])
+                off += sz
+            if not outs:
+                return jnp.zeros((0, f), x.dtype)
+            return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+
+    # ------------------------------------------------------------- warmup --
+    def warmup(self, requests) -> List[Dict[str, Any]]:
+        """Pre-measure the bucket grid: ``requests`` is an iterable of
+        ``(kernel, shape_kwargs)`` descriptors (see
+        ``models.transformer.plan_requests``).  Returns one record per
+        request: the chosen factor, whether the plan was freshly measured or
+        replayed from the persistent cache, and the wall time paid."""
+        canon = {"flash_attention": self.flash_request,
+                 "ssd_scan": self.ssd_request,
+                 "grouped_gemm": self.grouped_request}
+        report = []
+        for kernel, spec in requests:
+            args, kwargs, _pads = canon[kernel](**spec)
+            t0 = time.perf_counter()
+            # ragged requests must warm under the same pump policy the
+            # serving wrapper will look them up with
+            pump = self.ragged_pump if kernel == "grouped_gemm" else None
+            kern = self.kernel(kernel, args, kwargs, pump=pump)
+            tuned = kern.report.autotune or {}
+            report.append({
+                "kernel": kernel, "args": list(args),
+                "factor": kern.spec.factor,
+                "measured": tuned.get("policy") == "measure",
+                "replayed": bool(tuned.get("replayed")),
+                "time_s": round(time.perf_counter() - t0, 4),
+            })
+        return report
+
+
+def _pad_axes(arr, targets: Dict[int, int]):
+    """Zero-pad ``arr`` up to ``targets[axis]`` on each listed axis."""
+    pads = [(0, 0)] * arr.ndim
+    dirty = False
+    for axis, tgt in targets.items():
+        cur = arr.shape[axis]
+        if tgt > cur:
+            pads[axis] = (0, tgt - cur)
+            dirty = True
+    return jnp.pad(arr, pads) if dirty else arr
+
+
+# --------------------------------------------------------------- singleton --
+_DEFAULT: Optional[PlanRegistry] = None
+
+
+def default_registry() -> PlanRegistry:
+    """Process-wide registry the model layers share."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = PlanRegistry()
+    return _DEFAULT
+
+
+def set_default_registry(reg: Optional[PlanRegistry]) -> Optional[PlanRegistry]:
+    """Swap the process-wide registry (tests/benchmarks); returns the old."""
+    global _DEFAULT
+    old, _DEFAULT = _DEFAULT, reg
+    return old

@@ -28,6 +28,12 @@ class MoEConfig:
     inference_capacity_factor: float = 0.0
     router_aux_weight: float = 0.001   # load-balance loss weight
     n_dense_layers: int = 0            # leading layers that use dense FFN
+    # dropless serving path: route the expert GEMMs through the ragged
+    # grouped-gemm kernel (row groups pad to the row tile, empty experts
+    # skipped) instead of the dense (E, cap, d) einsum.  Needs concrete
+    # routing counts, so it engages only outside jit traces (eager serving
+    # layers / benchmarks); traced calls keep the dense path.
+    ragged_dropless: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,9 +87,30 @@ class ModelConfig:
     # implementation switches
     attention_impl: str = "xla_chunked"  # xla_chunked | pallas
     ssm_impl: str = "xla"                # xla | pallas
+    # kernel-plan policy for the pallas impl paths: 'measure' (default)
+    # routes through the shape-bucketed plan registry with measured-runtime
+    # pump autotuning (repro.compiler.registry); 'direct' keeps the raw
+    # kernels.ops call with default pump — the differential reference.
+    kernel_plan: str = "measure"
+    # opt-in: route cache prefill (s > 1) through the flash kernel.  Only
+    # valid when every prefill starts on a FRESH cache (pos == 0) — the
+    # kernel attends over the current tokens with a position-relative
+    # causal mask, which equals masked attention over the just-written
+    # cache only at pos 0.  The serve Engine (whose prefill always builds
+    # a fresh cache) sets this; chunked multi-segment prefill must not.
+    fresh_prefill_kernel: bool = False
     attn_block_kv: int = 1024            # KV chunk for chunked attention
     remat: bool = True
     dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        # every model layer tests `kernel_plan == "measure"`: a typo'd
+        # value would silently disable the whole measured-plan machinery,
+        # so reject anything but the two routing policies outright
+        if self.kernel_plan not in ("measure", "direct"):
+            raise ValueError(
+                f"kernel_plan must be 'measure' or 'direct', "
+                f"got {self.kernel_plan!r}")
 
     @property
     def head_dim_(self) -> int:

@@ -326,6 +326,76 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 16,
 
 
 # ------------------------------------------------------------ grouped gemm --
+def ragged_request_args(e, d, f, padded, bc, bf, bd, dtype, itemsize):
+    """Canonical (builder_args, builder_kwargs) for one ragged grouped-GEMM
+    request.  The single source of truth for the compile/plan key: the plan
+    registry derives warmup keys from it and the execution path below
+    compiles under it, so a warmed plan is a guaranteed hit for the real
+    call by construction."""
+    rows_p = sum(padded)
+    dp = -(-d // bd) * bd
+    fp = -(-f // bf) * bf
+    return ((e, rows_p, dp, fp),
+            dict(bc=bc, bf=bf, bd=bd, group_sizes=tuple(padded),
+                 dtype=dtype, itemsize=itemsize))
+
+
+def ragged_grouped_gemm_compiled(x, w, sizes, padded, bc, bf, bd, *,
+                                 kernel_fn=None, pump=1):
+    """Shared ragged-execution core (megablocks idiom).
+
+    ``x`` is a row-major concatenation of per-expert row groups
+    (``sum(sizes)`` rows); each group is zero-padded up to ``padded[i]``
+    (a multiple of the row tile ``bc``; 0 skips the expert entirely), the
+    ragged IR builder compiles with group-indexed table access, and the real
+    rows are sliced back out.  Callers that already hold the padded layout
+    (``sizes == padded``, e.g. the MoE serving path, which scatters tokens
+    into it once for all three expert GEMMs) skip the per-group
+    segmentation and re-slicing entirely.  ``kernel_fn(builder_args,
+    builder_kwargs)`` lets the plan registry own the compile (stats +
+    measured plans); the default routes through this module's compile
+    cache.
+    """
+    e, d, f = w.shape
+    rows_p = sum(padded)
+    if rows_p == 0:
+        return jnp.zeros((0, f), x.dtype)
+    prepadded = list(sizes) == list(padded)
+    if prepadded:
+        xp = x
+    else:
+        parts, off = [], 0
+        for sz, psz in zip(sizes, padded):
+            seg = x[off:off + sz]
+            off += sz
+            if psz > sz:
+                seg = jnp.pad(seg, ((0, psz - sz), (0, 0)))
+            if psz:
+                parts.append(seg)
+        xp = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+    xp, _ = _pad_to(xp, 1, bd)
+    wp, _ = _pad_to(w, 1, bd)
+    wp, _ = _pad_to(wp, 2, bf)
+    builder_args, builder_kwargs = ragged_request_args(
+        e, d, f, padded, bc, bf, bd, str(x.dtype), x.dtype.itemsize)
+    if kernel_fn is None:
+        kern = _compile_kernel("grouped_gemm", builder_args, builder_kwargs,
+                               pump)
+    else:
+        kern = kernel_fn(builder_args, builder_kwargs)
+    out = kern({"x": xp, "w": wp})["o"][:, :f]
+    if prepadded:
+        return out
+    outs, off = [], 0
+    for sz, psz in zip(sizes, padded):
+        if sz:
+            outs.append(out[off:off + sz])
+        off += psz
+    if not outs:
+        return jnp.zeros((0, f), x.dtype)
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+
+
 @functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "pump_factor",
                                              "pump_mode", "interpret"))
 def _grouped(x, w, bc, bf, bd, pump_factor, pump_mode, interpret):
@@ -358,12 +428,37 @@ def _grouped_compiled(x, w, bc, bf, bd, pump):
 
 def grouped_gemm(x, w, *, bc: int = 128, bf: int = 128, bd: int = 128,
                  pump: PumpSpec | int | str = 1, interpret: bool = True,
-                 impl: str = "compiler"):
-    """Per-expert batched GEMM (MoE hot-spot).  x (E,C,D) @ w (E,D,F).
+                 impl: str = "compiler", group_sizes=None):
+    """Per-expert batched GEMM (MoE hot-spot).
+
+    Dense form (``group_sizes=None``): x (E,C,D) @ w (E,D,F).
+    Ragged form: ``group_sizes`` is a static sequence of per-expert row
+    counts; x is the (sum(group_sizes), D) row-major concatenation of the
+    expert groups and the result keeps that layout — tokens pad only to the
+    ``bc`` row tile instead of a dense worst-case capacity, and empty
+    experts emit no tiles at all.  The ragged form is compiler-only
+    (group-indexed table BlockSpecs have no hand-wired counterpart).
 
     ``impl='compiler'`` (default) compiles the IR builder (expert axis as
     the outermost grid symbol, contraction accumulated over the reduction
     symbol); ``impl='pallas'`` forces the hand-wired kernel."""
+    if group_sizes is not None:
+        if impl != "compiler":
+            raise ValueError("ragged grouped_gemm (group_sizes=...) is "
+                             "compiler-only; the hand-wired kernel has no "
+                             "ragged form")
+        sizes = [int(sz) for sz in group_sizes]
+        e, d, f = w.shape
+        if x.ndim != 2 or x.shape[0] != sum(sizes):
+            raise ValueError(f"ragged x has {x.shape[0]} rows, group_sizes "
+                             f"sum to {sum(sizes)}")
+        if len(sizes) != e:
+            raise ValueError(f"{len(sizes)} group sizes for {e} experts")
+        bc_e = min(bc, max(max(sizes, default=1), 1))
+        padded = [-(-sz // bc_e) * bc_e if sz else 0 for sz in sizes]
+        return ragged_grouped_gemm_compiled(
+            x, w, sizes, padded, bc_e, min(bf, f), min(bd, d),
+            pump=pump if isinstance(pump, (PumpSpec, str)) else int(pump))
     if _use_compiler_route(impl, interpret):
         try:
             return _grouped_compiled(x, w, bc, bf, bd, pump)

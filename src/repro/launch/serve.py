@@ -24,15 +24,30 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--attention-impl", default=None,
+                    help="override cfg.attention_impl (xla_chunked|pallas)")
+    ap.add_argument("--ssm-impl", default=None,
+                    help="override cfg.ssm_impl (xla|pallas)")
+    ap.add_argument("--kernel-plan", default=None,
+                    help="override cfg.kernel_plan (measure|direct)")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the plan-registry bucket-grid warmup")
     args = ap.parse_args()
 
     cfg = load_arch(args.arch, smoke=args.smoke)
+    overrides = {k: v for k, v in (("attention_impl", args.attention_impl),
+                                   ("ssm_impl", args.ssm_impl),
+                                   ("kernel_plan", args.kernel_plan)) if v}
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
     params = model_mod.init_params(cfg, jax.random.PRNGKey(0),
                                    dtype=jnp.float32 if args.smoke
                                    else jnp.bfloat16)
     scfg = ServeConfig(batch=args.batch,
                        max_len=args.prompt_len + args.new + 1,
-                       temperature=args.temperature)
+                       temperature=args.temperature,
+                       warmup=not args.no_warmup)
     eng = Engine(cfg, params, scfg)
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
@@ -48,8 +63,24 @@ def main() -> None:
     t0 = time.time()
     out = eng.generate(prompts, args.new, enc_out=enc_out)
     dt = time.time() - t0
-    print(f"[serve] generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.new / dt:.1f} tok/s)")
+    stats = eng.stats()
+    dec = stats["phases"].get("decode", {})
+    pre = stats["phases"].get("prefill", {})
+    steady = dec.get("steady_mean_s")
+    # steady-state tok/s excludes warmup + compile (first prefill/decode):
+    # measured-pump wins are a steady-state property, and one cold compile
+    # can be 1000x a decode step
+    tps = args.batch / steady if steady else float("nan")
+    print(f"[serve] generated {out.shape} in {dt:.2f}s wall")
+    print(f"[serve] warmup: {stats['warmup_s']:.2f}s "
+          f"({stats['plans_warmed']} plans pre-measured); "
+          f"compile: prefill {pre.get('compile_s', 0):.2f}s, "
+          f"decode {dec.get('compile_s', 0):.2f}s")
+    print(f"[serve] steady-state: "
+          f"{(steady or float('nan')) * 1e3:.2f} ms/step over "
+          f"{dec.get('steps', 0)} steps ({tps:.1f} tok/s)")
+    if stats["registry"] is not None:
+        print(f"[serve] plan registry: {stats['registry']}")
     print("[serve] first sequence:", out[0][:16].tolist())
 
 

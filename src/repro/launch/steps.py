@@ -12,10 +12,16 @@ wide transaction (the packed gradient).  XLA/GSPMD materializes the gradient
 all-reduce at the point of use — once per M microbatches instead of per
 microbatch — which is exactly the collective-term reduction measured in
 EXPERIMENTS.md §Perf.
+
+:class:`StepTimer` is the timing discipline for every step consumer (the
+serve engine, launchers, benchmarks): compile/measure cost is attributed to
+a phase's first call and steady-state step time is accumulated separately,
+so warmup never pollutes the numbers serving decisions are made on.
 """
 from __future__ import annotations
 
 import functools
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -27,6 +33,49 @@ from repro.models import model as model_mod
 from repro.configs.base import ModelConfig, ShapeConfig
 
 from . import sharding as shard_mod
+
+
+# ------------------------------------------------------------- step timing --
+class StepTimer:
+    """Separates compile/measure time from steady-state step time.
+
+    The first call of each named phase pays tracing + XLA compilation (and,
+    on the registry path, any cold plan measurement) and is recorded as that
+    phase's ``compile_s``; every later call appends to the steady-state
+    series.  Serving reports must never average warmup into steady-state
+    step time — the measured-pump wins are a steady-state property, and a
+    one-off compile can be 1000× a decode step.
+
+        timer = StepTimer()
+        logits, cache = timer.run("decode", decode_fn, params, cache, batch)
+        timer.stats()["decode"]  # {"compile_s", "steady_mean_s", "steps"}
+    """
+
+    def __init__(self):
+        self.compile_s: Dict[str, float] = {}
+        self.steady: Dict[str, list] = {}
+
+    def run(self, phase: str, fn, *args):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args))
+        dt = time.perf_counter() - t0
+        if phase not in self.compile_s:
+            self.compile_s[phase] = dt
+        else:
+            self.steady.setdefault(phase, []).append(dt)
+        return out
+
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        out = {}
+        for phase, comp in self.compile_s.items():
+            steady = self.steady.get(phase, [])
+            out[phase] = {
+                "compile_s": round(comp, 6),
+                "steady_mean_s": round(sum(steady) / len(steady), 6)
+                if steady else None,
+                "steps": len(steady),
+            }
+        return out
 
 
 # ----------------------------------------------------------- abstract trees --

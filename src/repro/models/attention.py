@@ -29,6 +29,21 @@ from .layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
 NEG_INF = -1e30
 
 
+def _flash_kernel(cfg, q, k, v, *, causal, interpret=True):
+    """Flash-attention kernel dispatch for the ``pallas`` impl paths.
+
+    ``cfg.kernel_plan == 'measure'`` (default) routes through the process
+    plan registry: shapes pad to buckets and the pump factor replays the
+    measured-runtime winner, so serving decode/prefill hits a warm plan in
+    O(1).  ``'direct'`` keeps the raw ``kernels.ops`` call (default pump) —
+    the differential reference for the registry path."""
+    if cfg.kernel_plan == "measure":
+        from repro.compiler.registry import default_registry
+        return default_registry().flash_attention(q, k, v, causal=causal)
+    from repro.kernels.ops import flash_attention as _flash
+    return _flash(q, k, v, causal=causal, interpret=interpret)
+
+
 # ------------------------------------------------------------ core attention
 def chunked_attention(q, k, v, *, causal: bool, q_pos=None, kv_mask=None,
                       block: int = 1024, scale: float | None = None):
@@ -142,8 +157,8 @@ def gqa_apply(p, cfg, x, *, positions, causal=True, cache=None,
     if kv_input is None:  # self-attention: rope
         q = apply_rope(q.swapaxes(1, 2), positions[None, :], cfg.rope_theta
                        ).swapaxes(1, 2)
-        kpos = positions[None, :] if cache is None else positions[None, :]
-        k = apply_rope(k.swapaxes(1, 2), kpos, cfg.rope_theta).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), positions[None, :],
+                       cfg.rope_theta).swapaxes(1, 2)
 
     q = q.swapaxes(1, 2)   # (B, H, S, hd)
     k = k.swapaxes(1, 2)
@@ -174,14 +189,29 @@ def gqa_apply(p, cfg, x, *, positions, causal=True, cache=None,
             out = decode_attention(q[:, :, 0], kc, vc,
                                    jnp.broadcast_to(kv_mask, (b, kc.shape[2])))
             out = out[:, :, None, :]
+        elif cfg.attention_impl == "pallas" and cfg.fresh_prefill_kernel:
+            # fresh-cache prefill (pos == 0 — the flag's contract, set by
+            # the serve Engine whose prefill always builds a new cache):
+            # attention over the just-written cache under kv_mask equals
+            # causal attention over the current tokens' k/v, which the
+            # plan-registry kernel serves from a warm measured plan.  The
+            # kernel's causal mask is position-relative, so the contract is
+            # enforced at runtime: a pos > 0 continuation (traced pos —
+            # unknowable here) selects the position-aware chunked branch.
+            out = jax.lax.cond(
+                pos == 0,
+                lambda: _flash_kernel(cfg, q, k, v, causal=causal,
+                                      interpret=interpret),
+                lambda: chunked_attention(q, kc, vc, causal=causal,
+                                          q_pos=positions, kv_mask=kv_mask,
+                                          block=cfg.attn_block_kv))
         else:
             # prefill into the cache (assumes contiguous fill from `pos`)
             out = chunked_attention(q, kc, vc, causal=causal,
                                     q_pos=positions, kv_mask=kv_mask,
                                     block=cfg.attn_block_kv)
     elif cfg.attention_impl == "pallas" and kv_input is None:
-        from repro.kernels.ops import flash_attention as _flash
-        out = _flash(q, k, v, causal=causal, interpret=interpret)
+        out = _flash_kernel(cfg, q, k, v, causal=causal, interpret=interpret)
     else:
         out = chunked_attention(q, k, v, causal=causal and kv_input is None,
                                 q_pos=positions, block=cfg.attn_block_kv)
@@ -266,8 +296,22 @@ def mla_apply(p, cfg, x, *, positions, causal=True, cache=None,
             [k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1)
         q = jnp.concatenate([q_nope, q_rope], axis=-1)
         q, k, v = (u.swapaxes(1, 2) for u in (q, k, v))
-        out = chunked_attention(q, k, v, causal=causal, q_pos=positions,
-                                block=cfg.attn_block_kv, scale=scale)
+        if cfg.attention_impl == "pallas" and dn + dr == dv \
+                and cfg.fresh_prefill_kernel:
+            # fresh-cache serving prefill: the registry kernel replaces
+            # chunked attention over the current tokens; the runtime cond
+            # keeps any pos > 0 continuation on the reference chunked path
+            out = jax.lax.cond(
+                pos == 0,
+                lambda: _flash_kernel(cfg, q, k, v, causal=causal,
+                                      interpret=interpret),
+                lambda: chunked_attention(q, k, v, causal=causal,
+                                          q_pos=positions,
+                                          block=cfg.attn_block_kv,
+                                          scale=scale))
+        else:
+            out = chunked_attention(q, k, v, causal=causal, q_pos=positions,
+                                    block=cfg.attn_block_kv, scale=scale)
         out = out.swapaxes(1, 2).reshape(b, s, h * dv)
         return dense(p["wo"], out), new_cache
 
@@ -311,8 +355,7 @@ def mla_apply(p, cfg, x, *, positions, causal=True, cache=None,
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     q, k, v = (u.swapaxes(1, 2) for u in (q, k, v))
     if cfg.attention_impl == "pallas" and dn + dr == dv:
-        from repro.kernels.ops import flash_attention as _flash
-        out = _flash(q, k, v, causal=causal, interpret=interpret)
+        out = _flash_kernel(cfg, q, k, v, causal=causal, interpret=interpret)
     else:
         out = chunked_attention(q, k, v, causal=causal, q_pos=positions,
                                 block=cfg.attn_block_kv, scale=scale)

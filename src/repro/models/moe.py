@@ -19,6 +19,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .layers import dense, dense_init
 
@@ -51,6 +52,62 @@ def _ep_constraint(arr):
             arr, NamedSharding(mesh, P(espec, cspec, None)))
     except Exception:  # noqa: BLE001 — sharding is an optimization only
         return arr
+
+
+def _ragged_dropless_experts(p, cfg, xt, gate, idx):
+    """Expert SwiGLU over ragged row groups (the megablocks idiom).
+
+    Tokens sort by expert id into a row-major concatenation of per-expert
+    groups; all three expert GEMMs (gate/up/down) run as one ragged grouped
+    GEMM each, with row groups padded to the row tile instead of a dense
+    capacity.  ``cfg.kernel_plan == 'measure'`` routes through the plan
+    registry (bucketed group sizes, measured pump); ``'direct'`` calls
+    ``kernels.ops.grouped_gemm`` with the default pump.
+    """
+    mo = cfg.moe
+    t, d = xt.shape
+    e, k = mo.n_experts, mo.top_k
+    flat_e = np.asarray(idx).reshape(-1)                          # (T*k,)
+    order = np.argsort(flat_e, kind="stable")
+    counts = np.bincount(flat_e, minlength=e)
+
+    if cfg.kernel_plan == "measure":
+        from repro.compiler.registry import default_registry
+        reg = default_registry()
+        bucket = reg.policy.bucket_group
+
+        def gg(a, w):
+            return reg.grouped_gemm(a, w, group_sizes=padded)
+    else:
+        from repro.kernels.ops import grouped_gemm as _gg
+        bucket = lambda c: -(-c // 16) * 16 if c else 0   # noqa: E731
+
+        def gg(a, w):
+            return _gg(a, w, group_sizes=padded, bc=16)
+
+    # scatter tokens into the bucketed padded row layout ONCE; all three
+    # expert GEMMs consume it directly (group sizes == padded sizes, so
+    # the ragged execution core skips per-group segmentation/re-slicing)
+    padded = [int(bucket(int(c))) for c in counts]
+    rows_p = sum(padded)
+    offs = np.concatenate(([0], np.cumsum(padded)[:-1]))
+    starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+    sorted_e = flat_e[order]
+    rows = offs[sorted_e] + (np.arange(t * k) - starts[sorted_e])
+    tok_idx = np.repeat(np.arange(t), k)
+    xs = jnp.zeros((rows_p, d), xt.dtype).at[rows].set(xt[tok_idx[order]])
+
+    h_gate = gg(xs, p["gate"].astype(xt.dtype))
+    h_up = gg(xs, p["up"].astype(xt.dtype))
+    h = jax.nn.silu(h_gate) * h_up
+    y_pad = gg(h, p["down"].astype(xt.dtype))
+
+    y_sorted = y_pad[rows]                  # back to assignment order
+    inv = np.empty_like(order)
+    inv[order] = np.arange(t * k)
+    gathered = y_sorted[inv].reshape(t, k, d)                     # dropless:
+    return jnp.einsum("tkd,tk->td", gathered.astype(jnp.float32),
+                      gate).astype(xt.dtype)                      # keep all
 
 
 def moe_init(key, cfg, dtype=jnp.float32):
@@ -102,6 +159,25 @@ def moe_apply(p, cfg, x, *, dropless: bool = False
     ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(
         jnp.ones((t * k,), jnp.float32)) / (t * k)
     aux = e * jnp.sum(me * ce) * mo.router_aux_weight
+
+    # ---- ragged dropless path (serving): skip the dense capacity buffer ---
+    # The ragged grouped-gemm kernel consumes per-expert row groups padded
+    # only to the row tile — no (E, cap, d) worst-case buffer, empty experts
+    # emit no tiles.  Group sizes must be static (they parameterize the
+    # group-indexed BlockSpec tables), so this engages only on concrete
+    # (non-traced) routing; jit'd calls keep the dense reference path.
+    # Only the *strictly* dropless regime (icf <= 0) qualifies: a positive
+    # inference_capacity_factor caps-and-drops in the dense path, and the
+    # ragged path (which keeps every routed token) must not silently
+    # diverge from that reference.
+    if dropless and mo.ragged_dropless \
+            and mo.inference_capacity_factor <= 0 \
+            and not isinstance(x, jax.core.Tracer):
+        y = _ragged_dropless_experts(p, cfg, xt, gate, idx)
+        if mo.n_shared_experts:
+            from .layers import swiglu
+            y = y + swiglu(p["shared"], xt)
+        return y.reshape(b, s, d), aux
 
     # ---- slot assignment: stable sort of (expert, arrival) pairs ----------
     flat_e = idx.reshape(-1)                                      # (T*k,)

@@ -168,8 +168,19 @@ def mamba2_apply(p, cfg, x, *, cache=None, interpret=True):
         if l % chunk:
             chunk = 1
         if cfg.ssm_impl == "pallas" and cache is None:
-            from repro.kernels.ops import ssd_scan as _ssd
-            y = _ssd(xh, dt, A, Bg, Cg, chunk=chunk, interpret=interpret)
+            if cfg.kernel_plan == "measure":
+                # plan-registry route: L pads to a seq bucket (dt=0 steps
+                # are state identities, so padding is exact) and the pump
+                # factor replays the measured winner from the compile cache
+                # pass the configured chunk, not the l-divisibility fixup:
+                # the bucketed L is what must divide it, and the registry
+                # clamps the chunk to the bucket itself
+                from repro.compiler.registry import default_registry
+                y = default_registry().ssd_scan(xh, dt, A, Bg, Cg,
+                                                chunk=s.chunk)
+            else:
+                from repro.kernels.ops import ssd_scan as _ssd
+                y = _ssd(xh, dt, A, Bg, Cg, chunk=chunk, interpret=interpret)
             s_final = None
         else:
             y, s_final = _ssd_xla(xh, dt, A, Bg, Cg, chunk)

@@ -283,6 +283,64 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     return caches
 
 
+def plan_requests(cfg, batch: int, max_len: int, *, dtype=None, policy=None,
+                  cached: bool = False):
+    """Warmup descriptors for the kernels this config routes through the
+    plan registry (:mod:`repro.compiler.registry`).
+
+    Enumerates the (kernel, shape) bucket grid a serving process will touch
+    — one flash-attention request per sequence bucket up to ``max_len`` for
+    the pallas attention impl, one SSD request per bucket for the pallas SSM
+    impl — so ``PlanRegistry.warmup(plan_requests(...))`` pre-measures every
+    plan at launch and the first real token is already a warm hit.  The
+    ragged MoE grouped GEMM is routing-dependent (group sizes only exist at
+    serve time), so it warms on first use instead.
+
+    ``cached=True`` restricts the grid to plans a KV/state-cached serving
+    loop (the Engine) can actually execute: cached SSM prefill cannot use
+    the SSD kernel (it needs the final state, which the builder does not
+    output yet), and cached attention prefill uses the kernel only behind
+    ``cfg.fresh_prefill_kernel`` — pre-measuring dead plans would inflate
+    launch time for zero serving benefit.  The default (``cached=False``)
+    is the cache-free forward grid (scoring / benchmark layer steps).
+    """
+    from repro.compiler.registry import BucketPolicy
+    policy = policy or BucketPolicy()
+    dtype = dtype or str(cfg.activation_dtype)
+    reqs = []
+
+    wants_attn = cfg.attention_impl == "pallas" and (
+        cfg.family in ("dense", "moe", "vlm")
+        or (cfg.family == "hybrid" and cfg.hybrid_attn_every))
+    if cached:
+        wants_attn = wants_attn and cfg.fresh_prefill_kernel
+    if wants_attn and cfg.mla:
+        m = cfg.mla
+        # mla_apply only takes the kernel path when head dims line up
+        wants_attn = m.nope_head_dim + m.rope_head_dim == m.v_head_dim
+    if wants_attn:
+        if cfg.mla:
+            h = hkv = cfg.n_heads
+            d = cfg.mla.nope_head_dim + cfg.mla.rope_head_dim
+        else:
+            h, hkv, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+        for sb in policy.seq_grid(max_len):
+            reqs.append(("flash_attention",
+                         dict(b=batch, h=h, hkv=hkv, s=sb, t=sb, d=d,
+                              causal=True, dtype=dtype)))
+
+    if cfg.family in ("ssm", "hybrid") and cfg.ssm_impl == "pallas" \
+            and cfg.ssm and not cached:
+        s = cfg.ssm
+        nh = s.expand * cfg.d_model // s.head_dim
+        for lb in policy.seq_grid(max_len):
+            reqs.append(("ssd_scan",
+                         dict(b=batch, l=lb, h=nh, p=s.head_dim,
+                              n=s.state_dim, chunk=s.chunk,
+                              n_groups=s.n_groups, dtype=dtype)))
+    return reqs
+
+
 def decode_step(cfg, params, tokens, cache):
     """tokens: (B, 1) -> (logits (B, 1, V), new_cache)."""
     x = embed(params["embed"], tokens, cfg.activation_dtype)

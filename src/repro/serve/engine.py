@@ -1,14 +1,28 @@
-"""Serving engine: batched prefill + decode with a pumped KV stream.
+"""Serving engine: batched prefill + decode over measured execution plans.
 
 Continuous-batching-lite: a request pool is packed into fixed (batch,
 max_len) slots; prefill fills each slot's cache, then decode steps advance
 all active slots together.  Kernel-scale temporal vectorization shows up in
 the attention path (chunked/pumped KV reads); engine-scale, the decode loop
 is the fast domain and cache DMA the slow one.
+
+Two serving-time disciplines live here:
+
+* **Plan warmup** — when the model routes kernels through the plan registry
+  (``cfg.kernel_plan == 'measure'``), the engine pre-measures the bucket
+  grid at construction (:meth:`Engine.warmup`), so the first real token hits
+  a warm measured plan instead of paying an autotune search mid-request.
+* **Timing separation** — prefill/decode run through
+  :class:`repro.launch.steps.StepTimer`: the first call of each phase
+  (tracing + XLA compile + any cold plan measurement) is recorded as compile
+  time, steady-state step time accumulates separately, and
+  :meth:`Engine.stats` reports both — warmup cost never pollutes the
+  steady-state numbers.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -16,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.launch import mesh as mesh_mod
+from repro.launch.steps import StepTimer
 from repro.models import model as model_mod
 
 
@@ -26,11 +41,23 @@ class ServeConfig:
     temperature: float = 0.0      # 0 = greedy
     seed: int = 0
     cache_dtype: str = "float32"
+    # pre-measure the plan-registry bucket grid at engine construction
+    # (no-op when the model's kernel paths don't route through the registry)
+    warmup: bool = True
+    # override cfg.kernel_plan for this engine ('measure' | 'direct' | None)
+    kernel_plan: Optional[str] = None
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
                  mesh=None):
+        if scfg.kernel_plan and scfg.kernel_plan != cfg.kernel_plan:
+            cfg = dataclasses.replace(cfg, kernel_plan=scfg.kernel_plan)
+        if not cfg.fresh_prefill_kernel:
+            # this engine's prefill always builds a fresh cache (pos == 0),
+            # which is exactly the contract the flag requires — enable the
+            # kernel prefill route so serving hits the measured plans
+            cfg = dataclasses.replace(cfg, fresh_prefill_kernel=True)
         self.cfg, self.params, self.scfg = cfg, params, scfg
         self.mesh = mesh or mesh_mod.make_host_mesh()
         cdt = jnp.dtype(scfg.cache_dtype)
@@ -38,7 +65,50 @@ class Engine:
             lambda p, c, b: model_mod.decode_step(cfg, p, b, c))
         self._cache_factory = lambda: model_mod.init_cache(
             cfg, scfg.batch, scfg.max_len, cdt)
+        self.timer = StepTimer()
+        self.warmup_s = 0.0
+        self.warmup_report: List[Dict[str, Any]] = []
+        # capture the registry once: stats()/warmup() must keep talking to
+        # the instance this engine's model layers were warmed against, even
+        # if the process default is swapped later (tests/benchmarks do)
+        self._reg = None
+        if cfg.kernel_plan == "measure":
+            from repro.compiler.registry import default_registry
+            self._reg = default_registry()
+        if scfg.warmup:
+            self.warmup()
 
+    # ----------------------------------------------------------- warmup ----
+    def _registry(self):
+        return self._reg
+
+    def warmup(self) -> List[Dict[str, Any]]:
+        """Pre-measure the plan-registry bucket grid for this model/shape.
+
+        Enumerates ``models.transformer.plan_requests`` (one request per
+        kernel × sequence bucket up to ``max_len``) and compiles each through
+        the registry — cold requests pay the measured autotune here, at
+        launch; repeat processes replay winners from the persistent compile
+        cache.  Time spent is reported as ``warmup_s``, never as step time.
+        """
+        reg = self._registry()
+        if reg is None:
+            return []
+        from repro.models import transformer
+        leaves = jax.tree.leaves(self.params)
+        dtype = str(jnp.result_type(leaves[0].dtype if leaves
+                                    else jnp.float32,
+                                    self.cfg.activation_dtype))
+        t0 = time.perf_counter()
+        # cached=True: only the plans this cached serving loop can execute
+        reqs = transformer.plan_requests(self.cfg, self.scfg.batch,
+                                         self.scfg.max_len, dtype=dtype,
+                                         cached=True)
+        self.warmup_report = reg.warmup(reqs)
+        self.warmup_s += time.perf_counter() - t0
+        return self.warmup_report
+
+    # ------------------------------------------------------------ serving --
     def prefill(self, tokens: jax.Array, enc_out=None):
         """tokens: (B, S_prompt) — returns (cache, last_logits)."""
         cache = self._cache_factory()
@@ -46,7 +116,8 @@ class Engine:
         if enc_out is not None:
             batch["enc_out"] = enc_out
         with self.mesh:
-            logits, cache = self._decode(self.params, cache, batch)
+            logits, cache = self.timer.run(
+                "prefill", self._decode, self.params, cache, batch)
         return cache, logits[:, -1]
 
     def _sample(self, logits, key):
@@ -67,7 +138,20 @@ class Engine:
             if enc_out is not None:
                 batch["enc_out"] = enc_out
             with self.mesh:
-                logits, cache = self._decode(self.params, cache, batch)
+                logits, cache = self.timer.run(
+                    "decode", self._decode, self.params, cache, batch)
             key, sub = jax.random.split(key)
             cur = self._sample(logits[:, -1], sub)[:, None]
         return jnp.concatenate(toks, axis=1)
+
+    # ------------------------------------------------------------ reports --
+    def stats(self) -> Dict[str, Any]:
+        """Timing split: plan warmup vs per-phase compile vs steady-state
+        step time, plus plan-registry hit/miss counters when active."""
+        reg = self._registry()
+        return {
+            "warmup_s": round(self.warmup_s, 4),
+            "plans_warmed": len(self.warmup_report),
+            "phases": self.timer.stats(),
+            "registry": reg.stats.as_dict() if reg is not None else None,
+        }

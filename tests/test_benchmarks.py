@@ -51,3 +51,42 @@ def test_compiler_bench_smoke_writes_json(bench_cache, tmp_path, capsys):
     assert set(report["matmul_pallas_speedup_vs_jax"]) == {"1", "2", "4"}
     # CSV rows were emitted alongside the JSON
     assert "compiler_matmul_pallas_M2" in capsys.readouterr().out
+
+
+def test_serve_bench_smoke_writes_json(bench_cache, tmp_path, capsys):
+    """Tier-1 wiring for `make bench-serve-smoke`: the serving-path report
+    must show a 100% post-warmup plan hit rate, per-layer registry-vs-
+    default-pump entries with measured pump factors, parity between the two
+    paths, and the engine's warmup/compile/steady timing split."""
+    from benchmarks import serve_report
+
+    out = tmp_path / "BENCH_serve_smoke.json"
+    report = serve_report.run_report(smoke=True, out_path=out)
+    assert out.exists()
+    assert json.loads(out.read_text())["smoke"] is True
+
+    layers = {e["layer"]: e for e in report["entries"]}
+    assert set(layers) == {"attention", "ssm", "moe"}
+    for e in report["entries"]:
+        assert e["registry_us"] > 0 and e["direct_us"] > 0
+        assert e["plan_factor"] >= 1 and e["default_factor"] == 1
+        # registry path parity vs the direct default-pump path: bit-exact
+        # or fp-accumulation noise from a different pump factor
+        assert e["max_abs_err"] < 5e-5, e
+    # the flash/ssd plans came from measured autotune; the ragged MoE
+    # plans are capacity-planned and must say so
+    assert layers["attention"]["plan_measured"] is True
+    assert layers["ssm"]["plan_measured"] is True
+    assert layers["moe"]["plan_measured"] is False
+
+    # the grid warmup makes steady-state lookups pure hits
+    assert report["plan_hit_rate_post_warmup"] == 1.0
+    assert report["plans_warmed"] >= 1
+    assert report["registry"]["fallbacks"] == 0
+
+    # engine timing split: warmup/compile never pollute steady-state
+    dec = report["engine"]["phases"]["decode"]
+    assert dec["steps"] >= 1 and dec["compile_s"] > 0
+    assert dec["steady_mean_s"] is not None
+    assert dec["steady_mean_s"] < dec["compile_s"]
+    assert "serve_plan_hit_rate" in capsys.readouterr().out

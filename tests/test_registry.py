@@ -1,0 +1,324 @@
+"""Plan-registry tests: shape bucketing, the cold-miss → measure → warm-hit
+lifecycle, corrupted-state degradation (mirroring the compile-cache negative
+paths), the ragged grouped-gemm serving entry, and end-to-end parity of the
+model layers' registry route vs the direct ``kernels.ops`` reference."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compiler import CompileCache
+from repro.compiler.registry import (BucketPolicy, PlanRegistry,
+                                     default_registry, set_default_registry)
+from repro.configs.base import load_arch
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    """Every test gets a private persistent cache and a fresh default
+    registry (the module singleton is process-wide state)."""
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "cache"))
+    old = set_default_registry(None)
+    yield
+    set_default_registry(old)
+
+
+def _rng_ints(shape, lo=-2, hi=3, seed=0):
+    return np.random.default_rng(seed).integers(lo, hi, shape).astype(
+        np.float32)
+
+
+# ------------------------------------------------------------- bucketing ----
+def test_bucket_policy_boundaries():
+    pol = BucketPolicy(seq_min=16, batch_min=1, row_block=16)
+    assert pol.bucket_seq(1) == 16
+    assert pol.bucket_seq(16) == 16      # exact boundary stays
+    assert pol.bucket_seq(17) == 32      # one past the boundary jumps
+    assert pol.bucket_seq(32) == 32
+    assert pol.bucket_seq(33) == 64
+    assert pol.bucket_batch(1) == 1
+    assert pol.bucket_batch(3) == 4
+    assert pol.bucket_group(0) == 0      # empty expert: no tiles
+    assert pol.bucket_group(1) == 16
+    assert pol.bucket_group(17) == 32
+    assert pol.seq_grid(100) == [16, 32, 64, 128]
+
+
+@pytest.mark.parametrize("s", [13, 16, 17])
+def test_flash_bucket_boundary_parity(s):
+    """Bucketed (padded) flash attention matches the direct ops path at,
+    below and just past a bucket boundary — KV padding is masked out by
+    causality, padded query rows are sliced away."""
+    from repro.kernels import ops
+    b, h, hkv, d = 3, 4, 2, 8
+    q, k, v = (jnp.asarray(_rng_ints((b, hh, s, d), seed=i))
+               for i, hh in enumerate((h, hkv, hkv)))
+    reg = PlanRegistry(pump=1, cache=False)
+    out = reg.flash_attention(q, k, v, causal=True)
+    assert out.shape == (b, h, s, d)
+    sb = reg.policy.bucket_seq(s)
+    ref = ops.flash_attention(q, k, v, causal=True, bq=sb, bkv=sb, pump=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=5e-6)
+
+
+def test_ssd_bucket_padding_is_identity():
+    """L-padding the SSD scan with dt=0 steps is exact (state identity)."""
+    from repro.kernels import ops
+    b, l, h, p, n = 2, 24, 2, 4, 4
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(_rng_ints((b, l, h, p), seed=1))
+    dt = jnp.asarray(np.abs(rng.integers(0, 3, (b, l, h))) * 0.25 + 0.25,
+                     dtype=jnp.float32)
+    A = jnp.asarray(-(np.abs(rng.integers(0, 3, (h,))) * 0.25 + 0.25),
+                    dtype=jnp.float32)
+    B = jnp.asarray(_rng_ints((b, l, h, n), seed=2))
+    C = jnp.asarray(_rng_ints((b, l, h, n), seed=4))
+    reg = PlanRegistry(pump=1, cache=False)
+    out = reg.ssd_scan(x, dt, A, B, C, chunk=8)   # 24 pads to bucket 32
+    ref = ops.ssd_scan(x, dt, A, B, C, chunk=8, pump=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=5e-6)
+
+
+# ------------------------------------------- miss → measure → hit lifecycle --
+def test_cold_miss_measure_then_warm_hit(tmp_path):
+    cache = CompileCache(tmp_path / "plans.json")
+    reg = PlanRegistry(pump="measure", cache=cache)
+    q = jnp.asarray(_rng_ints((1, 2, 13, 8)))
+    k = jnp.asarray(_rng_ints((1, 2, 13, 8), seed=1))
+    v = jnp.asarray(_rng_ints((1, 2, 13, 8), seed=2))
+    reg.flash_attention(q, k, v, causal=True)
+    assert reg.stats.misses == 1 and reg.stats.hits == 0
+    assert reg.stats.measure_s > 0          # cold: paid the timing runs
+    [plan] = reg.plans()
+    assert plan["measured"] and not plan["replayed"]
+
+    # same bucket (13 and 15 both pad to 16): O(1) warm hit, no compile
+    pad2 = ((0, 0), (0, 0), (0, 2), (0, 0))
+    reg.flash_attention(jnp.pad(q, pad2), jnp.pad(k, pad2), jnp.pad(v, pad2),
+                        causal=True)
+    assert reg.stats.hits == 1 and reg.stats.misses == 1
+
+    # fresh registry, same persistent cache = a new serving process
+    # (clear_memo drops the in-process kernels a real restart wouldn't
+    # have): the measured plan replays from disk without re-measurement
+    from repro import compiler
+    compiler.clear_memo()
+    reg2 = PlanRegistry(pump="measure", cache=CompileCache(
+        tmp_path / "plans.json"))
+    reg2.flash_attention(q, k, v, causal=True)
+    [plan2] = reg2.plans()
+    assert plan2["replayed"] is True
+    assert plan2["factor"] == plan["factor"]
+    assert reg2.stats.measure_s == 0.0      # replay never re-times
+
+
+def test_same_bucket_different_shapes_share_one_plan():
+    reg = PlanRegistry(pump=1, cache=False)
+    for s in (9, 12, 16):                   # all bucket to 16
+        x = jnp.asarray(_rng_ints((1, 2, s, 8), seed=s))
+        reg.flash_attention(x, x[:, :2], x[:, :2], causal=True)
+    assert reg.stats.misses == 1 and reg.stats.hits == 2
+    assert len(reg.plans()) == 1
+
+
+def test_corrupted_registry_state_degrades_to_cold_compile(tmp_path):
+    """Garbage in the persistent plan store must degrade to a cold compile
+    (mirror of the compile-cache corruption negative paths)."""
+    path = tmp_path / "plans.json"
+    path.write_text('{"entries": {"x": 41,,}')     # invalid JSON
+    reg = PlanRegistry(pump=1, cache=CompileCache(path))
+    q = jnp.asarray(_rng_ints((1, 2, 16, 8)))
+    out = reg.flash_attention(q, q, q, causal=True)
+    assert out.shape == (1, 2, 16, 8)
+    assert reg.stats.misses == 1 and reg.stats.fallbacks == 0
+    # and the rebuilt store serves the next fresh process from disk
+    from repro import compiler
+    compiler.clear_memo()
+    reg2 = PlanRegistry(pump=1, cache=CompileCache(path))
+    reg2.flash_attention(q, q, q, causal=True)
+    [plan] = reg2.plans()
+    assert plan["served_from"] == "disk"
+
+
+def test_jax_version_is_part_of_the_cache_key(monkeypatch):
+    """Measured plans persisted under one jax build must not be replayed
+    under another: the version is folded into every request key."""
+    from repro.compiler import request_key
+    from repro.core.autopump import BUILDERS
+    g, _ = BUILDERS["vecadd"](64)
+    k1 = request_key(g, factor=1)
+    monkeypatch.setattr(jax, "__version__", "0.0.0-other")
+    k2 = request_key(g, factor=1)
+    assert k1 != k2
+
+
+def test_mixed_carry_reduction_warning_names_symbols():
+    """A carry region with extra reduction symbols falls to the gather tier
+    with a warning naming the region and the symbols (serving-path tier
+    regressions must be diagnosable from PipelineReport.warnings)."""
+    from repro.compiler.pallas_backend import partition_regions, plan_region
+    from repro.core.ir import CarrySpec, Graph
+    from repro.core.symbolic import AccessPattern, Affine, Domain
+
+    g = Graph("mixcr")
+    g.memory("x", (8, 4))
+    g.memory("o", (8,))
+    dom = Domain.of(("ci", 0, 2), ("ri", 0, 2))
+    acc_x = AccessPattern(
+        Domain.of(("ci", 0, 2), ("ri", 0, 2), ("r", 0, 4)),
+        (Affine.of("ci", 4) + Affine.of("r"), Affine.of("ri", 2)), width=2)
+    acc_o = AccessPattern(
+        Domain.of(("ci", 0, 2), ("r", 0, 4)),
+        (Affine.of("ci", 4) + Affine.of("r"),), width=1)
+
+    def step(carry, blk):
+        (s,) = carry
+        return (s + blk.sum(axis=-1),), None
+
+    g.compute("acc", dom,
+              carry=CarrySpec(axis="ci", state=(((4,), "float32"),),
+                              step_fn=step,
+                              final_fn=lambda c: {"out0": c[0]}))
+    g.connect("x", "acc", acc_x)
+    g.connect("acc", "o", acc_o)
+
+    [region] = partition_regions(g)
+    notes = []
+    assert plan_region(g, region, notes.append) is None
+    msg = [n for n in notes if "mixed carry+reduction" in n]
+    assert msg, notes
+    assert "'ci'" in msg[0] and "ri" in msg[0] and region.name in msg[0]
+
+
+# ------------------------------------------------------ ragged grouped gemm --
+def test_ops_ragged_grouped_gemm_matches_per_expert_matmul():
+    from repro.kernels import ops
+    sizes = [5, 0, 12, 3]
+    e, d, f = 4, 8, 10
+    x = _rng_ints((sum(sizes), d), seed=7)
+    w = _rng_ints((e, d, f), seed=8)
+    out = ops.grouped_gemm(jnp.asarray(x), jnp.asarray(w), bc=4,
+                           group_sizes=sizes)
+    ref, off = [], 0
+    for ei, sz in enumerate(sizes):
+        ref.append(x[off:off + sz] @ w[ei])
+        off += sz
+    np.testing.assert_array_equal(np.asarray(out), np.concatenate(ref))
+
+
+def test_ops_ragged_rejects_bad_sizes():
+    from repro.kernels import ops
+    x = jnp.zeros((8, 4))
+    w = jnp.zeros((2, 4, 4))
+    with pytest.raises(ValueError):
+        ops.grouped_gemm(x, w, group_sizes=[4, 5])   # rows mismatch
+    with pytest.raises(ValueError):
+        ops.grouped_gemm(x, w, group_sizes=[8], bc=4)  # wrong expert count
+    with pytest.raises(ValueError):
+        ops.grouped_gemm(x, w, group_sizes=[4, 4], impl="pallas")
+
+
+def test_moe_ragged_dropless_matches_dense_path():
+    """The ragged serving path (registry grouped GEMM over per-expert row
+    groups) agrees with the dense dropless einsum reference."""
+    from repro.models import moe as moe_mod
+    cfg = load_arch("deepseek-v2-lite-16b", smoke=True)
+    cfg_r = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, ragged_dropless=True))
+    p = moe_mod.moe_init(jax.random.PRNGKey(1), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, cfg.d_model))
+    y_dense, aux_dense = moe_mod.moe_apply(p, cfg, x, dropless=True)
+    y_ragged, aux_ragged = moe_mod.moe_apply(p, cfg_r, x, dropless=True)
+    np.testing.assert_allclose(np.asarray(y_ragged), np.asarray(y_dense),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(aux_ragged), float(aux_dense))
+    # under jit the routing is traced: the ragged path must quietly keep
+    # the dense reference path instead of crashing on tracers
+    y_jit, _ = jax.jit(
+        lambda xx: moe_mod.moe_apply(p, cfg_r, xx, dropless=True))(x)
+    np.testing.assert_allclose(np.asarray(y_jit), np.asarray(y_dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_plans_never_measure_on_the_hot_path():
+    """Routing shifts per request, so ragged group-size tuples keep
+    producing fresh plan keys — those cold misses must pay a capacity-model
+    compile (milliseconds), never a measured autotune (seconds of timing
+    runs) mid-request."""
+    reg = PlanRegistry(pump="measure", cache=False)   # ragged_pump='auto'
+    w = jnp.asarray(_rng_ints((3, 8, 8), seed=9))
+    for sizes in ([4, 3, 5], [1, 11, 0], [6, 0, 6]):  # three routings
+        x = jnp.asarray(_rng_ints((sum(sizes), 8), seed=sum(sizes)))
+        reg.grouped_gemm(x, w, group_sizes=sizes)
+    assert reg.stats.measure_s == 0.0
+    assert all(not pl["measured"] for pl in reg.plans())
+
+
+def test_kernel_plan_typo_is_rejected():
+    cfg = load_arch("qwen3-0.6b", smoke=True)
+    with pytest.raises(ValueError, match="kernel_plan"):
+        dataclasses.replace(cfg, kernel_plan="measured")
+
+
+# -------------------------------------------------- end-to-end model parity --
+def test_forward_registry_route_matches_direct_route():
+    """transformer + ssm step through the registry ('measure') is within
+    carry-accumulation tolerance of the direct kernels.ops path
+    ('direct') — the measured pump factor must not change the math."""
+    from repro.models import model as model_mod, transformer
+    for arch, impl_field in (("qwen3-0.6b", "attention_impl"),
+                             ("mamba2-1.3b", "ssm_impl")):
+        cfg = dataclasses.replace(load_arch(arch, smoke=True),
+                                  **{impl_field: "pallas"})
+        cfg_dir = dataclasses.replace(cfg, kernel_plan="direct")
+        params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                  cfg.vocab_size)
+        l_reg, _ = transformer.forward(cfg, params, toks)
+        l_dir, _ = transformer.forward(cfg_dir, params, toks)
+        np.testing.assert_allclose(np.asarray(l_reg), np.asarray(l_dir),
+                                   rtol=2e-5, atol=5e-6, err_msg=arch)
+
+
+def test_warmup_grid_makes_real_calls_pure_hits():
+    from repro.models import model as model_mod, transformer
+    cfg = dataclasses.replace(load_arch("qwen3-0.6b", smoke=True),
+                              attention_impl="pallas")
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                              cfg.vocab_size)
+    reg = default_registry()
+    reqs = transformer.plan_requests(cfg, 2, 16)
+    assert reqs, "pallas attention config must enumerate warmup requests"
+    reg.warmup(reqs)
+    before = reg.stats.misses
+    transformer.forward(cfg, params, toks)
+    assert reg.stats.misses == before       # every real call was a hit
+    assert reg.stats.hits > 0
+
+
+def test_engine_registry_serving_matches_xla_engine():
+    """Engine generation over the registry path (pallas attention,
+    measured plans) produces the same tokens as the xla_chunked engine,
+    and reports warmup/compile time separately from steady-state."""
+    from repro.models import model as model_mod
+    from repro.serve.engine import Engine, ServeConfig
+    cfg = load_arch("qwen3-0.6b", smoke=True)
+    cfg_pl = dataclasses.replace(cfg, attention_impl="pallas")
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(batch=2, max_len=16)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    out_x = Engine(cfg, params, scfg).generate(prompts, 4)
+    eng = Engine(cfg_pl, params, scfg)
+    assert eng.warmup_s > 0 and eng.warmup_report   # grid pre-measured
+    out_r = eng.generate(prompts, 4)
+    np.testing.assert_array_equal(np.asarray(out_r), np.asarray(out_x))
+    st = eng.stats()
+    assert st["phases"]["decode"]["steps"] == 3     # first step = compile
+    assert st["phases"]["decode"]["compile_s"] > 0
+    assert st["registry"]["hits"] >= 1
