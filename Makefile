@@ -31,9 +31,11 @@ bench-smoke:
 	$(PY) -m benchmarks.run --mode compiler --smoke
 
 # serving-path benchmark: measured plan registry vs default-pump direct ops
-# (writes BENCH_serve.json — per-layer step time, plan hit rate, measured
-# vs default pump).  The smoke variant is wired into tier-1 alongside
-# bench-smoke via tests/test_benchmarks.py.
+# (writes BENCH_serve.json — per-layer step time for prefill AND the
+# per-token decode rows (kernelized decode_attention/ssd_decode vs plain
+# jnp), plan hit rate split by phase, measured vs default pump).  The smoke
+# variant is wired into tier-1 alongside bench-smoke via
+# tests/test_benchmarks.py, which asserts the decode rows are present.
 bench-serve:
 	$(PY) -m benchmarks.run --mode serve
 

@@ -14,13 +14,20 @@ ways at serve shapes:
 * ``direct``    — ``kernel_plan='direct'``: the raw ``kernels.ops`` call
   with the default pump (M=1), the differential reference.
 
+Schema 2 adds the **decode rows**: the same per-layer paired protocol
+applied to the per-token decode step (S = 1 against a filled cache) — the
+kernelized ``decode_attention`` / ``ssd_decode`` registry route vs the
+plain-jnp decode math — after warming the decode bucket grid
+(``plan_requests(..., cached=True)``), so the hit-rate window covers the
+highest-frequency path in the system.
+
 Per layer it records steady-state step time for both paths, the measured
 pump factor vs the default, and output parity; registry stats are snapshot
 around the steady-state phase so the reported **plan hit rate is the
-post-warmup rate** (the acceptance bar is 100%).  An end-to-end Engine
-section demonstrates the serving timing discipline: warmup / per-phase
-compile / steady-state step time reported separately.  The JSON lands at
-the repo root (``BENCH_serve.json``; ``--smoke``:
+post-warmup rate** (the acceptance bar is 100%, prefill and decode).  An
+end-to-end Engine section demonstrates the serving timing discipline:
+warmup / per-phase compile / steady-state step time reported separately.
+The JSON lands at the repo root (``BENCH_serve.json``; ``--smoke``:
 ``BENCH_serve_smoke.json``) for cross-PR tracking.
 """
 from __future__ import annotations
@@ -115,6 +122,65 @@ def _layer_cases(smoke: bool):
     return cases
 
 
+def _decode_cases(smoke: bool):
+    """Per-token decode steps: kernelized (plan registry) vs plain jnp.
+
+    Each case steps one model layer in decode mode (S = 1 against a filled
+    cache) eagerly, so the registry lookup happens per step — the measured
+    hit-rate window covers the decode fast path, not just a one-off trace.
+    ``meta['warm']`` carries (cfg, batch, max_len) for the decode-bucket
+    grid warmup (``plan_requests(..., cached=True)``).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import load_arch
+    from repro.models import attention as attn_mod
+    from repro.models import ssm as ssm_mod
+
+    b, max_len = (2, 32) if smoke else (4, 128)
+    pos = max_len - 9              # mid-cache decode position
+    cases = []
+
+    cfg_a = dataclasses.replace(load_arch("qwen3-0.6b", smoke=True),
+                                attention_impl="pallas")
+    p_a = attn_mod.gqa_init(jax.random.PRNGKey(0), cfg_a)
+    kshape = (b, cfg_a.n_kv_heads, max_len, cfg_a.head_dim_)
+    cache_a = {"k": jax.random.normal(jax.random.PRNGKey(1), kshape),
+               "v": jax.random.normal(jax.random.PRNGKey(2), kshape),
+               "pos": jnp.asarray(pos, jnp.int32)}
+    x1_a = jax.random.normal(jax.random.PRNGKey(3), (b, 1, cfg_a.d_model))
+    pos_a = jnp.array([pos])
+
+    def attn_decode(cfg):
+        out, _ = attn_mod.gqa_apply(p_a, cfg, x1_a, positions=pos_a,
+                                    cache=dict(cache_a))
+        return out
+
+    cases.append(("attention_decode", cfg_a, attn_decode,
+                  dict(batch=b, seq=pos + 1, kernel="decode_attention",
+                       warm=(cfg_a, b, max_len))))
+
+    cfg_s = dataclasses.replace(load_arch("mamba2-1.3b", smoke=True),
+                                ssm_impl="pallas")
+    p_s = ssm_mod.mamba2_init(jax.random.PRNGKey(4), cfg_s)
+    cache0 = ssm_mod.mamba2_cache_init(cfg_s, b, jnp.float32)
+    cache_s = {"state": jax.random.normal(jax.random.PRNGKey(5),
+                                          cache0["state"].shape),
+               "conv": jax.random.normal(jax.random.PRNGKey(6),
+                                         cache0["conv"].shape),
+               "pos": jnp.asarray(pos, jnp.int32)}
+    x1_s = jax.random.normal(jax.random.PRNGKey(7), (b, 1, cfg_s.d_model))
+
+    def ssm_decode(cfg):
+        out, _ = ssm_mod.mamba2_apply(p_s, cfg, x1_s, cache=dict(cache_s))
+        return out
+
+    cases.append(("ssm_decode", cfg_s, ssm_decode,
+                  dict(batch=b, seq=pos + 1, kernel="ssd_decode",
+                       warm=(cfg_s, b, max_len))))
+    return cases
+
+
 def _engine_section(smoke: bool) -> dict:
     """End-to-end Engine run: warmup / compile / steady-state split."""
     import jax
@@ -153,20 +219,33 @@ def run_report(smoke: bool = False, out_path=None) -> dict:
     try:
         reg = default_registry()
         report = {
-            "schema": 1,
+            "schema": 2,
             "smoke": smoke,
             "platform": platform.platform(),
             "python": sys.version.split()[0],
             "entries": [],
         }
 
-        cases = _layer_cases(smoke)
+        cases = [(n, c, s, dict(m, phase="prefill"))
+                 for n, c, s, m in _layer_cases(smoke)]
+        cases += [(n, c, s, dict(m, phase="decode"))
+                  for n, c, s, m in _decode_cases(smoke)]
 
         # ---- warmup: pre-measure the bucket grid the layers will touch ----
+        # prefill cases warm the forward grid; decode cases warm the decode
+        # bucket grid (the cached-serving enumeration, filtered to the
+        # decode kernels so the prefill-side plans are not double-warmed)
         t0 = time.perf_counter()
         for _name, cfg, _step, meta in cases:
-            reqs = transformer.plan_requests(cfg, meta["batch"], meta["seq"],
-                                             dtype="float32")
+            if meta["phase"] == "decode":
+                wcfg, wb, wlen = meta["warm"]
+                reqs = [r for r in transformer.plan_requests(
+                            wcfg, wb, wlen, dtype="float32", cached=True)
+                        if r[0] in ("decode_attention", "ssd_decode")]
+            else:
+                reqs = transformer.plan_requests(cfg, meta["batch"],
+                                                 meta["seq"],
+                                                 dtype="float32")
             reg.warmup(reqs)
         report["warmup_s"] = round(time.perf_counter() - t0, 4)
         report["plans_warmed"] = len(reg.plans())
@@ -197,6 +276,7 @@ def run_report(smoke: bool = False, out_path=None) -> dict:
             measured = any(pl["measured"] for pl in plans)
             entry = {
                 "layer": name, "kernel": meta["kernel"],
+                "phase": meta["phase"],
                 "batch": meta["batch"], "seq": meta["seq"],
                 "registry_us": round(reg_us, 1),
                 "direct_us": round(dir_us, 1),

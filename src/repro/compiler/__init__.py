@@ -135,13 +135,7 @@ def _build(graph: Graph, *, factor, mode, vmem_budget, max_factor, estimate,
     out_graph, report = pipe.run(graph)
     spec = PumpSpec(factor=report.factor, mode=mode, vmem_budget=vmem_budget)
 
-    seen = set()
-
-    def warn(msg: str) -> None:
-        if msg not in seen:
-            seen.add(msg)
-            report.warnings.append(msg)
-
+    warn = report.warn
     fn = None
     if backend == "jax":
         fn = lower(out_graph, jit=jit, warn=warn)
@@ -274,7 +268,7 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
         kern = build(factor)
         served = None
         persist = False
-        kern.report.warnings.append(
+        kern.report.warn(
             "autotune='measure' requested inside an active jax trace: "
             "in-trace timings are meaningless — compiled without "
             "measurement; measure from an eager context (e.g. plan-registry "

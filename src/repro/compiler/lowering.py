@@ -130,14 +130,17 @@ def carry_sequence_apply(g: Graph, node) -> Callable[[Dict[str, Any]],
     ``in{k}`` to the gathered operand sequences.  Each iteration cuts one
     block per operand out of its sequence, threads the carry state (reset at
     the start of every sweep of the carry axis — the paper's fast-domain
-    accumulator staying inside the pumped region), and either appends one
-    output block per step or emits ``final_fn(state)`` once per sweep.
+    accumulator staying inside the pumped region), and emits outputs per the
+    :class:`~repro.core.ir.CarrySpec` partition: the leading ``step_outs``
+    outputs append one block per step and the rest come from
+    ``final_fn(state)`` once per sweep.
     """
     spec = node.meta["carry"]
     n_steps, sweep, in_blocks, out_blocks, outer_syms = carry_layout(g, node)
     outer_exts = node.domain.extents[:-1]
     out_edges = g.out_edges(node.name)
     n_out = len(out_edges)
+    n_step_out = spec.n_step_outs(n_out)
     out_dtypes = []
     for e in out_edges:
         mem, _acc = sink_access(g, e)
@@ -148,14 +151,17 @@ def carry_sequence_apply(g: Graph, node) -> Callable[[Dict[str, Any]],
         raise LoweringError(
             f"carry compute {node.name!r}: output access does not decompose "
             "into a blocked view")
-    n_emit = n_steps if spec.final_fn is None else n_steps // sweep
+    # per-step outputs emit one block per step; per-sweep (final) outputs
+    # emit one block per sweep of the carry axis
+    emits = [n_steps if k < n_step_out else n_steps // sweep
+             for k in range(n_out)]
 
     def run(bound: Dict[str, Any]) -> Dict[str, Any]:
         seqs = [jnp.reshape(bound[f"in{k}"], (-1,))
                 for k in range(len(in_blocks))]
         per_step = [s.shape[0] // n_steps for s in seqs]
         init_state = tuple(jnp.asarray(a) for a in spec.init_arrays(jnp))
-        bufs = tuple(jnp.zeros(n_emit * out_sizes[k], dtype=out_dtypes[k])
+        bufs = tuple(jnp.zeros(emits[k] * out_sizes[k], dtype=out_dtypes[k])
                      for k in range(n_out))
 
         def body(i, st):
@@ -177,28 +183,27 @@ def carry_sequence_apply(g: Graph, node) -> Callable[[Dict[str, Any]],
                     step=pos, outer=_unflatten(i // sweep, outer_exts),
                     pump=0)
             carry2, souts = spec.step_fn(carry, *blocks, **kwargs)
-            if spec.final_fn is None:
-                bufs_t = tuple(
-                    jax.lax.dynamic_update_slice(
-                        buf,
-                        jnp.reshape(souts[f"out{k}"], (-1,)).astype(buf.dtype),
-                        (i * out_sizes[k],))
-                    for k, buf in enumerate(bufs_t))
-            else:
+            new_bufs = list(bufs_t)
+            for k in range(n_step_out):
+                new_bufs[k] = jax.lax.dynamic_update_slice(
+                    bufs_t[k],
+                    jnp.reshape(souts[f"out{k}"],
+                                (-1,)).astype(bufs_t[k].dtype),
+                    (i * out_sizes[k],))
+            if spec.final_fn is not None:
                 fouts = spec.final_fn(carry2)
                 j = i // sweep
                 last = pos == sweep - 1
-                bufs_t = tuple(
-                    jnp.where(
+                for k in range(n_step_out, n_out):
+                    new_bufs[k] = jnp.where(
                         last,
                         jax.lax.dynamic_update_slice(
-                            buf,
+                            bufs_t[k],
                             jnp.reshape(fouts[f"out{k}"],
-                                        (-1,)).astype(buf.dtype),
+                                        (-1,)).astype(bufs_t[k].dtype),
                             (j * out_sizes[k],)),
-                        buf)
-                    for k, buf in enumerate(bufs_t))
-            return carry2, bufs_t
+                        bufs_t[k])
+            return carry2, tuple(new_bufs)
 
         _carry, bufs = jax.lax.fori_loop(0, n_steps, body, (init_state, bufs))
         return {f"out{k}": bufs[k] for k in range(n_out)}

@@ -254,10 +254,11 @@ def plan_region(g: Graph, region: Region,
         warn(f"region {region.name}: carry compute in a multi-compute "
              "region; using gather fallback")
         return None
-    if len(region.outputs) != 1 and carry is None:
-        warn(f"region {region.name}: {len(region.outputs)} output memories; "
-             "tile emission needs exactly 1 (or a carry compute) — using "
-             "gather fallback")
+    multi_out = len(region.outputs) > 1
+    if multi_out and carry is None and len(region.computes) > 1:
+        warn(f"region {region.name}: {len(region.outputs)} output memories "
+             "from a multi-compute region; tile emission needs a single "
+             "compute (or a carry compute) — using gather fallback")
         return None
     if any(a is None for _c, _m, a in region.outputs):
         warn(f"region {region.name}: output access unknown")
@@ -275,9 +276,13 @@ def plan_region(g: Graph, region: Region,
             return None
         tile_fns[c] = fn
 
+    def step_syms(c: str) -> Tuple[str, ...]:
+        dom = g.nodes[c].domain
+        return dom.symbols if dom is not None else ()
+
     outputs: List[Tuple[str, str, BlockedAccess]] = []
     for c, mem, acc in region.outputs:
-        ba = blocked_access(acc, g.nodes[mem].shape)
+        ba = blocked_access(acc, g.nodes[mem].shape, protect=step_syms(c))
         if ba is None:
             warn(f"region {region.name}: output access to {mem} is not "
                  "block-affine")
@@ -296,7 +301,8 @@ def plan_region(g: Graph, region: Region,
                 warn(f"region {region.name}: operand {src[1]} of {c} has "
                      "no access pattern")
                 return None
-            acc = blocked_access(src[2], g.nodes[src[1]].shape)
+            acc = blocked_access(src[2], g.nodes[src[1]].shape,
+                                 protect=step_syms(c))
             if acc is None:
                 warn(f"region {region.name}: operand {src[1]} of {c} is not "
                      "block-affine")
@@ -315,6 +321,21 @@ def plan_region(g: Graph, region: Region,
     reduce_syms = tuple(extra_syms)
     carry_syms: Tuple[str, ...] = ()
     outer_syms: Tuple[str, ...] = ()
+    if multi_out and carry is None:
+        # multi-output map (e.g. the SSD decode step's y + new state): every
+        # output must be written exactly once per grid point, so reduction
+        # symbols and grid mismatches between the outputs both disqualify
+        # tile emission
+        if extra_syms:
+            warn(f"region {region.name}: multi-output region with reduction "
+                 f"symbols {extra_syms}; using gather fallback")
+            return None
+        for _c, mem, ba in outputs[1:]:
+            if tuple(ba.grid) != tuple(out_block.grid):
+                warn(f"region {region.name}: output {mem} grid "
+                     f"{ba.grid_symbols} differs from the region grid "
+                     f"{out_block.grid_symbols}; using gather fallback")
+                return None
     if carry is not None:
         # mixed carry+reduction first: naming the extra reduction symbols is
         # strictly more actionable than the generic innermost-axis message
@@ -566,6 +587,7 @@ def emit_blockloop(g: Graph, plan: RegionPlan) -> Callable:
     if plan.carry is not None:
         spec = plan.carry
         mems_order = [mem for _c, mem, _ba in plan.outputs]
+        n_step_out = spec.n_step_outs(len(plan.outputs))
 
         def region_fn(mems: Dict[str, Any]) -> Dict[str, Any]:
             init_state = tuple(
@@ -584,23 +606,47 @@ def emit_blockloop(g: Graph, plan: RegionPlan) -> Callable:
                           for k in range(
                               len(plan.region.bindings[plan.out_compute]))]
                 carry2, souts = spec.step_fn(carry, *blocks, **kwargs)
-                if spec.final_fn is None:
-                    bufs = tuple(
-                        write_block(buf, ba, env, souts[f"out{k}"])
-                        for k, (buf, (_c, _m, ba))
-                        in enumerate(zip(bufs, plan.outputs)))
-                else:
+                new_bufs = list(bufs)
+                for k in range(n_step_out):
+                    _c, _m, ba = plan.outputs[k]
+                    new_bufs[k] = write_block(bufs[k], ba, env,
+                                              souts[f"out{k}"])
+                if spec.final_fn is not None:
                     fouts = spec.final_fn(carry2)
-                    bufs = tuple(
-                        jnp.where(last,
-                                  write_block(buf, ba, env, fouts[f"out{k}"]),
-                                  buf)
-                        for k, (buf, (_c, _m, ba))
-                        in enumerate(zip(bufs, plan.outputs)))
-                return carry2, bufs
+                    for k in range(n_step_out, len(plan.outputs)):
+                        _c, _m, ba = plan.outputs[k]
+                        new_bufs[k] = jnp.where(
+                            last,
+                            write_block(bufs[k], ba, env, fouts[f"out{k}"]),
+                            bufs[k])
+                return carry2, tuple(new_bufs)
 
             _carry, bufs = jax.lax.fori_loop(0, total, body,
                                              (init_state, bufs0))
+            return dict(zip(mems_order, bufs))
+
+        return region_fn
+
+    if len(plan.outputs) > 1:
+        # multi-output map: one tile_fn call per grid point writes every
+        # output block (no reduction symbols by plan construction)
+        mems_order = [mem for _c, mem, _ba in plan.outputs]
+        comp = plan.out_compute
+        n_ops = len(plan.region.bindings[comp])
+
+        def region_fn(mems: Dict[str, Any]) -> Dict[str, Any]:
+            def body(step, bufs):
+                env = unflatten(step)
+                get_block = make_get_block(mems, env)
+                r = plan.tile_fns[comp](
+                    **{f"in{k}": get_block(comp, k) for k in range(n_ops)})
+                return tuple(
+                    write_block(buf, ba, env, r[f"out{k}"])
+                    for k, (buf, (_c, _m, ba))
+                    in enumerate(zip(bufs, plan.outputs)))
+
+            bufs = jax.lax.fori_loop(0, total, body,
+                                     tuple(mems[m] for m in mems_order))
             return dict(zip(mems_order, bufs))
 
         return region_fn
@@ -683,6 +729,7 @@ def emit_pallas(g: Graph, plan: RegionPlan, interpret: bool) -> Callable:
         from jax.experimental.pallas import tpu as pltpu
 
         spec = plan.carry
+        n_step_out = spec.n_step_outs(n_out)
         state_shapes = []
         for i, entry in enumerate(spec.state):
             shape = entry[0]
@@ -715,20 +762,20 @@ def emit_pallas(g: Graph, plan: RegionPlan, interpret: bool) -> Callable:
             carry2, souts = spec.step_fn(carry, *blocks, **kwargs)
             for ref, val in zip(st_refs, carry2):
                 ref[...] = val
-            if spec.final_fn is None:
-                for k, ref in enumerate(out_refs):
-                    ref[...] = jnp.reshape(
-                        souts[f"out{k}"],
-                        plan.outputs[k][2].block).astype(ref.dtype)
-            else:
+            for k in range(n_step_out):
+                out_refs[k][...] = jnp.reshape(
+                    souts[f"out{k}"],
+                    plan.outputs[k][2].block).astype(out_refs[k].dtype)
+            if spec.final_fn is not None:
                 fouts = spec.final_fn(carry2)
 
                 @pl.when(last)
                 def _finish():
-                    for k, ref in enumerate(out_refs):
-                        ref[...] = jnp.reshape(
+                    for k in range(n_step_out, n_out):
+                        out_refs[k][...] = jnp.reshape(
                             fouts[f"out{k}"],
-                            plan.outputs[k][2].block).astype(ref.dtype)
+                            plan.outputs[k][2].block).astype(
+                                out_refs[k].dtype)
 
         def region_fn(mems: Dict[str, Any]) -> Dict[str, Any]:
             args = [mems[plan.region.bindings[c][k][1]] for c, k in mem_order]
@@ -739,6 +786,35 @@ def emit_pallas(g: Graph, plan: RegionPlan, interpret: bool) -> Callable:
                 out_specs=out_specs,
                 out_shape=out_shapes,
                 scratch_shapes=scratch_shapes,
+                interpret=interpret,
+            )(*args)
+            return dict(zip(mems_order, outs))
+
+        return region_fn
+
+    if n_out > 1:
+        # multi-output map: no reduction symbols (plan construction), every
+        # out_ref written per grid point
+        comp = plan.out_compute
+        n_ops = len(plan.region.bindings[comp])
+
+        def kernel(*refs):
+            in_refs, out_refs = refs[:len(mem_order)], refs[len(mem_order):]
+            blocks = {key: r[...] for key, r in zip(mem_order, in_refs)}
+            r = plan.tile_fns[comp](
+                **{f"in{k}": blocks[(comp, k)] for k in range(n_ops)})
+            for k, ref in enumerate(out_refs):
+                ref[...] = jnp.reshape(
+                    r[f"out{k}"], plan.outputs[k][2].block).astype(ref.dtype)
+
+        def region_fn(mems: Dict[str, Any]) -> Dict[str, Any]:
+            args = [mems[plan.region.bindings[c][k][1]] for c, k in mem_order]
+            outs = pl.pallas_call(
+                kernel,
+                grid=grid_sizes,
+                in_specs=in_specs,
+                out_specs=out_specs,
+                out_shape=out_shapes,
                 interpret=interpret,
             )(*args)
             return dict(zip(mems_order, outs))

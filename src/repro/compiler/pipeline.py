@@ -53,6 +53,13 @@ class PipelineReport:
                 return r
         return None
 
+    def warn(self, msg: str) -> None:
+        """Append a degradation note, deduplicated: lowering revisits (and
+        bucket-grid sweeps that aggregate reports) re-emit byte-identical
+        messages, and each unique message should be recorded once."""
+        if msg not in self.warnings:
+            self.warnings.append(msg)
+
     @property
     def warning_count(self) -> int:
         return len(self.warnings)

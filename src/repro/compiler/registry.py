@@ -91,6 +91,17 @@ class BucketPolicy:
         return out
 
 
+# the S=1 serving fast path: plans keyed by these kernels are counted under
+# the "decode" phase so a cold decode bucket is visible at a glance in the
+# registry-stats printout (everything else is "prefill" — prefill, scoring
+# and benchmark forward plans)
+DECODE_KERNELS = frozenset({"decode_attention", "ssd_decode"})
+
+
+def _phase_of(kernel: str) -> str:
+    return "decode" if kernel in DECODE_KERNELS else "prefill"
+
+
 @dataclasses.dataclass
 class RegistryStats:
     hits: int = 0
@@ -98,6 +109,19 @@ class RegistryStats:
     measure_s: float = 0.0    # cold measured-autotune compiles
     compile_s: float = 0.0    # replayed / non-measured compiles
     fallbacks: int = 0        # lookups that fell back to the direct path
+    # per-phase split of hits/misses (see DECODE_KERNELS)
+    phase: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=lambda: {"prefill": {"hits": 0, "misses": 0},
+                                 "decode": {"hits": 0, "misses": 0}})
+
+    def count(self, kernel: str, hit: bool) -> None:
+        bucket = self.phase[_phase_of(kernel)]
+        if hit:
+            self.hits += 1
+            bucket["hits"] += 1
+        else:
+            self.misses += 1
+            bucket["misses"] += 1
 
     @property
     def hit_rate(self) -> float:
@@ -109,7 +133,9 @@ class RegistryStats:
                 "hit_rate": round(self.hit_rate, 4),
                 "measure_s": round(self.measure_s, 4),
                 "compile_s": round(self.compile_s, 4),
-                "fallbacks": self.fallbacks}
+                "fallbacks": self.fallbacks,
+                "prefill": dict(self.phase["prefill"]),
+                "decode": dict(self.phase["decode"])}
 
 
 class PlanRegistry:
@@ -156,7 +182,7 @@ class PlanRegistry:
         key = (kernel, tuple(builder_args),
                tuple(sorted(builder_kwargs.items())), pump, self.backend)
         if key in self._plans:
-            self.stats.hits += 1
+            self.stats.count(kernel, hit=True)
             return self._plans[key]
         from repro import compiler
         if pump == "measure" and not compiler._trace_state_clean():
@@ -172,7 +198,7 @@ class PlanRegistry:
                 stacklevel=3)
             return self.kernel(kernel, builder_args, builder_kwargs,
                                pump="auto")
-        self.stats.misses += 1
+        self.stats.count(kernel, hit=False)
         from repro.core.autopump import BUILDERS
         factor, mode, autotune = self._request(pump)
         g, est = BUILDERS[kernel](*builder_args, **builder_kwargs)
@@ -229,15 +255,39 @@ class PlanRegistry:
         return args, kwargs, (bb, sb, tb)
 
     def ssd_request(self, *, b: int, l: int, h: int, p: int, n: int,
-                    chunk: int, n_groups: int, dtype: str):
+                    chunk: int, n_groups: int, dtype: str,
+                    final_state: bool = False):
         bb = self.policy.bucket_batch(b)
         lb = self.policy.bucket_seq(l)
         chunk_e = _fit_block(chunk, lb)
         itemsize = jnp.dtype(dtype).itemsize
         args = (bb, lb, h, p, n)
         kwargs = dict(chunk=chunk_e, n_groups=n_groups, dtype=dtype,
-                      itemsize=itemsize)
+                      itemsize=itemsize, final_state=bool(final_state))
         return args, kwargs, (bb, lb)
+
+    def decode_request(self, *, b: int, h: int, hkv: int, t: int, d: int,
+                       dtype: str, bkv: int = 128):
+        """S=1 decode attention bucket: ``t`` is the attended cache prefix
+        (pos + 1 when the position is concrete, the full preallocated cache
+        length under a jit trace) and buckets on the same pow2 ladder as
+        prefill sequence dims — a growing decode context touches O(log T)
+        plans, keyed separately from prefill by the kernel name."""
+        bb = self.policy.bucket_batch(b)
+        tb = self.policy.bucket_seq(t)
+        bkv_e = _fit_block(bkv, tb)
+        args = (bb, h, tb, d)
+        kwargs = dict(bkv=bkv_e, hkv=hkv, dtype=dtype,
+                      itemsize=jnp.dtype(dtype).itemsize)
+        return args, kwargs, (bb, tb)
+
+    def ssd_decode_request(self, *, b: int, h: int, p: int, n: int,
+                           n_groups: int, dtype: str):
+        bb = self.policy.bucket_batch(b)
+        args = (bb, h, p, n)
+        kwargs = dict(n_groups=n_groups, dtype=dtype,
+                      itemsize=jnp.dtype(dtype).itemsize)
+        return args, kwargs, (bb,)
 
     def grouped_request(self, *, e: int, d: int, f: int,
                         group_sizes: Sequence[int], dtype: str,
@@ -280,18 +330,31 @@ class PlanRegistry:
             return out          # exact bucket: skip the slice dispatch
         return out[:b, :, :s, :]
 
-    def ssd_scan(self, x, dt, A, B, C, *, chunk: int = 16):
+    def ssd_scan(self, x, dt, A, B, C, *, chunk: int = 16,
+                 final_state: bool = False):
         """Bucketed SSD scan.  x: (B, L, H, P); dt zero-padding is an
-        identity step for the carried state, so L-padding is exact."""
+        identity step for the carried state, so L-padding is exact — which
+        also makes the ``final_state=True`` form exact: padded steps leave
+        the carried state untouched, so the padded sweep's final state *is*
+        the real final state.  Returns y, or ``(y, state)`` with
+        ``final_state=True`` (state: (B, H, N, P) fp32 — the cached-prefill
+        route)."""
         b, l, h, p = x.shape
         grp, n = B.shape[2], B.shape[3]
         try:
             args, kwargs, (bb, lb) = self.ssd_request(
                 b=b, l=l, h=h, p=p, n=n, chunk=chunk, n_groups=grp,
-                dtype=str(x.dtype))
+                dtype=str(x.dtype), final_state=final_state)
             kern = self.kernel("ssd_scan", args, kwargs)
         except Exception as e:  # noqa: BLE001
             self.stats.fallbacks += 1
+            if final_state:
+                # ops.ssd_scan(final_state=True) is compiler-only and would
+                # re-raise on the same failure; degrade to the sequential
+                # jnp recurrence, which does produce the final state
+                warnings.warn(f"plan registry: ssd_scan fell back to the "
+                              f"plain jnp scan ({e})", stacklevel=2)
+                return _ssd_scan_reference(x, dt, A, B, C)
             warnings.warn(f"plan registry: ssd_scan fell back to the direct "
                           f"ops path ({e})", stacklevel=2)
             from repro.kernels.ops import ssd_scan as _ssd
@@ -300,10 +363,80 @@ class PlanRegistry:
         dtp = _pad_axes(dt, {0: bb, 1: lb})
         bp = _pad_axes(B, {0: bb, 1: lb})
         cp = _pad_axes(C, {0: bb, 1: lb})
-        out = kern({"x": xp, "dt": dtp, "a": A, "bmat": bp, "cmat": cp})["y"]
+        out = kern({"x": xp, "dt": dtp, "a": A, "bmat": bp, "cmat": cp})
+        y = out["y"]
+        if final_state:
+            st = out["state"]
+            if (bb, lb) == (b, l):
+                return y, st
+            return y[:b, :l], st[:b]
         if (bb, lb) == (b, l):
-            return out          # exact bucket: skip the slice dispatch
-        return out[:b, :l]
+            return y            # exact bucket: skip the slice dispatch
+        return y[:b, :l]
+
+    def decode_attention(self, q, k_cache, v_cache, pos, *, bkv: int = 128):
+        """Kernelized S=1 decode: one query row against the preallocated
+        KV cache.  q: (B, H, D); caches: (B, Hkv, T, D); ``pos`` is the
+        current write position (scalar or (B,) int32 — valid cache slots
+        are 0..pos, enforced by the kernel's symbolic position mask).
+
+        With a *concrete* ``pos`` (eager serving / benchmarks) the cache is
+        sliced to the pos bucket before the call, so a decode step costs
+        O(bucket(pos)), not O(max_len); a traced ``pos`` (the jit'd engine
+        decode step) keys one plan on the full preallocated length and lets
+        the mask do the work."""
+        import jax
+        b, h, d = q.shape
+        hkv, t = k_cache.shape[1], k_cache.shape[2]
+        try:
+            concrete = not isinstance(pos, jax.core.Tracer)
+            # per-row (B,) positions bucket on the furthest row: every row's
+            # own mask still cuts its prefix, shorter rows just mask more
+            t_req = min(int(jnp.max(jnp.asarray(pos))) + 1, t) if concrete \
+                else t
+            args, kwargs, (bb, tb) = self.decode_request(
+                b=b, h=h, hkv=hkv, t=t_req, d=d, dtype=str(q.dtype), bkv=bkv)
+            kern = self.kernel("decode_attention", args, kwargs)
+        except Exception as e:  # noqa: BLE001 — serving must not die
+            self.stats.fallbacks += 1
+            warnings.warn(f"plan registry: decode_attention fell back to "
+                          f"the plain jnp path ({e})", stacklevel=2)
+            return _decode_reference(q, k_cache, v_cache, pos)
+        t_keep = min(tb, t)     # bucket ≥ pos+1, so no valid slot is cut
+        qp = _pad_axes(q, {0: bb})
+        kp = _pad_axes(k_cache[:, :, :t_keep], {0: bb, 2: tb})
+        vp = _pad_axes(v_cache[:, :, :t_keep], {0: bb, 2: tb})
+        pp = _pad_axes(_pos_vec(pos, b), {0: bb})
+        out = kern({"q": qp, "k": kp, "v": vp, "pos": pp})["o"]
+        if bb == b:
+            return out
+        return out[:b]
+
+    def ssd_decode(self, state, x, dt, A, B, C):
+        """Kernelized single-token SSD state update.  state: (B, H, N, P)
+        fp32; x: (B, H, P); dt: (B, H) (post-softplus); A: (H,); B/C:
+        (B, G, N).  Returns (y, new_state).  Batch padding is exact: padded
+        rows carry dt = 0 (identity state step) and are sliced away."""
+        b, h, n, p = state.shape
+        grp = B.shape[1]
+        try:
+            args, kwargs, (bb,) = self.ssd_decode_request(
+                b=b, h=h, p=p, n=n, n_groups=grp, dtype=str(x.dtype))
+            kern = self.kernel("ssd_decode", args, kwargs)
+        except Exception as e:  # noqa: BLE001
+            self.stats.fallbacks += 1
+            warnings.warn(f"plan registry: ssd_decode fell back to the "
+                          f"plain jnp path ({e})", stacklevel=2)
+            return _ssd_decode_reference(state, x, dt, A, B, C)
+        out = kern({"state": _pad_axes(state, {0: bb}),
+                    "x": _pad_axes(x, {0: bb}),
+                    "dt": _pad_axes(dt, {0: bb}), "a": A,
+                    "bmat": _pad_axes(B, {0: bb}),
+                    "cmat": _pad_axes(C, {0: bb})})
+        y, st = out["y"], out["state_out"]
+        if bb == b:
+            return y, st
+        return y[:b], st[:b]
 
     def grouped_gemm(self, x, w, *, group_sizes: Sequence[int],
                      bf: int = 128, bd: int = 128):
@@ -344,8 +477,11 @@ class PlanRegistry:
         replayed from the persistent cache, and the wall time paid."""
         canon = {"flash_attention": self.flash_request,
                  "ssd_scan": self.ssd_request,
-                 "grouped_gemm": self.grouped_request}
+                 "grouped_gemm": self.grouped_request,
+                 "decode_attention": self.decode_request,
+                 "ssd_decode": self.ssd_decode_request}
         report = []
+        surfaced: List[str] = []
         for kernel, spec in requests:
             args, kwargs, _pads = canon[kernel](**spec)
             t0 = time.perf_counter()
@@ -353,6 +489,9 @@ class PlanRegistry:
             # serving wrapper will look them up with
             pump = self.ragged_pump if kernel == "grouped_gemm" else None
             kern = self.kernel(kernel, args, kwargs, pump=pump)
+            for msg in kern.report.warnings:
+                if msg not in surfaced:
+                    surfaced.append(msg)
             tuned = kern.report.autotune or {}
             report.append({
                 "kernel": kernel, "args": list(args),
@@ -361,6 +500,11 @@ class PlanRegistry:
                 "replayed": bool(tuned.get("replayed")),
                 "time_s": round(time.perf_counter() - t0, 4),
             })
+        # compile warnings are deduplicated across the whole sweep: the same
+        # degradation note recurs for every bucket of a kernel, and launch
+        # output should name each unique condition once, not once per compile
+        for msg in surfaced:
+            warnings.warn(f"plan warmup: {msg}", stacklevel=2)
         return report
 
 
@@ -374,6 +518,73 @@ def _pad_axes(arr, targets: Dict[int, int]):
             pads[axis] = (0, tgt - cur)
             dirty = True
     return jnp.pad(arr, pads) if dirty else arr
+
+
+def _pos_vec(pos, b: int):
+    """Normalize a scalar/per-row decode position into an int32 (b,)."""
+    p = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(jnp.atleast_1d(p), (b,))
+
+
+def _decode_reference(q, k_cache, v_cache, pos):
+    """Plain-jnp decode attention (the registry's loud-failure fallback —
+    the same math as ``models.attention.decode_attention``, inlined here to
+    keep ``repro.compiler`` free of model-layer imports)."""
+    b, h, d = q.shape
+    hkv, t = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32) * (d ** -0.5)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, k_cache.astype(jnp.float32))
+    mask = jnp.arange(t)[None, :] <= _pos_vec(pos, b)[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    import jax
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+def _ssd_scan_reference(x, dt, A, B, C):
+    """Sequential jnp SSD recurrence with the final state (fallback for the
+    ``final_state=True`` registry route — the chunked dual form in the
+    kernel computes exactly this per-timestep recurrence)."""
+    import jax
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    hpg = h // B.shape[2]
+    Bh = jnp.repeat(B, hpg, axis=2).astype(jnp.float32)      # (b, l, h, n)
+    Ch = jnp.repeat(C, hpg, axis=2).astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp          # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        decay = jnp.exp(Af[None] * dtt)
+        state = state * decay[..., None, None] \
+            + (bt * dtt[..., None])[..., :, None] * xt[..., None, :]
+        return state, jnp.einsum("bhn,bhnp->bhp", ct, state)
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    state, ys = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def _ssd_decode_reference(state, x, dt, A, B, C):
+    """Plain-jnp single-token SSD step (fallback / differential reference)."""
+    h = x.shape[1]
+    hpg = h // B.shape[1]
+    Bh = jnp.repeat(B, hpg, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C, hpg, axis=1).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    st = state.astype(jnp.float32)
+    decay = jnp.exp(A.astype(jnp.float32)[None] * dtf)
+    st2 = st * decay[..., None, None] \
+        + (Bh * dtf[..., None])[..., :, None] \
+        * x.astype(jnp.float32)[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, st2)
+    return y.astype(x.dtype), st2
 
 
 # --------------------------------------------------------------- singleton --

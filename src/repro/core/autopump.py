@@ -341,13 +341,21 @@ def _flash_graph(b: int, h: int, s: int, t: int, d: int, bq: int = 128,
 
 def _ssd_graph(b: int, l: int, h: int, p: int, n: int, chunk: int = 64,
                itemsize: int = 2, n_groups: Optional[int] = None,
-               dtype: str = "float32", vector_width: Optional[int] = None):
+               dtype: str = "float32", vector_width: Optional[int] = None,
+               final_state: bool = False):
     """Mamba-2 SSD chunked scan as an executable carry graph.
 
     The inter-chunk state recurrence is the sequential-carry axis (``ci``);
     each step consumes one chunk of (x, dt, B, C), emits one chunk of y, and
     threads the (n, p) state.  Group→head folding (B/C shared by ``h/g``
     heads) is a group-indexed table on the head symbol.
+
+    ``final_state=True`` adds a second output memory ``state`` (b, h, n, p)
+    carrying the post-sweep carry state — ``y`` stays a per-step output while
+    ``state`` is emitted once per sweep through ``CarrySpec.final_fn``
+    (``step_outs=1``).  This is what lets cached SSM prefill route through
+    the compiler: decode needs the final inter-chunk state, which the
+    plain scan graph never surfaced.
     """
     grp = n_groups or h
     g = Graph("ssd_scan")
@@ -357,6 +365,8 @@ def _ssd_graph(b: int, l: int, h: int, p: int, n: int, chunk: int = 64,
     g.memory("bmat", (b, l, grp, n), dtype=dtype)
     g.memory("cmat", (b, l, grp, n), dtype=dtype)
     g.memory("y", (b, l, h, p), dtype=dtype)
+    if final_state:
+        g.memory("state", (b, h, n, p))
     chunk = min(chunk, l)
     if vector_width is None:
         vector_width = chunk * p // 128 or 1
@@ -412,12 +422,20 @@ def _ssd_graph(b: int, l: int, h: int, p: int, n: int, chunk: int = 64,
         state = state * xp.exp(logp[-1]) + (bc_ * w[:, None]).T @ xc
         return (state,), {"out0": y[None, :, None, :]}     # (1, c, 1, p')
 
+    final_fn = None
+    out_axes = ({3: "p"},)
+    if final_state:
+        # surface the post-sweep carry state as a real graph output
+        # (out1 — absolute edge position, after the per-step y)
+        final_fn = lambda carry: {"out1": carry[0][None, None]}  # noqa: E731
+        out_axes = ({3: "p"}, {3: "p"})
     g.compute(
         "chunk_update", dom, vector_width=vector_width,
         carry=CarrySpec(axis="ci", state=(((n, p), "float32"),),
-                        step_fn=step_fn),
+                        step_fn=step_fn, final_fn=final_fn,
+                        step_outs=1 if final_state else 0),
         axes=dict(ins=({3: "p"}, {}, {}, {}, {}),
-                  outs=({3: "p"},),
+                  outs=out_axes,
                   carry=({1: "p"},),
                   narrow="p"))
     g.connect("x", "chunk_update", acc_x)
@@ -426,6 +444,212 @@ def _ssd_graph(b: int, l: int, h: int, p: int, n: int, chunk: int = 64,
     g.connect("bmat", "chunk_update", acc_bc)
     g.connect("cmat", "chunk_update", acc_bc)
     g.connect("chunk_update", "y", acc_x)
+    if final_state:
+        dom_s = Domain.of(("bi", 0, b), ("hi", 0, h))
+        acc_s = AccessPattern(dom_s, (Affine.of("bi"), Affine.of("hi"),
+                                      Affine.constant(0), Affine.constant(0)),
+                              width=n * p)
+        g.connect("chunk_update", "state", acc_s)
+    return g, est
+
+
+def _decode_attention_graph(b: int, h: int, t: int, d: int, bkv: int = 128,
+                            itemsize: int = 4, hkv: Optional[int] = None,
+                            scale: Optional[float] = None,
+                            dtype: str = "float32",
+                            vector_width: Optional[int] = None):
+    """Incremental (S=1) attention against a preallocated KV cache.
+
+    One query row per (batch, head) runs the online-softmax recurrence over
+    KV tiles — the same sequential-carry axis (``ji``) as prefill flash
+    attention, but with the causal mask replaced by a *position-offset*
+    validity mask: an int32 ``pos`` input (one per batch row) marks the last
+    written cache slot, and each step masks keys symbolically via
+    ``k_pos <= pos`` (k_pos derived from the carry step index — no
+    materialized boolean, so a bucketed cache length costs only the mask
+    compare).  GQA head folding is the same group-indexed table as prefill.
+    """
+    hkv = hkv or h
+    g = Graph("decode_attention")
+    g.memory("q", (b, h, d), dtype=dtype)
+    g.memory("k", (b, hkv, t, d), dtype=dtype)
+    g.memory("v", (b, hkv, t, d), dtype=dtype)
+    g.memory("pos", (b,), dtype="int32")
+    g.memory("o", (b, h, d), dtype=dtype)
+    bkv = min(bkv, t)
+    if scale is None:
+        scale = d ** -0.5
+    if vector_width is None:
+        vector_width = d // 128 or 1
+    est = KernelEstimate(block_bytes_in=2 * bkv * d * itemsize,
+                         block_bytes_out=0.0,
+                         flops_per_block=4.0 * bkv * d)
+
+    nj = t // bkv
+    dom = Domain.of(("bi", 0, b), ("hi", 0, h), ("ji", 0, max(nj, 1)))
+    if t % bkv or h % hkv:
+        # corner-sampled transaction schedule: planning/legality only
+        acc_kv = AccessPattern(dom, (Affine.of("bi"), Affine.of("hi"),
+                                     Affine.of("ji", bkv),
+                                     Affine.constant(0)), width=1)
+        acc_o = AccessPattern(dom, (Affine.of("bi"), Affine.of("hi"),
+                                    Affine.constant(0)), width=1)
+        g.compute("decode_softmax", dom, vector_width=vector_width)
+        g.connect("q", "decode_softmax", acc_o)
+        g.connect("k", "decode_softmax", acc_kv)
+        g.connect("v", "decode_softmax", acc_kv)
+        g.connect("decode_softmax", "o", acc_o)
+        return g, est
+
+    group = h // hkv
+    head = Affine.of("hi") if group == 1 else \
+        Affine.table("hi", [i // group for i in range(h)])
+    acc_q = AccessPattern(dom, (Affine.of("bi"), Affine.of("hi"),
+                                Affine.constant(0)), width=d)
+    dom_kv = Domain.of(("bi", 0, b), ("hi", 0, h), ("ji", 0, nj),
+                       ("r", 0, bkv))
+    acc_kv = AccessPattern(dom_kv, (Affine.of("bi"), head,
+                                    _blk("ji", bkv, nj) + Affine.of("r"),
+                                    Affine.constant(0)), width=d)
+    acc_pos = AccessPattern(dom, (Affine.of("bi"),), width=1)
+    dom_o = Domain.of(("bi", 0, b), ("hi", 0, h))
+    acc_o = AccessPattern(dom_o, (Affine.of("bi"), Affine.of("hi"),
+                                  Affine.constant(0)), width=d)
+
+    def step_fn(carry, q_blk, k_blk, v_blk, pos_blk, idx=None):
+        xp = _xp(q_blk)
+        f32 = xp.float32
+        m_run, l_run, acc = carry
+        q2 = q_blk.reshape(1, q_blk.shape[-1]).astype(f32)
+        k2 = k_blk.reshape(k_blk.shape[-2], k_blk.shape[-1]).astype(f32)
+        v2 = v_blk.reshape(v_blk.shape[-2], v_blk.shape[-1]).astype(f32)
+        sc = (q2 * f32(scale)) @ k2.T                      # (1, bkv)
+        k_pos = idx["step"] * bkv + xp.arange(k2.shape[0])[None, :]
+        sc = xp.where(k_pos <= pos_blk.reshape(-1)[0], sc, f32(NEG_INF))
+        m_new = xp.maximum(m_run, sc.max(axis=-1, keepdims=True))
+        alpha = xp.exp(m_run - m_new)
+        prob = xp.exp(sc - m_new)
+        l_new = l_run * alpha + prob.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + prob @ v2
+        return (m_new, l_new, acc_new), None
+
+    def final_fn(carry):
+        xp = _xp(carry[0])
+        m_run, l_run, acc = carry
+        l_safe = xp.where(l_run == 0.0, xp.float32(1.0), l_run)
+        return {"out0": (acc / l_safe)[None]}              # (1, 1, d')
+
+    g.compute(
+        "decode_softmax", dom, vector_width=vector_width,
+        carry=CarrySpec(
+            axis="ji",
+            state=(((1, 1), "float32", NEG_INF), ((1, 1), "float32"),
+                   ((1, d), "float32")),
+            step_fn=step_fn, final_fn=final_fn, pass_idx=True),
+        # the query row and the scores span the full head dim (it is the
+        # softmax contraction), so mode R narrows only the value path:
+        # v / accumulator / output walk d in M sub-tiles
+        axes=dict(ins=({}, {}, {3: "d"}, {}),
+                  outs=({2: "d"},),
+                  carry=({}, {}, {1: "d"}),
+                  narrow="d"))
+    g.connect("q", "decode_softmax", acc_q)
+    g.connect("k", "decode_softmax", acc_kv)
+    g.connect("v", "decode_softmax", acc_kv)
+    g.connect("pos", "decode_softmax", acc_pos)
+    g.connect("decode_softmax", "o", acc_o)
+    return g, est
+
+
+def _ssd_decode_graph(b: int, h: int, p: int, n: int, itemsize: int = 4,
+                      n_groups: Optional[int] = None, dtype: str = "float32",
+                      vector_width: Optional[int] = None):
+    """Single-token SSD recurrent step: one state update per (batch, head).
+
+    ``state' = state · exp(A·dt) + (B·dt) ⊗ x`` and ``y = C · state'`` — a
+    pure per-(bi, hi) map with *two* outputs (the token's y and the new
+    state), expressed as a multi-output tile compute so the fused-region
+    backend emits it as one blocked kernel.  Group→head folding of B/C is
+    the group-indexed table shared with the chunked scan.
+    """
+    grp = n_groups or h
+    g = Graph("ssd_decode")
+    g.memory("state", (b, h, n, p))                       # fp32 carried state
+    g.memory("x", (b, h, p), dtype=dtype)
+    g.memory("dt", (b, h), dtype=dtype)
+    g.memory("a", (h,), dtype=dtype)
+    g.memory("bmat", (b, grp, n), dtype=dtype)
+    g.memory("cmat", (b, grp, n), dtype=dtype)
+    g.memory("y", (b, h, p), dtype=dtype)
+    g.memory("state_out", (b, h, n, p))
+    if vector_width is None:
+        vector_width = n * p // 128 or 1
+    est = KernelEstimate(block_bytes_in=(n * p + p + 2 * n) * itemsize,
+                         block_bytes_out=(n * p + p) * itemsize,
+                         flops_per_block=4.0 * n * p)
+    if h % grp:
+        dom = Domain.of(("bi", 0, b), ("hi", 0, h))
+        acc = AccessPattern(dom, (Affine.of("bi"), Affine.of("hi"),
+                                  Affine.constant(0)), width=1)
+        g.compute("state_step", dom, vector_width=vector_width)
+        g.connect("x", "state_step", acc)
+        g.connect("state_step", "y", acc)
+        return g, est
+
+    hpg = h // grp
+    gexpr = Affine.of("hi") if hpg == 1 else \
+        Affine.table("hi", [i // hpg for i in range(h)])
+    dom = Domain.of(("bi", 0, b), ("hi", 0, h))
+    acc_state = AccessPattern(dom, (Affine.of("bi"), Affine.of("hi"),
+                                    Affine.constant(0), Affine.constant(0)),
+                              width=n * p)
+    acc_x = AccessPattern(dom, (Affine.of("bi"), Affine.of("hi"),
+                                Affine.constant(0)), width=p)
+    acc_dt = AccessPattern(dom, (Affine.of("bi"), Affine.of("hi")), width=1)
+    acc_a = AccessPattern(dom, (Affine.of("hi"),), width=1)
+    acc_bc = AccessPattern(dom, (Affine.of("bi"), gexpr,
+                                 Affine.constant(0)), width=n)
+
+    def tile_fn(in0, in1, in2, in3, in4, in5):
+        xp = _xp(in1)
+        f32 = xp.float32
+        st = in0.reshape(in0.shape[-2], in0.shape[-1]).astype(f32)  # (n, p')
+        xv = in1.reshape(-1).astype(f32)                            # (p',)
+        dtv = in2.reshape(-1)[0].astype(f32)
+        av = in3.reshape(-1)[0].astype(f32)
+        bv = in4.reshape(-1).astype(f32)                            # (n,)
+        cv = in5.reshape(-1).astype(f32)
+        st2 = st * xp.exp(av * dtv) + (bv * dtv)[:, None] * xv[None, :]
+        yv = cv @ st2                                               # (p',)
+        return {"out0": yv[None, None, :], "out1": st2[None, None]}
+
+    def fn(in0, in1, in2, in3, in4, in5):
+        xp = _xp(in1)
+        f32 = xp.float32
+        st = in0.reshape(b, h, n, p).astype(f32)
+        xv = in1.reshape(b, h, p).astype(f32)
+        dtv = in2.reshape(b, h).astype(f32)
+        av = in3.reshape(b, h).astype(f32)
+        bv = in4.reshape(b, h, n).astype(f32)     # head-expanded by the FIFO
+        cv = in5.reshape(b, h, n).astype(f32)
+        decay = xp.exp(av * dtv)                                    # (b, h)
+        st2 = st * decay[..., None, None] \
+            + (bv * dtv[..., None])[..., :, None] * xv[..., None, :]
+        yv = (cv[..., :, None] * st2).sum(axis=-2)                  # (b, h, p)
+        return {"out0": yv.reshape(-1), "out1": st2.reshape(-1)}
+
+    g.compute("state_step", dom, fn=fn, tile_fn=tile_fn,
+              vector_width=vector_width,
+              axes=dict(ins=({3: "p"}, {2: "p"}, {}, {}, {}, {}),
+                        outs=({2: "p"}, {3: "p"}), carry=(), narrow="p"))
+    g.connect("state", "state_step", acc_state)
+    g.connect("x", "state_step", acc_x)
+    g.connect("dt", "state_step", acc_dt)
+    g.connect("a", "state_step", acc_a)
+    g.connect("bmat", "state_step", acc_bc)
+    g.connect("cmat", "state_step", acc_bc)
+    g.connect("state_step", "y", acc_x)
+    g.connect("state_step", "state_out", acc_state)
     return g, est
 
 
@@ -569,6 +793,8 @@ BUILDERS: Dict[str, Callable] = {
     "floyd_warshall": _floyd_graph,
     "flash_attention": _flash_graph,
     "ssd_scan": _ssd_graph,
+    "decode_attention": _decode_attention_graph,
+    "ssd_decode": _ssd_decode_graph,
 }
 
 

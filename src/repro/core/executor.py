@@ -106,7 +106,9 @@ def carry_layout(g: Graph, node: Node):
         mem, acc = (origin_access if backwards else sink_access)(g, edge)
         if mem is None or acc is None:
             return None
-        ba = blocked_access(acc, mem.shape)
+        # the compute's step symbols must stay grid symbols: an access that
+        # walks them densely is still visited one block per step
+        ba = blocked_access(acc, mem.shape, protect=dom.symbols)
         return ba.block if ba is not None else None
 
     in_blocks = [block_of(e, True) for e in g.in_edges(node.name)]
@@ -122,6 +124,7 @@ def _run_carry(g: Graph, node: Node, bound: Dict[str, np.ndarray]
     n_in = len(in_blocks)
     per_step = [bound[f"in{k}"].size // n_steps for k in range(n_in)]
     n_out = len(g.out_edges(node.name))
+    n_step_out = spec.n_step_outs(n_out)
     chunks: List[List[np.ndarray]] = [[] for _ in range(n_out)]
 
     carry = spec.init_arrays(np)
@@ -140,12 +143,11 @@ def _run_carry(g: Graph, node: Node, bound: Dict[str, np.ndarray]
             kwargs["idx"] = dict(
                 step=pos, outer=tuple(env[s] for s in outer_syms), pump=0)
         carry, step_out = spec.step_fn(carry, *blocks, **kwargs)
-        if spec.final_fn is None:
-            for k in range(n_out):
-                chunks[k].append(np.asarray(step_out[f"out{k}"]).reshape(-1))
-        elif pos == sweep - 1:
+        for k in range(n_step_out):
+            chunks[k].append(np.asarray(step_out[f"out{k}"]).reshape(-1))
+        if spec.final_fn is not None and pos == sweep - 1:
             fouts = spec.final_fn(carry)
-            for k in range(n_out):
+            for k in range(n_step_out, n_out):
                 chunks[k].append(np.asarray(fouts[f"out{k}"]).reshape(-1))
         step += 1
     return {f"out{k}": np.concatenate(chunks[k]) if chunks[k]

@@ -66,11 +66,20 @@ class CarrySpec:
                   arrays (the blocked view of each access pattern) and
                   ``outs`` is a ``{"out0": block, ...}`` dict for kernels
                   that emit per step (SSD), or None
-    ``final_fn``  ``carry -> {"out0": block, ...}`` — emitted once per sweep
-                  after the last step, for kernels whose outputs are a
+    ``final_fn``  ``carry -> {"out<k>": block, ...}`` — emitted once per
+                  sweep after the last step, for kernels whose outputs are a
                   function of the final state (flash attention's tile plus
-                  its max/denominator).  When set, *all* node outputs come
-                  from ``final_fn``; otherwise all come from ``step_fn``.
+                  its max/denominator, the SSD scan's final inter-chunk
+                  state).  Output edges are partitioned by ``step_outs``:
+                  the first ``step_outs`` node outputs come from ``step_fn``
+                  every step and the remaining outputs come from
+                  ``final_fn`` once per sweep (keyed by their *absolute*
+                  edge position, e.g. ``{"out1": ...}`` when ``step_outs``
+                  is 1).  ``step_outs=0`` (the default) with a ``final_fn``
+                  means all outputs are per-sweep; without a ``final_fn``
+                  all outputs come from ``step_fn`` regardless.
+    ``step_outs`` number of leading per-step outputs when ``final_fn`` is
+                  set (ignored otherwise — see above)
     ``pass_idx``  pass ``idx=dict(step=<position along the carry sweep>,
                   outer=<coords of the non-carry step symbols>,
                   pump=<mode-R sub-tile index, 0 elsewhere>)`` to both fns
@@ -87,6 +96,11 @@ class CarrySpec:
     step_fn: Callable
     final_fn: Optional[Callable] = None
     pass_idx: bool = False
+    step_outs: int = 0                # leading per-step outputs with final_fn
+
+    def n_step_outs(self, n_out: int) -> int:
+        """How many of the node's ``n_out`` outputs come from ``step_fn``."""
+        return n_out if self.final_fn is None else self.step_outs
 
     def init_arrays(self, xp=np,
                     narrow: "Optional[Dict[int, Tuple[int, int]]]" = None):
@@ -106,7 +120,7 @@ class CarrySpec:
     def signature(self) -> Tuple:
         """Stable identity for cache/memo keys (no object ids)."""
         return ("carry", self.axis, self.state, bool(self.final_fn),
-                self.pass_idx)
+                self.pass_idx, self.step_outs)
 
 
 @dataclasses.dataclass

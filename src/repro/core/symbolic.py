@@ -284,8 +284,8 @@ class BlockedAccess:
         return n == total
 
 
-def blocked_access(acc: AccessPattern,
-                   shape: Sequence[int]) -> "BlockedAccess | None":
+def blocked_access(acc: AccessPattern, shape: Sequence[int],
+                   protect: Sequence[str] = ()) -> "BlockedAccess | None":
     """Derive a :class:`BlockedAccess` from ``acc`` over a memory ``shape``.
 
     Two sources contribute to the block: the contiguous ``width`` (spilling
@@ -294,6 +294,14 @@ def blocked_access(acc: AccessPattern,
     one dimension densely (e.g. the row symbol of a matmul panel).  Remaining
     (outer) symbols become the grid.  Returns None when the pattern does not
     decompose this way — callers fall back to flat gather/scatter lowering.
+
+    ``protect`` lists domain symbols that must stay *grid* symbols even when
+    they walk a dimension densely.  A compute's step-domain symbols are
+    protected by the region planner/carry layout: an access like
+    ``o[bi, hi, :]`` over the domain ``(bi, hi)`` is locally one dense
+    ``(b, h, d)`` block, but the kernel visits it one ``(1, 1, d)`` tile per
+    (bi, hi) grid point — absorbing the step symbols would collapse the
+    emission grid (and mis-size per-sweep carry outputs).
     """
     rank = len(shape)
     if len(acc.exprs) != rank:
@@ -324,6 +332,8 @@ def blocked_access(acc: AccessPattern,
     while dims:
         sym, start, _stop, step = dims[-1]
         ext = extents[-1]
+        if sym in protect:
+            break
         hits = [i for i, e in enumerate(exprs) if e.coeff(sym)]
         if len(hits) != 1 or exprs[hits[0]].coeff(sym) != 1:
             break

@@ -13,6 +13,13 @@ derives the BlockSpecs, carry scratch and pump schedule that the hand-wired
 Pallas kernels in this package previously encoded by hand.  The hand-wired
 kernels remain as a differential reference and as the fallback
 (``impl='pallas'`` or any compiler-route failure, which warns visibly).
+
+The decode hot path is compiler-only: :func:`decode_attention` (S=1 against
+a preallocated KV cache, position-offset mask from an int32 ``pos`` input),
+:func:`ssd_decode` (single-token SSD state update, multi-output tile
+emission) and ``ssd_scan(final_state=True)`` (the scan plus its final
+inter-chunk state) have no hand-wired counterparts — serving reaches them
+through the plan registry's pos-bucketed wrappers.
 """
 from __future__ import annotations
 
@@ -289,7 +296,7 @@ def _ssd_jit(x, dt, A, B, C, chunk, pump_factor, interpret):
                                 pump=pump_factor, interpret=interpret)
 
 
-def _ssd_compiled(x, dt, A, B, C, chunk, pump):
+def _ssd_compiled(x, dt, A, B, C, chunk, pump, final_state=False):
     b, l, h, p = x.shape
     grp, n = B.shape[2], B.shape[3]
     chunk = min(chunk, l)
@@ -298,22 +305,33 @@ def _ssd_compiled(x, dt, A, B, C, chunk, pump):
     kern = _compile_kernel(
         "ssd_scan", (b, l, h, p, n),
         dict(chunk=chunk, n_groups=grp, dtype=str(x.dtype),
-             itemsize=x.dtype.itemsize), pump)
-    return kern({"x": x, "dt": dt, "a": A, "bmat": B, "cmat": C})["y"]
+             itemsize=x.dtype.itemsize, final_state=bool(final_state)), pump)
+    out = kern({"x": x, "dt": dt, "a": A, "bmat": B, "cmat": C})
+    if final_state:
+        return out["y"], out["state"]
+    return out["y"]
 
 
 def ssd_scan(x, dt, A, B, C, *, chunk: int = 16,
              pump: PumpSpec | int | str = 1, interpret: bool = True,
-             impl: str = "compiler"):
+             impl: str = "compiler", final_state: bool = False):
     """Mamba-2 SSD chunked scan.  ``impl='compiler'`` (default) compiles the
     carry-graph IR builder; ``impl='pallas'`` forces the hand-wired kernel
-    (the differential reference)."""
+    (the differential reference).  ``final_state=True`` also returns the
+    final inter-chunk state (B, H, N, P) as a second output — the carry
+    state surfaced through ``CarrySpec.final_fn``; compiler-only (the
+    hand-wired kernel never exposes its state)."""
     if _use_compiler_route(impl, interpret):
         try:
-            return _ssd_compiled(x, dt, A, B, C, chunk, pump)
+            return _ssd_compiled(x, dt, A, B, C, chunk, pump, final_state)
         except Exception as e:
+            if final_state:
+                raise   # no hand-wired fallback can produce the state
             warnings.warn(f"ssd_scan: compiler route failed ({e}); falling "
                           "back to the hand-wired kernel", stacklevel=2)
+    if final_state:
+        raise ValueError("ssd_scan(final_state=True) requires the compiler "
+                         "route (impl='compiler')")
     b, l, h, p = x.shape
     n = B.shape[-1]
     spec = _as_spec(pump,
@@ -323,6 +341,54 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 16,
     if l % (chunk * spec.factor):
         raise ValueError(f"L={l} must divide chunk*M={chunk * spec.factor}")
     return _ssd_jit(x, dt, A, B, C, chunk, spec.factor, interpret)
+
+
+# ------------------------------------------------------- decode attention --
+def decode_attention(q, k_cache, v_cache, pos, *, bkv: int = 128,
+                     pump: PumpSpec | int | str = 1, impl: str = "compiler"):
+    """Single-position (S=1) attention against a preallocated KV cache.
+
+    q: (B, H, D); caches: (B, Hkv, T, D); ``pos`` is the current write
+    position (scalar or (B,) int32) — valid cache slots are 0..pos, masked
+    *symbolically* inside the kernel (the position-offset causal mask is an
+    index compare derived from the carry step, never a materialized (B, T)
+    boolean).  Compiler-only: the decode builder has no hand-wired
+    counterpart; serving routes here through the plan registry
+    (``PlanRegistry.decode_attention``), which adds pos-bucketing."""
+    if impl != "compiler":
+        raise ValueError("decode_attention is compiler-only")
+    b, h, d = q.shape
+    hkv, t = k_cache.shape[1], k_cache.shape[2]
+    bkv_e = min(bkv, t)
+    if t % bkv_e:
+        raise ValueError(f"T={t} %% bkv={bkv_e} != 0")
+    kern = _compile_kernel(
+        "decode_attention", (b, h, t, d),
+        dict(bkv=bkv_e, hkv=hkv, dtype=str(q.dtype),
+             itemsize=q.dtype.itemsize), pump)
+    posv = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos, jnp.int32)),
+                            (b,))
+    return kern({"q": q, "k": k_cache, "v": v_cache, "pos": posv})["o"]
+
+
+# -------------------------------------------------------------- ssd decode --
+def ssd_decode(state, x, dt, A, B, C, *, pump: PumpSpec | int | str = 1,
+               impl: str = "compiler"):
+    """Single-token SSD recurrent step: ``state' = state·exp(A·dt) +
+    (B·dt)⊗x``, ``y = C·state'``.  state: (B, H, N, P) fp32; x: (B, H, P);
+    dt: (B, H) post-softplus; A: (H,); B/C: (B, G, N).  Returns
+    (y, new_state).  Compiler-only (multi-output tile emission)."""
+    if impl != "compiler":
+        raise ValueError("ssd_decode is compiler-only")
+    b, h, n, p = state.shape
+    grp = B.shape[1]
+    kern = _compile_kernel(
+        "ssd_decode", (b, h, p, n),
+        dict(n_groups=grp, dtype=str(x.dtype),
+             itemsize=x.dtype.itemsize), pump)
+    out = kern({"state": state, "x": x, "dt": dt, "a": A,
+                "bmat": B, "cmat": C})
+    return out["y"], out["state_out"]
 
 
 # ------------------------------------------------------------ grouped gemm --

@@ -76,11 +76,17 @@ def main() -> None:
           f"({stats['plans_warmed']} plans pre-measured); "
           f"compile: prefill {pre.get('compile_s', 0):.2f}s, "
           f"decode {dec.get('compile_s', 0):.2f}s")
-    print(f"[serve] steady-state: "
-          f"{(steady or float('nan')) * 1e3:.2f} ms/step over "
-          f"{dec.get('steps', 0)} steps ({tps:.1f} tok/s)")
+    print(f"[serve] steady-state decode: "
+          f"{(steady or float('nan')) * 1e3:.2f} ms/step mean, "
+          f"{(dec.get('steady_best_s') or float('nan')) * 1e3:.2f} ms best, "
+          f"over {dec.get('steps', 0)} steps ({tps:.1f} tok/s)")
     if stats["registry"] is not None:
-        print(f"[serve] plan registry: {stats['registry']}")
+        # prefill vs decode bucket split: a cold decode bucket (misses > 0
+        # after warmup) must be visible at a glance, not buried in a total
+        r = stats["registry"]
+        print(f"[serve] plan registry: prefill {r['prefill']} | "
+              f"decode {r['decode']} | hit_rate={r['hit_rate']} "
+              f"fallbacks={r['fallbacks']} measure_s={r['measure_s']}")
     print("[serve] first sequence:", out[0][:16].tolist())
 
 

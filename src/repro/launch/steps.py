@@ -73,6 +73,10 @@ class StepTimer:
                 "compile_s": round(comp, 6),
                 "steady_mean_s": round(sum(steady) / len(steady), 6)
                 if steady else None,
+                # best observed step: the number benchmarks compare against
+                # (min drops scheduler tails on a shared box, mirroring the
+                # paired best-of-N protocol in benchmarks/serve_report.py)
+                "steady_best_s": round(min(steady), 6) if steady else None,
                 "steps": len(steady),
             }
         return out

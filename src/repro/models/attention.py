@@ -11,8 +11,12 @@ Two execution paths, selected by ``cfg.attention_impl``:
   - ``pallas``: the :mod:`repro.kernels.flash_attention` kernel (interpret
     mode on CPU) — used by smoke tests at small sizes and the TPU target.
 
-Decode attends one query token against a preallocated KV cache (scores are
-O(T), chunking unnecessary).  MLA caches the *compressed* c_kv + rope key
+Decode attends one query token against a preallocated KV cache.  Under
+``attention_impl='pallas'`` + ``kernel_plan='measure'`` (the serving
+default) the step routes through the compiled decode kernel — the plan
+registry buckets the attended prefix on pos and replays the measured pump
+plan — while the plain-jnp O(T) softmax stays as the ``'direct'``
+differential reference.  MLA caches the *compressed* c_kv + rope key
 (576 B/token for deepseek-v3) and uses the absorbed-matmul decode path.
 """
 from __future__ import annotations
@@ -186,8 +190,18 @@ def gqa_apply(p, cfg, x, *, positions, causal=True, cache=None,
         new_cache = {"k": kc, "v": vc, "pos": pos + s}
         kv_mask = jnp.arange(kc.shape[2]) < (pos + s)
         if s == 1:
-            out = decode_attention(q[:, :, 0], kc, vc,
-                                   jnp.broadcast_to(kv_mask, (b, kc.shape[2])))
+            if cfg.attention_impl == "pallas" and cfg.kernel_plan == "measure":
+                # kernelized decode: the plan registry buckets the attended
+                # cache prefix (pow2 over pos) and replays the measured pump
+                # plan; the kernel's position mask covers slots 0..pos —
+                # exactly kv_mask for the just-written cache
+                from repro.compiler.registry import default_registry
+                out = default_registry().decode_attention(q[:, :, 0], kc, vc,
+                                                          pos)
+            else:
+                out = decode_attention(
+                    q[:, :, 0], kc, vc,
+                    jnp.broadcast_to(kv_mask, (b, kc.shape[2])))
             out = out[:, :, None, :]
         elif cfg.attention_impl == "pallas" and cfg.fresh_prefill_kernel:
             # fresh-cache prefill (pos == 0 — the flag's contract, set by

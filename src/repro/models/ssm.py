@@ -8,6 +8,11 @@ kernel implements, so the two agree to float tolerance).
 
 Decode keeps a recurrent state (B, H, N, P) + conv tail (B, conv_w-1, d_in)
 per layer: O(1) per token, the reason mamba2/zamba2 run the long_500k cell.
+Under ``ssm_impl='pallas'`` + ``kernel_plan='measure'`` both cached paths
+are compiled: prefill runs the SSD scan kernel with its final-state output
+(so the decode state comes out of the same measured kernel that computed y)
+and the per-token step runs the ``ssd_decode`` multi-output tile kernel;
+``kernel_plan='direct'`` keeps the jnp math as the differential reference.
 """
 from __future__ import annotations
 
@@ -142,16 +147,25 @@ def mamba2_apply(p, cfg, x, *, cache=None, interpret=True):
         xh = xs.reshape(b, n_heads, s.head_dim)
         Bg = B_.reshape(b, s.n_groups, s.state_dim)
         Cg = C_.reshape(b, s.n_groups, s.state_dim)
-        hpg = n_heads // s.n_groups
-        Bh = jnp.repeat(Bg, hpg, axis=1)
-        Ch = jnp.repeat(Cg, hpg, axis=1)
         dt1 = dt[:, 0]                                            # (B,H)
-        decay = jnp.exp(A[None] * dt1)                            # (B,H)
         state = cache["state"].astype(jnp.float32)
-        upd = jnp.einsum("bhn,bhp->bhnp", Bh.astype(jnp.float32)
-                         * dt1[..., None], xh.astype(jnp.float32))
-        state = state * decay[..., None, None] + upd
-        y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), state)
+        if cfg.ssm_impl == "pallas" and cfg.kernel_plan == "measure":
+            # kernelized per-token step: y and the new state come out of
+            # one compiled multi-output tile kernel (group-folded B/C —
+            # no head-repeated copies), served from a warm registry plan
+            from repro.compiler.registry import default_registry
+            y, state = default_registry().ssd_decode(state, xh, dt1, A,
+                                                     Bg, Cg)
+            y = y.astype(jnp.float32)
+        else:
+            hpg = n_heads // s.n_groups
+            Bh = jnp.repeat(Bg, hpg, axis=1)
+            Ch = jnp.repeat(Cg, hpg, axis=1)
+            decay = jnp.exp(A[None] * dt1)                        # (B,H)
+            upd = jnp.einsum("bhn,bhp->bhnp", Bh.astype(jnp.float32)
+                             * dt1[..., None], xh.astype(jnp.float32))
+            state = state * decay[..., None, None] + upd
+            y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), state)
         y = y + p["D"].astype(jnp.float32)[None, :, None] \
             * xh.astype(jnp.float32)
         y = y.reshape(b, 1, d_in).astype(x.dtype)
@@ -167,20 +181,28 @@ def mamba2_apply(p, cfg, x, *, cache=None, interpret=True):
         chunk = min(s.chunk, l)
         if l % chunk:
             chunk = 1
-        if cfg.ssm_impl == "pallas" and cache is None:
-            if cfg.kernel_plan == "measure":
-                # plan-registry route: L pads to a seq bucket (dt=0 steps
-                # are state identities, so padding is exact) and the pump
-                # factor replays the measured winner from the compile cache
-                # pass the configured chunk, not the l-divisibility fixup:
-                # the bucketed L is what must divide it, and the registry
-                # clamps the chunk to the bucket itself
-                from repro.compiler.registry import default_registry
-                y = default_registry().ssd_scan(xh, dt, A, Bg, Cg,
-                                                chunk=s.chunk)
-            else:
-                from repro.kernels.ops import ssd_scan as _ssd
-                y = _ssd(xh, dt, A, Bg, Cg, chunk=chunk, interpret=interpret)
+        use_kernel = cfg.ssm_impl == "pallas" and cfg.kernel_plan == "measure"
+        if use_kernel and cache is None:
+            # plan-registry route: L pads to a seq bucket (dt=0 steps
+            # are state identities, so padding is exact) and the pump
+            # factor replays the measured winner from the compile cache
+            # pass the configured chunk, not the l-divisibility fixup:
+            # the bucketed L is what must divide it, and the registry
+            # clamps the chunk to the bucket itself
+            from repro.compiler.registry import default_registry
+            y = default_registry().ssd_scan(xh, dt, A, Bg, Cg, chunk=s.chunk)
+            s_final = None
+        elif use_kernel:
+            # cached prefill: the SSD builder's final-state output makes
+            # the kernel usable here — the per-sweep carry state lands in a
+            # real graph output instead of being recomputed by _ssd_xla
+            from repro.compiler.registry import default_registry
+            y, s_final = default_registry().ssd_scan(xh, dt, A, Bg, Cg,
+                                                     chunk=s.chunk,
+                                                     final_state=True)
+        elif cfg.ssm_impl == "pallas" and cache is None:
+            from repro.kernels.ops import ssd_scan as _ssd
+            y = _ssd(xh, dt, A, Bg, Cg, chunk=chunk, interpret=interpret)
             s_final = None
         else:
             y, s_final = _ssd_xla(xh, dt, A, Bg, Cg, chunk)

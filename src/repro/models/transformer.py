@@ -296,13 +296,15 @@ def plan_requests(cfg, batch: int, max_len: int, *, dtype=None, policy=None,
     ragged MoE grouped GEMM is routing-dependent (group sizes only exist at
     serve time), so it warms on first use instead.
 
-    ``cached=True`` restricts the grid to plans a KV/state-cached serving
-    loop (the Engine) can actually execute: cached SSM prefill cannot use
-    the SSD kernel (it needs the final state, which the builder does not
-    output yet), and cached attention prefill uses the kernel only behind
-    ``cfg.fresh_prefill_kernel`` — pre-measuring dead plans would inflate
-    launch time for zero serving benefit.  The default (``cached=False``)
-    is the cache-free forward grid (scoring / benchmark layer steps).
+    ``cached=True`` is the KV/state-cached serving grid (the Engine):
+    attention prefill plans appear only behind ``cfg.fresh_prefill_kernel``
+    (pre-measuring dead plans would inflate launch time), SSD prefill plans
+    request the final-state output the cached path consumes, and the
+    **decode bucket grid** is added — one ``decode_attention`` plan per pos
+    bucket up to ``max_len`` (the top bucket doubles as the traced-pos plan
+    the jit'd engine decode step keys on) and one ``ssd_decode`` plan for
+    SSM/hybrid stacks.  The default (``cached=False``) is the cache-free
+    forward grid (scoring / benchmark layer steps).
     """
     from repro.compiler.registry import BucketPolicy
     policy = policy or BucketPolicy()
@@ -312,13 +314,12 @@ def plan_requests(cfg, batch: int, max_len: int, *, dtype=None, policy=None,
     wants_attn = cfg.attention_impl == "pallas" and (
         cfg.family in ("dense", "moe", "vlm")
         or (cfg.family == "hybrid" and cfg.hybrid_attn_every))
-    if cached:
-        wants_attn = wants_attn and cfg.fresh_prefill_kernel
-    if wants_attn and cfg.mla:
+    prefill_attn = wants_attn and (not cached or cfg.fresh_prefill_kernel)
+    if prefill_attn and cfg.mla:
         m = cfg.mla
         # mla_apply only takes the kernel path when head dims line up
-        wants_attn = m.nope_head_dim + m.rope_head_dim == m.v_head_dim
-    if wants_attn:
+        prefill_attn = m.nope_head_dim + m.rope_head_dim == m.v_head_dim
+    if prefill_attn:
         if cfg.mla:
             h = hkv = cfg.n_heads
             d = cfg.mla.nope_head_dim + cfg.mla.rope_head_dim
@@ -328,15 +329,30 @@ def plan_requests(cfg, batch: int, max_len: int, *, dtype=None, policy=None,
             reqs.append(("flash_attention",
                          dict(b=batch, h=h, hkv=hkv, s=sb, t=sb, d=d,
                               causal=True, dtype=dtype)))
+    if cached and wants_attn and not cfg.mla:
+        # decode bucket grid (GQA only: MLA decode runs the absorbed path
+        # over the compressed cache, which the decode builder does not
+        # model).  An eager decode step buckets on pos; the jit'd engine
+        # step keys on the full preallocated length — bucket_seq(max_len),
+        # the top of this same grid.
+        for tb in policy.seq_grid(max_len):
+            reqs.append(("decode_attention",
+                         dict(b=batch, h=cfg.n_heads, hkv=cfg.n_kv_heads,
+                              t=tb, d=cfg.head_dim_, dtype=dtype)))
 
     if cfg.family in ("ssm", "hybrid") and cfg.ssm_impl == "pallas" \
-            and cfg.ssm and not cached:
+            and cfg.ssm:
         s = cfg.ssm
         nh = s.expand * cfg.d_model // s.head_dim
         for lb in policy.seq_grid(max_len):
             reqs.append(("ssd_scan",
                          dict(b=batch, l=lb, h=nh, p=s.head_dim,
                               n=s.state_dim, chunk=s.chunk,
+                              n_groups=s.n_groups, dtype=dtype,
+                              final_state=cached)))
+        if cached:
+            reqs.append(("ssd_decode",
+                         dict(b=batch, h=nh, p=s.head_dim, n=s.state_dim,
                               n_groups=s.n_groups, dtype=dtype)))
     return reqs
 

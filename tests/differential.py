@@ -10,11 +10,12 @@ the per-kernel copy-pasted differential tests that used to live in
 Exactness contract: kernels built from exactly-representable ops on
 integer-valued data (add/mul/min/max — vecadd, matmul, stencil,
 floyd-warshall, grouped gemm dense *and* ragged) are asserted **bit-exact**
-across every backend.  Flash attention and the SSD scan contain ``exp``,
-whose numpy and XLA CPU implementations differ by 1 ULP on some inputs, so
-no backend pair can agree bitwise; those cases assert to a 1-ULP-amplified
-tolerance (``rtol=atol=5e-6``) instead — the flash running-max output ``m``
-(built from max alone) is still checked bit-exact.
+across every backend.  Flash attention, the SSD kernels (scan, the
+final-state variant, the single-token decode step) and decode attention
+contain ``exp``, whose numpy and XLA CPU implementations differ by 1 ULP on
+some inputs, so no backend pair can agree bitwise; those cases assert to a
+1-ULP-amplified tolerance (``rtol=atol=5e-6``) instead — the flash
+running-max output ``m`` (built from max alone) is still checked bit-exact.
 
 The sweep axes (``BACKENDS × FACTORS × MODES``) intentionally mirror the
 acceptance contract: every backend must hold for M ∈ {1, 2, 4} in both
@@ -66,6 +67,40 @@ def _ssd_transform(data):
     data["dt"] = np.abs(data["dt"]) * 0.25 + 0.25
     data["a"] = -(np.abs(data["a"]) * 0.25 + 0.25)
     return data
+
+
+def _decode_transform(positions):
+    """Pin the decode positions (int32 cache write offsets)."""
+    def transform(data):
+        data["pos"] = np.asarray(positions, np.int32)
+        return data
+    return transform
+
+
+def _decode_gold(inputs):
+    q, k, v, pos = inputs["q"], inputs["k"], inputs["v"], inputs["pos"]
+    b, h, d = q.shape
+    group = h // k.shape[1]
+    kk = np.repeat(k, group, axis=1)
+    vv = np.repeat(v, group, axis=1)
+    sc = np.einsum("bhd,bhtd->bht", q * np.float32(d ** -0.5), kk)
+    mask = np.arange(k.shape[2])[None, None, :] <= pos[:, None, None]
+    sc = np.where(mask, sc, -1e30)
+    m = sc.max(-1, keepdims=True)
+    p = np.exp(sc - m)
+    o = np.einsum("bht,bhtd->bhd", p / p.sum(-1, keepdims=True), vv)
+    return {"o": o.astype(np.float32)}
+
+
+def _ssd_decode_gold(inputs):
+    st, x, dt, a = (inputs[k] for k in ("state", "x", "dt", "a"))
+    hpg = x.shape[1] // inputs["bmat"].shape[1]
+    Bh = np.repeat(inputs["bmat"], hpg, axis=1)
+    Ch = np.repeat(inputs["cmat"], hpg, axis=1)
+    st2 = st * np.exp(a[None] * dt)[..., None, None] \
+        + (Bh * dt[..., None])[..., :, None] * x[..., None, :]
+    y = np.einsum("bhn,bhnp->bhp", Ch, st2)
+    return {"y": y.astype(np.float32), "state_out": st2.astype(np.float32)}
 
 
 def _flash_gold(inputs, causal=False, scale=None):
@@ -133,6 +168,27 @@ def cases(shape_index: int = 0) -> Dict[str, Case]:
                      vector_width=8),
                 {"x": (40, 16), "w": (2, 16, 8)}, ("o",),
                 gold=_grouped_gold_ragged((16, 24))),
+            "decode_attention": Case(
+                "decode_attention", (2, 4, 32, 8),
+                dict(bkv=8, hkv=2, vector_width=4),       # GQA fold
+                {"q": (2, 4, 8), "k": (2, 2, 32, 8), "v": (2, 2, 32, 8),
+                 "pos": (2,)},
+                ("o",), exact=False,
+                transform=_decode_transform([17, 31]),    # mid / cache-full
+                gold=_decode_gold),
+            "ssd_scan_final": Case(
+                "ssd_scan", (1, 32, 2, 4, 4),
+                dict(chunk=8, vector_width=8, final_state=True),
+                {"x": (1, 32, 2, 4), "dt": (1, 32, 2), "a": (2,),
+                 "bmat": (1, 32, 2, 4), "cmat": (1, 32, 2, 4)},
+                ("y", "state"), exact=False, transform=_ssd_transform),
+            "ssd_decode": Case(
+                "ssd_decode", (2, 4, 8, 4),
+                dict(n_groups=2, vector_width=4),         # grouped B/C
+                {"state": (2, 4, 4, 8), "x": (2, 4, 8), "dt": (2, 4),
+                 "a": (4,), "bmat": (2, 2, 4), "cmat": (2, 2, 4)},
+                ("y", "state_out"), exact=False, transform=_ssd_transform,
+                gold=_ssd_decode_gold),
         }
     return {
         "vecadd": Case("vecadd", (128,), dict(vector_width=4),
@@ -167,6 +223,27 @@ def cases(shape_index: int = 0) -> Dict[str, Case]:
                  vector_width=8),
             {"x": (40, 8), "w": (3, 8, 8)}, ("o",),
             gold=_grouped_gold_ragged((8, 24, 8)), seed=1),
+        "decode_attention": Case(
+            "decode_attention", (1, 4, 16, 4),
+            dict(bkv=4, hkv=2, vector_width=4),
+            {"q": (1, 4, 4), "k": (1, 2, 16, 4), "v": (1, 2, 16, 4),
+             "pos": (1,)},
+            ("o",), exact=False,
+            transform=_decode_transform([0]),             # fresh cache
+            gold=_decode_gold, seed=1),
+        "ssd_scan_final": Case(
+            "ssd_scan", (2, 16, 4, 8, 2),
+            dict(chunk=4, n_groups=2, vector_width=8, final_state=True),
+            {"x": (2, 16, 4, 8), "dt": (2, 16, 4), "a": (4,),
+             "bmat": (2, 16, 2, 2), "cmat": (2, 16, 2, 2)},
+            ("y", "state"), exact=False, transform=_ssd_transform, seed=1),
+        "ssd_decode": Case(
+            "ssd_decode", (1, 4, 8, 4),
+            dict(n_groups=4, vector_width=4),     # hpg=1: linear head sym
+            {"state": (1, 4, 4, 8), "x": (1, 4, 8), "dt": (1, 4),
+             "a": (4,), "bmat": (1, 4, 4), "cmat": (1, 4, 4)},
+            ("y", "state_out"), exact=False, transform=_ssd_transform,
+            gold=_ssd_decode_gold, seed=1),
     }
 
 

@@ -57,16 +57,20 @@ def test_serve_bench_smoke_writes_json(bench_cache, tmp_path, capsys):
     """Tier-1 wiring for `make bench-serve-smoke`: the serving-path report
     must show a 100% post-warmup plan hit rate, per-layer registry-vs-
     default-pump entries with measured pump factors, parity between the two
-    paths, and the engine's warmup/compile/steady timing split."""
+    paths, the per-token decode rows (schema 2 — a silently-dropped decode
+    measurement must fail tier-1), and the engine's warmup/compile/steady
+    timing split."""
     from benchmarks import serve_report
 
     out = tmp_path / "BENCH_serve_smoke.json"
     report = serve_report.run_report(smoke=True, out_path=out)
     assert out.exists()
     assert json.loads(out.read_text())["smoke"] is True
+    assert report["schema"] >= 2
 
     layers = {e["layer"]: e for e in report["entries"]}
-    assert set(layers) == {"attention", "ssm", "moe"}
+    assert set(layers) == {"attention", "ssm", "moe",
+                           "attention_decode", "ssm_decode"}
     for e in report["entries"]:
         assert e["registry_us"] > 0 and e["direct_us"] > 0
         assert e["plan_factor"] >= 1 and e["default_factor"] == 1
@@ -79,10 +83,25 @@ def test_serve_bench_smoke_writes_json(bench_cache, tmp_path, capsys):
     assert layers["ssm"]["plan_measured"] is True
     assert layers["moe"]["plan_measured"] is False
 
+    # decode rows: the per-token fast path is kernelized, measured, and
+    # phase-tagged (the stats split below proves its buckets were warm)
+    for name, kernel in (("attention_decode", "decode_attention"),
+                         ("ssm_decode", "ssd_decode")):
+        assert layers[name]["phase"] == "decode"
+        assert layers[name]["kernel"] == kernel
+        assert layers[name]["plan_measured"] is True
+    assert all(e["phase"] in ("prefill", "decode")
+               for e in report["entries"])
+
     # the grid warmup makes steady-state lookups pure hits
     assert report["plan_hit_rate_post_warmup"] == 1.0
     assert report["plans_warmed"] >= 1
     assert report["registry"]["fallbacks"] == 0
+    # per-phase split is part of the stats schema, and the decode phase
+    # actually served lookups in this run
+    for phase in ("prefill", "decode"):
+        assert set(report["registry"][phase]) == {"hits", "misses"}
+    assert report["registry"]["decode"]["hits"] > 0
 
     # engine timing split: warmup/compile never pollute steady-state
     dec = report["engine"]["phases"]["decode"]

@@ -64,7 +64,8 @@ def chain_graph(n=32, v=4):
 _DIFF0 = diff_cases(0)
 _DIFF1 = {k: v for k, v in diff_cases(1).items()
           if k in ("flash_attention", "ssd_scan", "grouped_gemm",
-                   "grouped_gemm_ragged")}
+                   "grouped_gemm_ragged", "decode_attention",
+                   "ssd_scan_final", "ssd_decode")}
 
 
 @pytest.mark.parametrize("backend", ["reference", "jax", "pallas"])
