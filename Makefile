@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-diff bench bench-compiler bench-smoke \
-	bench-serve bench-serve-smoke
+	bench-serve bench-serve-smoke trace-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -41,3 +41,15 @@ bench-serve:
 
 bench-serve-smoke:
 	$(PY) -m benchmarks.run --mode serve --smoke
+
+# flight-recorder smoke: one traced Engine.generate() through the serve
+# launcher must produce valid Chrome-trace JSON (nested warmup/prefill/
+# per-token-decode spans — open at ui.perfetto.dev).  The same contract is
+# wired into tier-1 via tests/test_benchmarks.py::test_trace_smoke_launcher.
+trace-smoke:
+	$(PY) -m repro.launch.serve --arch qwen3-0.6b --smoke --batch 2 \
+		--prompt-len 8 --new 4 --trace /tmp/repro_trace_smoke.json \
+		--metrics
+	$(PY) -c "import json; t=json.load(open('/tmp/repro_trace_smoke.json')); \
+		assert t['traceEvents'], 'empty trace'; \
+		print('trace-smoke ok:', len(t['traceEvents']), 'events')"

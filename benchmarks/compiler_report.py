@@ -29,7 +29,7 @@ from pathlib import Path
 
 import numpy as np
 
-from repro import compiler
+from repro import compiler, obs
 from repro.compiler import CompileCache
 from repro.core import executor
 from repro.core.autopump import BUILDERS
@@ -194,6 +194,15 @@ def run_report(smoke: bool = False, out_path=None) -> dict:
     report["matmul_pallas_speedup_vs_jax"] = speedups
     emit("compiler_matmul_speedup", 0.0,
          ";".join(f"M{f}={s}x" for f, s in speedups.items()))
+
+    # unified metrics snapshot: compile/cache counters + emission-tier mix
+    # accumulated over the whole run.  A report without it means the obs
+    # spine went dark — fail loudly rather than ship a blind artifact.
+    report["metrics"] = obs.snapshot()
+    if not report["metrics"].get("counters"):
+        raise RuntimeError(
+            "BENCH_compiler: embedded metrics snapshot is empty — "
+            "the obs spine recorded no counters during the run")
 
     if out_path is None:
         out_path = Path(__file__).resolve().parents[1] / (

@@ -8,6 +8,10 @@ Prints ``name,us_per_call,derived`` CSV rows; the compiler and serve modes
 additionally write ``BENCH_compiler.json`` / ``BENCH_serve.json``
 (``--smoke``: tiny shapes, ``BENCH_*_smoke.json``) at the repo root for
 cross-PR tracking.
+
+``--trace out.json`` records a Chrome-trace of the whole run (open at
+https://ui.perfetto.dev); ``--metrics`` prints the unified metrics snapshot
+after the run.  See docs/observability.md.
 """
 from __future__ import annotations
 
@@ -23,8 +27,16 @@ def main(argv=None) -> None:
                          "serve|all")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes (compiler/serve mode smoke test)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the run to PATH")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the metrics snapshot after the run")
     ns = ap.parse_args(argv)
     which = ns.mode or ns.legacy or "all"
+
+    from repro import obs
+    if ns.trace:
+        obs.enable()
 
     print("name,us_per_call,derived")
 
@@ -49,6 +61,14 @@ def main(argv=None) -> None:
     if which in ("all", "serve"):
         from . import serve_report
         serve_report.main(smoke=ns.smoke)
+
+    if ns.metrics:
+        for line in obs.format_snapshot(obs.snapshot()).splitlines():
+            print(f"[metrics] {line}")
+    if ns.trace:
+        obs.write_trace(ns.trace, metadata={"mode": which,
+                                            "smoke": ns.smoke})
+        print(f"[bench] trace written to {ns.trace}")
 
 
 if __name__ == "__main__":

@@ -43,6 +43,8 @@ from pathlib import Path
 
 import numpy as np
 
+from repro import obs
+
 from .common import emit
 
 
@@ -199,7 +201,31 @@ def _engine_section(smoke: bool) -> dict:
     prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt), 0,
                                  cfg.vocab_size)
     eng.generate(prompts, new)
-    return eng.stats()
+    section = eng.stats()
+
+    # tracer-off overhead of the per-token instrumentation: the decode step
+    # exactly as it ran before obs (mesh + StepTimer + jitted call) vs
+    # Engine._decode_token (same body plus span check + perf_counter pair +
+    # histogram record), paired so machine drift cancels.  Bar: < 2%.
+    cache = eng._cache_factory()
+    step_batch = {"tokens": prompts[:, :1].astype(jnp.int32)}
+
+    def raw_step():
+        with eng.mesh:
+            return eng.timer.run("decode", eng._decode, eng.params, cache,
+                                 step_batch)
+
+    raw_us, instr_us = _paired_us(
+        raw_step,
+        lambda: eng._decode_token(cache, step_batch),
+        warmup=2, iters=20)
+    section["obs_overhead"] = {
+        "raw_us": round(raw_us, 2),
+        "instrumented_us": round(instr_us, 2),
+        "overhead_frac": (round(max(0.0, instr_us / raw_us - 1.0), 4)
+                          if raw_us else None),
+    }
+    return section
 
 
 def run_report(smoke: bool = False, out_path=None) -> dict:
@@ -308,6 +334,19 @@ def run_report(smoke: bool = False, out_path=None) -> dict:
              f"compile={dec.get('compile_s', 0):.2f}s;"
              f"warmup={report['engine']['warmup_s']:.2f}s;"
              f"steps={dec.get('steps', 0)}")
+        oh = report["engine"]["obs_overhead"]
+        emit("serve_obs_overhead", oh["instrumented_us"],
+             f"raw={oh['raw_us']}us;frac={oh['overhead_frac']}")
+
+        # unified metrics snapshot: registry hit/miss/fallback counters,
+        # emission-tier mix, TTFT / per-token latency histograms.  A report
+        # without it means the obs spine went dark — fail loudly rather
+        # than ship a blind artifact.
+        report["metrics"] = obs.snapshot()
+        if not report["metrics"].get("counters"):
+            raise RuntimeError(
+                "BENCH_serve: embedded metrics snapshot is empty — "
+                "the obs spine recorded no counters during the run")
     finally:
         set_default_registry(prev)
         if tmp_cache is not None:

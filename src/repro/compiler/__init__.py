@@ -26,6 +26,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.ir import Graph, NodeKind, PumpSpec
 from repro.core.pump_plan import VMEM_BYTES, plan_kernel_pump
 
@@ -234,11 +235,27 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
         if cache is not None and key not in cache:
             cache.put(key, plan)   # write-through to a fresh persistent cache
         _MEMO_HITS[memo_key] = _MEMO_HITS.get(memo_key, 0) + 1
+        obs.count("compile.memo_hit", graph=graph.name, backend=backend)
         # fresh report view per hit: the original compile's provenance
         # record must not be rewritten retroactively
         report = dataclasses.replace(kern.report, served_from="memory",
                                      cache_hits=_MEMO_HITS[memo_key])
         return dataclasses.replace(kern, report=report)
+    with obs.span("compiler.compile", cat="compile", graph=graph.name,
+                  backend=backend, autotune=autotune or "none",
+                  factor=str(factor), mode=mode) as _cspan:
+        return _compile_cold(graph, factor=factor, mode=mode,
+                             vmem_budget=vmem_budget, max_factor=max_factor,
+                             estimate=estimate, backend=backend, jit=jit,
+                             pallas_mode=pallas_mode, autotune=autotune,
+                             cache=cache, memoize=memoize, key=key,
+                             memo_key=memo_key, cspan=_cspan)
+
+
+def _compile_cold(graph: Graph, *, factor, mode, vmem_budget, max_factor,
+                  estimate, backend, jit, pallas_mode, autotune, cache,
+                  memoize, key, memo_key, cspan) -> CompiledKernel:
+    """The non-memo-hit path of :func:`compile` (span-bracketed)."""
 
     build = lambda f: _build(graph, factor=f, mode=mode,   # noqa: E731
                              vmem_budget=vmem_budget, max_factor=max_factor,
@@ -248,10 +265,13 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
     persist = True
     plan = cache.get(key) if cache is not None else None
     if plan is not None and not _valid_plan(plan):
+        obs.count("cache.corrupt", key=key, graph=graph.name)
         plan = None         # corrupted entry: fall back to a cold compile
     if plan is not None:
         # replay the cached decision: no autotune search, no factor probing,
         # no re-measurement
+        obs.count("compile.replay", graph=graph.name, backend=backend,
+                  factor=int(plan["factor"]))
         kern = _build(graph, factor=int(plan["factor"]), mode=mode,
                       vmem_budget=vmem_budget, max_factor=max_factor,
                       estimate=None, backend=backend, jit=jit,
@@ -265,6 +285,7 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
         # factor policy instead, and do NOT persist or memoize the result
         # under the measure key, so an eager context (registry warmup) can
         # still produce the real measured plan later
+        obs.count("compile.measure_in_trace", graph=graph.name)
         kern = build(factor)
         served = None
         persist = False
@@ -274,18 +295,26 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
             "measurement; measure from an eager context (e.g. plan-registry "
             "warmup) to persist a real measured plan")
     elif autotune == "measure":
+        obs.count("compile.measure", graph=graph.name, backend=backend)
         inputs = _measure_inputs(graph)
         timings: Dict[int, float] = {}
         kernels: Dict[int, CompiledKernel] = {}
-        for cand in AUTOTUNE_CANDIDATES:
-            if cand > max_factor:
-                continue
-            k = build(cand)
-            achieved = k.spec.factor      # legality may have clamped it
-            if achieved in timings:
-                continue
-            kernels[achieved] = k
-            timings[achieved] = _time_kernel(k.fn, inputs)
+        with obs.span("compiler.autotune", cat="compile", graph=graph.name,
+                      backend=backend) as aspan:
+            for cand in AUTOTUNE_CANDIDATES:
+                if cand > max_factor:
+                    continue
+                with obs.span("compiler.autotune.candidate", cat="compile",
+                              graph=graph.name, factor=cand) as csp:
+                    k = build(cand)
+                    achieved = k.spec.factor  # legality may have clamped it
+                    if achieved in timings:
+                        csp.set(achieved=achieved, skipped="duplicate")
+                        continue
+                    kernels[achieved] = k
+                    timings[achieved] = _time_kernel(k.fn, inputs)
+                    csp.set(achieved=achieved,
+                            best_us=round(timings[achieved], 1))
         # statistical ties go to the smallest factor: candidates within the
         # noise band of the best are indistinguishable by measurement, and
         # persisting an arbitrary exotic winner costs VMEM/beats for nothing
@@ -302,6 +331,7 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
             "replayed": False,
         }
     else:
+        obs.count("compile.build", graph=graph.name, backend=backend)
         kern = build(factor)
         served = None
 
@@ -309,6 +339,7 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
     report.cache_key = key
     report.served_from = served
     report.cache_hits = 1 if served else 0
+    cspan.set(served=served or "build", achieved_factor=kern.spec.factor)
 
     if plan is None:
         plan = {"factor": kern.spec.factor, "mode": mode,

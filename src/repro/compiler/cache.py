@@ -30,6 +30,7 @@ import tempfile
 from pathlib import Path
 from typing import Dict, Optional
 
+from repro import obs
 from repro.core.ir import Graph
 from repro.core.symbolic import AccessPattern, Affine
 
@@ -124,9 +125,27 @@ class CompileCache:
                 with open(self.path) as f:
                     data = json.load(f)
                 self._entries = dict(data.get("entries", {}))
-            except (OSError, ValueError, AttributeError, TypeError):
-                # truncated/corrupted/wrong-schema JSON: cold-compile path
+            except FileNotFoundError:
+                self._entries = {}   # cold store: expected, not a health event
+            except (OSError, ValueError, AttributeError, TypeError) as e:
+                # truncated/corrupted/wrong-schema JSON: cold-compile path.
+                # The degrade is the contract; the *event* must still be
+                # visible — a fleet silently re-measuring every plan because
+                # its shared cache file is corrupt is a real failure mode.
+                obs.count("cache.corrupt", path=str(self.path), error=repr(e))
                 self._entries = {}
+            else:
+                # entries stamped under another jax build can never match a
+                # current request key (the version is folded into the key),
+                # so they are invisible dead weight — count them once per
+                # load for fleet-level cache health
+                env = _env_fingerprint()
+                stale = sum(1 for v in self._entries.values()
+                            if isinstance(v, dict)
+                            and v.get("env") not in (None, env))
+                if stale:
+                    obs.count("cache.stale_jax_version", stale,
+                              path=str(self.path), env=env)
         return self._entries
 
     def _save(self) -> None:
@@ -142,15 +161,24 @@ class CompileCache:
 
     # -- store API -----------------------------------------------------------
     def get(self, key: str) -> Optional[dict]:
-        entry = self._load().get(key)
+        entries = self._load()
+        entry = entries.get(key)
         if not isinstance(entry, dict):   # absent or corrupted value
+            if key in entries:            # present but wrong type: corrupted
+                obs.count("cache.corrupt", key=key)
             self.misses += 1
+            obs.count("cache.miss")
             return None
         self.hits += 1
+        obs.count("cache.hit")
         return dict(entry)
 
     def put(self, key: str, value: dict) -> None:
-        self._load()[key] = dict(value)
+        value = dict(value)
+        # stamp the toolchain identity so a later load can count entries
+        # orphaned by a jax upgrade (see _load's stale scan)
+        value.setdefault("env", _env_fingerprint())
+        self._load()[key] = value
         self._save()
 
     def clear(self) -> None:

@@ -62,6 +62,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.executor import _toposort
 from repro.core.ir import CarrySpec, Graph, NodeKind
 from repro.core.symbolic import (Affine, BlockedAccess, blocked_access,
@@ -960,6 +961,15 @@ def lower_pallas(g: Graph, jit: bool = True, pallas_mode: str = "auto",
         else:
             tier = "gather"
             fn = emit_gather(g, region)
+        # per-region tier decision is a first-class observable: the tier mix
+        # (how much of a model emits at which tier) lands in the metrics
+        # snapshot, and a downgrade carries its reason — a serving-path
+        # regression to the slow tier must be attributable from telemetry
+        # alone, not only from a PipelineReport someone kept around
+        obs.count(f"emission.tier.{tier}", graph=g.name, region=region.name)
+        if notes:
+            obs.count("emission.degraded", graph=g.name,
+                      region=region.name, tier=tier, why="; ".join(notes))
         if emission is not None:
             emission[region.name] = {
                 "tier": tier,
@@ -969,6 +979,9 @@ def lower_pallas(g: Graph, jit: bool = True, pallas_mode: str = "auto",
                 "reduce": list(plan.reduce_syms) if plan else None,
                 "carry": list(plan.carry_syms) if plan else None,
                 "outputs": [mem for _c, mem, _a in region.outputs],
+                # degradation provenance: why this region did not emit at a
+                # higher tier (mirrors the PipelineReport warning strings)
+                "why": list(notes),
             }
         emitted.append((region, tier, fn))
 

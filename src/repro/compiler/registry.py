@@ -37,6 +37,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
+from repro import obs
+
 
 def _next_pow2(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
@@ -104,24 +106,47 @@ def _phase_of(kernel: str) -> str:
 
 @dataclasses.dataclass
 class RegistryStats:
+    """Hit/miss/fallback accounting, split by serving phase.
+
+    Counts mirror into the process-wide obs metrics registry
+    (``registry.{phase}.{hit|miss}``, ``registry.fallback.{phase}``) so the
+    unified snapshot carries them; the dataclass itself stays the per-
+    instance view (tests and benchmarks diff instances around a window, so
+    the local counters are not replaced by the global ones).  The active
+    default registry additionally publishes ``as_dict()`` as the
+    ``plan_registry`` snapshot view.
+    """
     hits: int = 0
     misses: int = 0
     measure_s: float = 0.0    # cold measured-autotune compiles
     compile_s: float = 0.0    # replayed / non-measured compiles
     fallbacks: int = 0        # lookups that fell back to the direct path
-    # per-phase split of hits/misses (see DECODE_KERNELS)
+    # per-phase split of hits/misses/fallbacks (see DECODE_KERNELS)
     phase: Dict[str, Dict[str, int]] = dataclasses.field(
-        default_factory=lambda: {"prefill": {"hits": 0, "misses": 0},
-                                 "decode": {"hits": 0, "misses": 0}})
+        default_factory=lambda: {
+            "prefill": {"hits": 0, "misses": 0, "fallbacks": 0},
+            "decode": {"hits": 0, "misses": 0, "fallbacks": 0}})
 
     def count(self, kernel: str, hit: bool) -> None:
-        bucket = self.phase[_phase_of(kernel)]
+        ph = _phase_of(kernel)
+        bucket = self.phase[ph]
         if hit:
             self.hits += 1
             bucket["hits"] += 1
+            obs.count(f"registry.{ph}.hit", kernel=kernel)
         else:
             self.misses += 1
             bucket["misses"] += 1
+            obs.count(f"registry.{ph}.miss", kernel=kernel)
+
+    def fallback(self, kernel: str, why: str = "") -> None:
+        """A lookup that fell back to the direct path — split per phase so
+        a decode-path fallback (the highest-frequency path) is visible at a
+        glance instead of buried in a global total."""
+        ph = _phase_of(kernel)
+        self.fallbacks += 1
+        self.phase[ph]["fallbacks"] += 1
+        obs.count(f"registry.fallback.{ph}", kernel=kernel, why=why)
 
     @property
     def hit_rate(self) -> float:
@@ -201,17 +226,24 @@ class PlanRegistry:
         self.stats.count(kernel, hit=False)
         from repro.core.autopump import BUILDERS
         factor, mode, autotune = self._request(pump)
-        g, est = BUILDERS[kernel](*builder_args, **builder_kwargs)
-        t0 = time.perf_counter()
-        kern = compiler.compile(g, factor=factor, mode=mode, estimate=est,
-                                backend=self.backend, autotune=autotune,
-                                cache=self._cache)
-        dt = time.perf_counter() - t0
-        tuned = kern.report.autotune
-        if tuned and not tuned.get("replayed"):
-            self.stats.measure_s += dt   # paid the timing runs
-        else:
-            self.stats.compile_s += dt   # replayed plan / plain compile
+        with obs.span("registry.compile", cat="serve", kernel=kernel,
+                      args=list(builder_args), pump=str(pump)) as sp:
+            g, est = BUILDERS[kernel](*builder_args, **builder_kwargs)
+            t0 = time.perf_counter()
+            kern = compiler.compile(g, factor=factor, mode=mode, estimate=est,
+                                    backend=self.backend, autotune=autotune,
+                                    cache=self._cache)
+            dt = time.perf_counter() - t0
+            tuned = kern.report.autotune
+            if tuned and not tuned.get("replayed"):
+                self.stats.measure_s += dt   # paid the timing runs
+                obs.count("registry.measure", kernel=kernel)
+            else:
+                self.stats.compile_s += dt   # replayed plan / plain compile
+                obs.count("registry.replay" if tuned
+                          else "registry.plan_compile", kernel=kernel)
+            sp.set(factor=kern.spec.factor,
+                   measured=bool(tuned and not tuned.get("replayed")))
         self._plans[key] = kern
         return kern
 
@@ -317,7 +349,7 @@ class PlanRegistry:
                 dtype=str(q.dtype), bq=bq, bkv=bkv)
             kern = self.kernel("flash_attention", args, kwargs)
         except Exception as e:  # noqa: BLE001 — serving must not die
-            self.stats.fallbacks += 1
+            self.stats.fallback("flash_attention", why=str(e))
             warnings.warn(f"plan registry: flash_attention fell back to the "
                           f"direct ops path ({e})", stacklevel=2)
             from repro.kernels.ops import flash_attention as _flash
@@ -347,7 +379,7 @@ class PlanRegistry:
                 dtype=str(x.dtype), final_state=final_state)
             kern = self.kernel("ssd_scan", args, kwargs)
         except Exception as e:  # noqa: BLE001
-            self.stats.fallbacks += 1
+            self.stats.fallback("ssd_scan", why=str(e))
             if final_state:
                 # ops.ssd_scan(final_state=True) is compiler-only and would
                 # re-raise on the same failure; degrade to the sequential
@@ -398,7 +430,7 @@ class PlanRegistry:
                 b=b, h=h, hkv=hkv, t=t_req, d=d, dtype=str(q.dtype), bkv=bkv)
             kern = self.kernel("decode_attention", args, kwargs)
         except Exception as e:  # noqa: BLE001 — serving must not die
-            self.stats.fallbacks += 1
+            self.stats.fallback("decode_attention", why=str(e))
             warnings.warn(f"plan registry: decode_attention fell back to "
                           f"the plain jnp path ({e})", stacklevel=2)
             return _decode_reference(q, k_cache, v_cache, pos)
@@ -424,7 +456,7 @@ class PlanRegistry:
                 b=b, h=h, p=p, n=n, n_groups=grp, dtype=str(x.dtype))
             kern = self.kernel("ssd_decode", args, kwargs)
         except Exception as e:  # noqa: BLE001
-            self.stats.fallbacks += 1
+            self.stats.fallback("ssd_decode", why=str(e))
             warnings.warn(f"plan registry: ssd_decode fell back to the "
                           f"plain jnp path ({e})", stacklevel=2)
             return _ssd_decode_reference(state, x, dt, A, B, C)
@@ -455,7 +487,7 @@ class PlanRegistry:
                 kernel_fn=lambda a, kw: self.kernel("grouped_gemm", a, kw,
                                                     pump=self.ragged_pump))
         except Exception as err:  # noqa: BLE001 — serving must not die
-            self.stats.fallbacks += 1
+            self.stats.fallback("grouped_gemm", why=str(err))
             warnings.warn(f"plan registry: grouped_gemm fell back to "
                           f"per-group matmul ({err})", stacklevel=2)
             # compiler-free reference: one matmul per non-empty group
@@ -480,26 +512,37 @@ class PlanRegistry:
                  "grouped_gemm": self.grouped_request,
                  "decode_attention": self.decode_request,
                  "ssd_decode": self.ssd_decode_request}
+        requests = list(requests)
         report = []
         surfaced: List[str] = []
-        for kernel, spec in requests:
-            args, kwargs, _pads = canon[kernel](**spec)
-            t0 = time.perf_counter()
-            # ragged requests must warm under the same pump policy the
-            # serving wrapper will look them up with
-            pump = self.ragged_pump if kernel == "grouped_gemm" else None
-            kern = self.kernel(kernel, args, kwargs, pump=pump)
-            for msg in kern.report.warnings:
-                if msg not in surfaced:
-                    surfaced.append(msg)
-            tuned = kern.report.autotune or {}
-            report.append({
-                "kernel": kernel, "args": list(args),
-                "factor": kern.spec.factor,
-                "measured": tuned.get("policy") == "measure",
-                "replayed": bool(tuned.get("replayed")),
-                "time_s": round(time.perf_counter() - t0, 4),
-            })
+        with obs.span("registry.warmup", cat="serve",
+                      requests=len(requests)):
+            for kernel, spec in requests:
+                args, kwargs, _pads = canon[kernel](**spec)
+                t0 = time.perf_counter()
+                # ragged requests must warm under the same pump policy the
+                # serving wrapper will look them up with
+                pump = self.ragged_pump if kernel == "grouped_gemm" else None
+                kern = self.kernel(kernel, args, kwargs, pump=pump)
+                for msg in kern.report.warnings:
+                    if msg not in surfaced:
+                        surfaced.append(msg)
+                tuned = kern.report.autotune or {}
+                emission = kern.report.emission or {}
+                rec = {
+                    "kernel": kernel, "args": list(args),
+                    "factor": kern.spec.factor,
+                    "measured": tuned.get("policy") == "measure",
+                    "replayed": bool(tuned.get("replayed")),
+                    "time_s": round(time.perf_counter() - t0, 4),
+                    # per-region emission tiers + the degradation reason
+                    # strings, so a warmup record alone answers "did this
+                    # bucket emit at the fast tier, and if not, why"
+                    "tiers": sorted({v["tier"] for v in emission.values()}),
+                    "degraded": sorted({w for v in emission.values()
+                                        for w in v.get("why", [])}),
+                }
+                report.append(rec)
         # compile warnings are deduplicated across the whole sweep: the same
         # degradation note recurs for every bucket of a kernel, and launch
         # output should name each unique condition once, not once per compile
@@ -589,6 +632,13 @@ def _ssd_decode_reference(state, x, dt, A, B, C):
 
 # --------------------------------------------------------------- singleton --
 _DEFAULT: Optional[PlanRegistry] = None
+
+# publish the *active* default registry's stats into every metrics snapshot
+# (a view, not a copy: RegistryStats stays the single implementation and the
+# snapshot always reflects whichever instance is currently installed)
+obs.register_view(
+    "plan_registry",
+    lambda: _DEFAULT.stats.as_dict() if _DEFAULT is not None else None)
 
 
 def default_registry() -> PlanRegistry:

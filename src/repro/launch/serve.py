@@ -2,21 +2,30 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --batch 4 --prompt-len 16 --new 32
+
+Observability: ``--trace out.json`` records a Chrome-trace of the whole run
+(warmup → prefill → per-token decode; open at https://ui.perfetto.dev),
+``--metrics`` prints the unified metrics snapshot (plan-registry hit rates,
+emission-tier mix, latency percentiles), ``--profile DIR`` brackets the
+generate call with a ``jax.profiler`` capture.  See docs/observability.md.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import load_arch
 from repro.models import model as model_mod
 from repro.serve.engine import Engine, ServeConfig
 
 
-def main() -> None:
+def main(argv: Optional[Sequence[str]] = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
@@ -32,7 +41,16 @@ def main() -> None:
                     help="override cfg.kernel_plan (measure|direct)")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the plan-registry bucket-grid warmup")
-    args = ap.parse_args()
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the run to PATH")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the full metrics snapshot after the run")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of generate() to DIR")
+    args = ap.parse_args(argv)
+
+    if args.trace:
+        obs.enable()
 
     cfg = load_arch(args.arch, smoke=args.smoke)
     overrides = {k: v for k, v in (("attention_impl", args.attention_impl),
@@ -60,8 +78,11 @@ def main() -> None:
             (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
         enc_out = encdec.encode(cfg, params, frames)
 
+    prof = (obs.profile("serve.generate", logdir=args.profile)
+            if args.profile else contextlib.nullcontext())
     t0 = time.time()
-    out = eng.generate(prompts, args.new, enc_out=enc_out)
+    with prof:
+        out = eng.generate(prompts, args.new, enc_out=enc_out)
     dt = time.time() - t0
     stats = eng.stats()
     dec = stats["phases"].get("decode", {})
@@ -76,10 +97,11 @@ def main() -> None:
           f"({stats['plans_warmed']} plans pre-measured); "
           f"compile: prefill {pre.get('compile_s', 0):.2f}s, "
           f"decode {dec.get('compile_s', 0):.2f}s")
+    for line in obs.format_phases(stats["phases"]).splitlines():
+        print(f"[serve] {line}")
     print(f"[serve] steady-state decode: "
-          f"{(steady or float('nan')) * 1e3:.2f} ms/step mean, "
-          f"{(dec.get('steady_best_s') or float('nan')) * 1e3:.2f} ms best, "
-          f"over {dec.get('steps', 0)} steps ({tps:.1f} tok/s)")
+          f"{(steady or float('nan')) * 1e3:.2f} ms/step mean "
+          f"({tps:.1f} tok/s)")
     if stats["registry"] is not None:
         # prefill vs decode bucket split: a cold decode bucket (misses > 0
         # after warmup) must be visible at a glance, not buried in a total
@@ -88,6 +110,17 @@ def main() -> None:
               f"decode {r['decode']} | hit_rate={r['hit_rate']} "
               f"fallbacks={r['fallbacks']} measure_s={r['measure_s']}")
     print("[serve] first sequence:", out[0][:16].tolist())
+
+    if args.metrics:
+        for line in obs.format_snapshot(obs.snapshot()).splitlines():
+            print(f"[metrics] {line}")
+    if args.trace:
+        obs.write_trace(args.trace,
+                        metadata={"arch": args.arch, "batch": args.batch,
+                                  "prompt_len": args.prompt_len,
+                                  "n_new": args.new})
+        print(f"[serve] trace written to {args.trace} "
+              f"(open at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

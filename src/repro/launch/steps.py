@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import optim
+from repro import obs, optim
 from repro.models import model as model_mod
 from repro.configs.base import ModelConfig, ShapeConfig
 
@@ -41,19 +41,22 @@ class StepTimer:
 
     The first call of each named phase pays tracing + XLA compilation (and,
     on the registry path, any cold plan measurement) and is recorded as that
-    phase's ``compile_s``; every later call appends to the steady-state
-    series.  Serving reports must never average warmup into steady-state
-    step time — the measured-pump wins are a steady-state property, and a
-    one-off compile can be 1000× a decode step.
+    phase's cold time (``compile_s``); every later call lands in a warm
+    :class:`repro.obs.metrics.Histogram` — the percentile math (p50/p90/p99)
+    lives there, not in a parallel implementation here.  Serving reports
+    must never average warmup into steady-state step time — the
+    measured-pump wins are a steady-state property, and a one-off compile
+    can be 1000× a decode step.
 
         timer = StepTimer()
         logits, cache = timer.run("decode", decode_fn, params, cache, batch)
-        timer.stats()["decode"]  # {"compile_s", "steady_mean_s", "steps"}
+        timer.stats()["decode"]          # flat legacy keys + cold/warm split
+        timer.stats()["decode"]["warm"]  # {"calls", "mean_s", "p50_s", ...}
     """
 
     def __init__(self):
         self.compile_s: Dict[str, float] = {}
-        self.steady: Dict[str, list] = {}
+        self._warm: Dict[str, obs.Histogram] = {}
 
     def run(self, phase: str, fn, *args):
         t0 = time.perf_counter()
@@ -62,22 +65,49 @@ class StepTimer:
         if phase not in self.compile_s:
             self.compile_s[phase] = dt
         else:
-            self.steady.setdefault(phase, []).append(dt)
+            hist = self._warm.get(phase)
+            if hist is None:
+                hist = self._warm[phase] = obs.Histogram()
+            hist.record(dt)
         return out
 
-    def stats(self) -> Dict[str, Dict[str, float]]:
+    @property
+    def steady(self) -> Dict[str, list]:
+        """Raw warm samples per phase (compat view over the histograms)."""
+        return {phase: h.values for phase, h in self._warm.items()}
+
+    def stats(self) -> Dict[str, Dict[str, Any]]:
         out = {}
         for phase, comp in self.compile_s.items():
-            steady = self.steady.get(phase, [])
+            hist = self._warm.get(phase)
+            n = hist.count if hist else 0
+
+            def _r(v):
+                return round(v, 6) if v is not None else None
+
             out[phase] = {
+                # flat legacy keys (benchmarks/tests consume these)
                 "compile_s": round(comp, 6),
-                "steady_mean_s": round(sum(steady) / len(steady), 6)
-                if steady else None,
+                "steady_mean_s": _r(hist.mean) if hist else None,
                 # best observed step: the number benchmarks compare against
                 # (min drops scheduler tails on a shared box, mirroring the
                 # paired best-of-N protocol in benchmarks/serve_report.py)
-                "steady_best_s": round(min(steady), 6) if steady else None,
-                "steps": len(steady),
+                "steady_best_s": _r(hist.min) if hist else None,
+                "steady_p50_s": _r(hist.percentile(50)) if hist else None,
+                "steady_p99_s": _r(hist.percentile(99)) if hist else None,
+                "steps": n,
+                # explicit warm-vs-cold split: cold = first call (trace +
+                # XLA compile + cold plan measurement), warm = steady state
+                "cold": {"calls": 1, "total_s": round(comp, 6)},
+                "warm": {
+                    "calls": n,
+                    "total_s": _r(hist.total) if hist else 0.0,
+                    "mean_s": _r(hist.mean) if hist else None,
+                    "best_s": _r(hist.min) if hist else None,
+                    "p50_s": _r(hist.percentile(50)) if hist else None,
+                    "p90_s": _r(hist.percentile(90)) if hist else None,
+                    "p99_s": _r(hist.percentile(99)) if hist else None,
+                },
             }
         return out
 

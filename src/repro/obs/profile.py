@@ -1,0 +1,53 @@
+"""Profiling hook: bracket a span with optional ``jax.profiler`` capture.
+
+``obs.profile("prefill", logdir="...")`` is the one-command answer to
+"where does the time go *inside* one compiled step" — the span lands in the
+obs trace (wall-clock attribution across our own layers) and, when a
+``logdir`` is given, a ``jax.profiler`` trace capture brackets the same
+window so XLA/TPU-level cost shows up in TensorBoard/Perfetto alongside it.
+
+The jax profiler is strictly optional: import/start/stop failures degrade
+to the plain span with a counted ``profile.unavailable`` event — profiling
+hooks must never take the serving path down.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Optional
+
+from . import metrics as _metrics
+from . import trace as _trace
+
+
+@contextlib.contextmanager
+def profile(name: str = "profile", logdir: Optional[str] = None,
+            **attrs) -> Iterator[object]:
+    """Span (always) + ``jax.profiler`` trace capture (when ``logdir``).
+
+        with obs.profile("serve.prefill", logdir="/tmp/jaxprof"):
+            engine.prefill(tokens)
+
+    View the capture with ``tensorboard --logdir /tmp/jaxprof`` or load the
+    generated ``.trace.json.gz`` into ui.perfetto.dev.
+    """
+    started = False
+    if logdir is not None:
+        try:
+            import jax
+            jax.profiler.start_trace(str(logdir))
+            started = True
+        except Exception as e:  # noqa: BLE001 — profiler absence is not fatal
+            _metrics.default_metrics().counter("profile.unavailable").inc()
+            _trace.instant("profile.unavailable", error=repr(e))
+    span = _trace.get_tracer().span(name, cat="profile",
+                                    profiled=started, **attrs)
+    try:
+        with span as sp:
+            yield sp
+    finally:
+        if started:
+            try:
+                import jax
+                jax.profiler.stop_trace()
+            except Exception as e:  # noqa: BLE001
+                _trace.instant("profile.stop_failed", error=repr(e))

@@ -28,6 +28,7 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.launch import mesh as mesh_mod
 from repro.launch.steps import StepTimer
@@ -75,6 +76,14 @@ class Engine:
         if cfg.kernel_plan == "measure":
             from repro.compiler.registry import default_registry
             self._reg = default_registry()
+        # publish this engine's timing stats into the unified metrics
+        # snapshot (a view over StepTimer, not a copy; the most recently
+        # constructed engine owns the slot)
+        obs.register_view("serve.engine", self.stats)
+        # resolved once: the decode loop records per-token latency straight
+        # into the histogram object, skipping the name lookup per step
+        self._step_hist = obs.default_metrics().histogram(
+            "serve.decode_step_s")
         if scfg.warmup:
             self.warmup()
 
@@ -100,11 +109,14 @@ class Engine:
                                     else jnp.float32,
                                     self.cfg.activation_dtype))
         t0 = time.perf_counter()
-        # cached=True: only the plans this cached serving loop can execute
-        reqs = transformer.plan_requests(self.cfg, self.scfg.batch,
-                                         self.scfg.max_len, dtype=dtype,
-                                         cached=True)
-        self.warmup_report = reg.warmup(reqs)
+        with obs.span("serve.warmup", cat="serve", batch=self.scfg.batch,
+                      max_len=self.scfg.max_len) as sp:
+            # cached=True: only the plans this cached serving loop can execute
+            reqs = transformer.plan_requests(self.cfg, self.scfg.batch,
+                                             self.scfg.max_len, dtype=dtype,
+                                             cached=True)
+            self.warmup_report = reg.warmup(reqs)
+            sp.set(plans=len(self.warmup_report))
         self.warmup_s += time.perf_counter() - t0
         return self.warmup_report
 
@@ -115,9 +127,12 @@ class Engine:
         batch = {"tokens": tokens}
         if enc_out is not None:
             batch["enc_out"] = enc_out
-        with self.mesh:
-            logits, cache = self.timer.run(
-                "prefill", self._decode, self.params, cache, batch)
+        with obs.span("serve.prefill", cat="serve",
+                      batch=int(tokens.shape[0]),
+                      prompt_len=int(tokens.shape[1])):
+            with self.mesh:
+                logits, cache = self.timer.run(
+                    "prefill", self._decode, self.params, cache, batch)
         return cache, logits[:, -1]
 
     def _sample(self, logits, key):
@@ -125,23 +140,54 @@ class Engine:
             return jnp.argmax(logits, axis=-1)
         return jax.random.categorical(key, logits / self.scfg.temperature)
 
-    def generate(self, prompt_tokens: jax.Array, n_new: int,
-                 enc_out=None) -> jax.Array:
-        """Greedy/temperature generation.  Returns (B, n_new) tokens."""
-        cache, last = self.prefill(prompt_tokens, enc_out)
-        key = jax.random.PRNGKey(self.scfg.seed)
-        toks = []
-        cur = self._sample(last, key)[:, None]
-        for i in range(n_new):
-            toks.append(cur)
-            batch = {"tokens": cur.astype(jnp.int32)}
-            if enc_out is not None:
-                batch["enc_out"] = enc_out
+    def _decode_token(self, cache, batch):
+        """One instrumented decode step — the serving hot path.
+
+        The tracer-off path is kept deliberately lean (one enabled check,
+        one perf_counter pair, one cached-histogram append); its overhead
+        vs the uninstrumented step is measured per run by
+        ``benchmarks/serve_report.py`` (``engine.obs_overhead``, bar <2%).
+        """
+        t0 = time.perf_counter()
+        tr = obs.get_tracer()
+        if tr.enabled:
+            with tr.span("serve.decode", cat="serve"):
+                with self.mesh:
+                    logits, cache = self.timer.run(
+                        "decode", self._decode, self.params, cache, batch)
+        else:
             with self.mesh:
                 logits, cache = self.timer.run(
                     "decode", self._decode, self.params, cache, batch)
-            key, sub = jax.random.split(key)
-            cur = self._sample(logits[:, -1], sub)[:, None]
+        self._step_hist.record(time.perf_counter() - t0)
+        return logits, cache
+
+    def generate(self, prompt_tokens: jax.Array, n_new: int,
+                 enc_out=None) -> jax.Array:
+        """Greedy/temperature generation.  Returns (B, n_new) tokens."""
+        t_start = time.perf_counter()
+        with obs.span("serve.generate", cat="serve",
+                      batch=int(prompt_tokens.shape[0]),
+                      prompt_len=int(prompt_tokens.shape[1]),
+                      n_new=n_new) as gspan:
+            cache, last = self.prefill(prompt_tokens, enc_out)
+            key = jax.random.PRNGKey(self.scfg.seed)
+            toks = []
+            cur = self._sample(last, key)[:, None]
+            # time-to-first-token: prefill + first sample, host-visible
+            ttft = time.perf_counter() - t_start
+            obs.observe("serve.ttft_s", ttft)
+            gspan.set(ttft_s=round(ttft, 6))
+            for i in range(n_new):
+                toks.append(cur)
+                batch = {"tokens": cur.astype(jnp.int32)}
+                if enc_out is not None:
+                    batch["enc_out"] = enc_out
+                logits, cache = self._decode_token(cache, batch)
+                key, sub = jax.random.split(key)
+                cur = self._sample(logits[:, -1], sub)[:, None]
+            obs.count("serve.tokens",
+                      n_new * int(prompt_tokens.shape[0]))
         return jnp.concatenate(toks, axis=1)
 
     # ------------------------------------------------------------ reports --

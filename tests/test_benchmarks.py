@@ -97,10 +97,13 @@ def test_serve_bench_smoke_writes_json(bench_cache, tmp_path, capsys):
     assert report["plan_hit_rate_post_warmup"] == 1.0
     assert report["plans_warmed"] >= 1
     assert report["registry"]["fallbacks"] == 0
-    # per-phase split is part of the stats schema, and the decode phase
-    # actually served lookups in this run
+    # per-phase split is part of the stats schema — including fallbacks,
+    # so a decode-path kernel quietly degrading to jnp is visible per
+    # phase — and the decode phase actually served lookups in this run
     for phase in ("prefill", "decode"):
-        assert set(report["registry"][phase]) == {"hits", "misses"}
+        assert set(report["registry"][phase]) == {"hits", "misses",
+                                                  "fallbacks"}
+        assert report["registry"][phase]["fallbacks"] == 0
     assert report["registry"]["decode"]["hits"] > 0
 
     # engine timing split: warmup/compile never pollute steady-state
@@ -108,4 +111,89 @@ def test_serve_bench_smoke_writes_json(bench_cache, tmp_path, capsys):
     assert dec["steps"] >= 1 and dec["compile_s"] > 0
     assert dec["steady_mean_s"] is not None
     assert dec["steady_mean_s"] < dec["compile_s"]
+    # warm/cold split + percentiles (satellite: StepTimer via obs.Histogram)
+    assert dec["cold"]["calls"] == 1
+    assert dec["warm"]["calls"] == dec["steps"]
+    assert dec["warm"]["p50_s"] <= dec["warm"]["p99_s"]
+    assert dec["steady_p50_s"] == dec["warm"]["p50_s"]
+
+    # instrumentation overhead on the decode hot path, tracer off — the
+    # real bar is <2% (benchmark-shape runs land ~0); 10% here keeps the
+    # tier-1 gate robust to scheduler noise at smoke shapes
+    oh = report["engine"]["obs_overhead"]
+    assert oh["raw_us"] > 0 and oh["instrumented_us"] > 0
+    assert oh["overhead_frac"] is not None and oh["overhead_frac"] < 0.10
+
+    # the embedded metrics snapshot is the report's flight-data: registry
+    # counters + serving latency histograms must be present and non-empty
+    snap = report["metrics"]
+    assert snap["counters"], "metrics snapshot lost its counters"
+    assert any(k.startswith("registry.") for k in snap["counters"])
+    assert "serve.decode_step_s" in snap["histograms"]
+    assert "serve.ttft_s" in snap["histograms"]
     assert "serve_plan_hit_rate" in capsys.readouterr().out
+
+
+def test_bench_reports_embed_metrics_snapshot(bench_cache, tmp_path):
+    """Both BENCH_* artifacts must carry the metrics snapshot on disk —
+    a report without one is a blind artifact and run_report raises."""
+    from benchmarks import compiler_report
+
+    out = tmp_path / "BENCH_compiler_smoke.json"
+    compiler_report.run_report(smoke=True, out_path=out)
+    snap = json.loads(out.read_text())["metrics"]
+    assert snap["counters"]
+    # the compile path counted how each request was served
+    assert any(k.startswith("compile.") or k.startswith("cache.")
+               for k in snap["counters"])
+    # emission-tier mix from the pallas backend
+    assert any(k.startswith("emission.tier.") for k in snap["counters"])
+
+
+def test_trace_smoke_launcher(bench_cache, tmp_path, capsys):
+    """`make trace-smoke`: one traced Engine.generate() through the serve
+    launcher produces valid Chrome-trace JSON — nested warmup/prefill/
+    per-token-decode spans with monotonic timestamps."""
+    from repro import obs
+    from repro.launch import serve as serve_launch
+
+    trace_path = tmp_path / "trace.json"
+    try:
+        serve_launch.main(["--arch", "qwen3-0.6b", "--smoke",
+                           "--batch", "2", "--prompt-len", "8",
+                           "--new", "3", "--kernel-plan", "measure",
+                           "--trace", str(trace_path), "--metrics"])
+    finally:
+        obs.disable()
+        obs.get_tracer().clear()
+    assert trace_path.exists()
+    trace = json.loads(trace_path.read_text())
+
+    events = trace["traceEvents"]
+    assert isinstance(events, list) and events
+    for e in events:
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(e)
+        assert e["ph"] in ("X", "i", "M")
+        assert isinstance(e["ts"], (int, float)) and e["ts"] >= 0
+        if e["ph"] == "X":
+            assert isinstance(e["dur"], (int, float)) and e["dur"] >= 0
+
+    spans = {e["name"]: e for e in events if e["ph"] == "X"}
+    assert {"serve.warmup", "serve.prefill", "serve.generate",
+            "serve.decode"} <= set(spans)
+    gen = spans["serve.generate"]
+    decodes = sorted((e for e in events
+                      if e["ph"] == "X" and e["name"] == "serve.decode"),
+                     key=lambda e: e["ts"])
+    assert len(decodes) == 3
+    # decode spans nest inside generate and advance monotonically
+    for d in decodes:
+        assert gen["ts"] <= d["ts"]
+        assert d["ts"] + d["dur"] <= gen["ts"] + gen["dur"] + 1
+    assert all(a["ts"] < b["ts"] for a, b in zip(decodes, decodes[1:]))
+    # TTFT is derivable from the generate span attributes
+    assert gen["args"]["ttft_s"] > 0
+
+    out = capsys.readouterr().out
+    assert "trace written" in out
+    assert "[metrics]" in out

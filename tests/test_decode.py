@@ -181,8 +181,8 @@ def test_registry_stats_split_decode_from_prefill():
     reg.decode_attention(q, kv, kv, 6)                    # same bucket: hit
     reg.flash_attention(_ints((1, 2, 16, 8), 3), kv, kv, causal=True)
     d = reg.stats.as_dict()
-    assert d["decode"] == {"hits": 1, "misses": 1}
-    assert d["prefill"] == {"hits": 0, "misses": 1}
+    assert d["decode"] == {"hits": 1, "misses": 1, "fallbacks": 0}
+    assert d["prefill"] == {"hits": 0, "misses": 1, "fallbacks": 0}
     assert d["hits"] == 1 and d["misses"] == 2
 
 

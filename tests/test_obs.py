@@ -1,0 +1,315 @@
+"""Tier-1 contract for ``repro.obs`` — the tracing/metrics/profiling spine.
+
+Covers the properties the rest of the repo leans on: spans nest correctly
+(including under exceptions), the Chrome-trace export is valid Perfetto
+input, metrics snapshots are pure JSON and round-trip, the cache health
+counters fire on corruption/staleness, and StepTimer's percentile stats are
+views over the obs histogram (one percentile implementation, not two).
+"""
+import json
+import threading
+import time
+
+import pytest
+
+from repro import obs
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
+
+
+@pytest.fixture()
+def tracer():
+    """Fresh enabled tracer installed as the process tracer."""
+    tr = Tracer(enabled=True)
+    old = obs.set_tracer(tr)
+    yield tr
+    obs.set_tracer(old)
+
+
+@pytest.fixture()
+def metrics():
+    """Fresh metrics registry installed as the process default."""
+    reg = MetricsRegistry()
+    old = obs.set_default_metrics(reg)
+    yield reg
+    obs.set_default_metrics(old)
+
+
+# --------------------------------------------------------------- tracing ----
+def test_spans_nest_with_parent_and_depth(tracer):
+    with obs.span("outer", cat="t", a=1):
+        with obs.span("inner"):
+            time.sleep(0.001)
+
+    by_name = {r["name"]: r for r in tracer.spans()}
+    outer, inner = by_name["outer"], by_name["inner"]
+    assert outer["depth"] == 0 and outer["parent"] is None
+    assert inner["depth"] == 1 and inner["parent"] == "outer"
+    assert outer["args"] == {"a": 1}
+    # time containment: the child interval lies inside the parent's
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"]
+    assert inner["dur"] >= 1000.0  # slept 1ms; ts/dur are microseconds
+
+
+def test_spans_record_and_unwind_on_exception(tracer):
+    with pytest.raises(ValueError):
+        with obs.span("outer"):
+            with obs.span("boom"):
+                raise ValueError("x")
+
+    boom = tracer.spans("boom")[0]
+    outer = tracer.spans("outer")[0]
+    assert boom["args"]["error"] == "ValueError"
+    assert outer["args"]["error"] == "ValueError"
+    assert boom["parent"] == "outer" and boom["depth"] == 1
+
+    # the thread-local stack fully unwound: a later span is a root again
+    with obs.span("after"):
+        pass
+    after = tracer.spans("after")[0]
+    assert after["depth"] == 0 and after["parent"] is None
+
+
+def test_mid_span_attrs_and_instants(tracer):
+    with obs.span("work") as sp:
+        sp.set(factor=4)
+        obs.instant("tick", n=1)
+    rec = tracer.spans("work")[0]
+    assert rec["args"]["factor"] == 4
+    events = [r for r in tracer.records if r["type"] == "event"]
+    assert events and events[0]["name"] == "tick"
+
+
+def test_disabled_tracer_is_noop_and_shared(tracer):
+    tracer.enabled = False
+    handle = obs.span("never")
+    with handle as sp:
+        sp.set(anything=1)  # must not raise on the null handle
+    assert obs.span("never2") is handle  # one shared null object
+    obs.instant("never3")
+    assert tracer.records == []
+
+
+def test_spans_carry_distinct_tids_across_threads(tracer):
+    def work():
+        with obs.span("child_thread"):
+            pass
+
+    t = threading.Thread(target=work)
+    with obs.span("main_thread"):
+        t.start()
+        t.join()
+    tids = {r["name"]: r["tid"] for r in tracer.spans()}
+    assert tids["main_thread"] != tids["child_thread"]
+    # a thread's first span is a root on its own stack, not a child of main
+    child = tracer.spans("child_thread")[0]
+    assert child["depth"] == 0 and child["parent"] is None
+
+
+def test_chrome_trace_export_is_valid(tracer, tmp_path):
+    with obs.span("outer", cat="serve", k="v"):
+        with obs.span("inner"):
+            pass
+    obs.instant("hit", kind="cache")
+
+    path = tmp_path / "trace.json"
+    obs.write_trace(path, metadata={"run": "test"})
+    trace = json.loads(path.read_text())  # must be parseable JSON
+
+    assert trace["displayTimeUnit"] == "ms"
+    assert trace["otherData"] == {"run": "test"}
+    events = trace["traceEvents"]
+    assert len(events) == 3
+    for e in events:
+        assert {"name", "cat", "ph", "ts", "pid", "tid", "args"} <= set(e)
+        assert isinstance(e["ts"], (int, float)) and e["ts"] >= 0
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+        if e["ph"] == "X":
+            assert isinstance(e["dur"], (int, float)) and e["dur"] >= 0
+        else:
+            assert e["ph"] == "i" and e["s"] == "t"
+    assert {e["ph"] for e in events} == {"X", "i"}
+
+
+def test_jsonl_event_log(tracer, tmp_path):
+    with obs.span("a"):
+        pass
+    obs.instant("b")
+    path = tmp_path / "events.jsonl"
+    tracer.write_jsonl(path)
+    lines = [json.loads(line) for line in path.read_text().splitlines()]
+    assert [r["type"] for r in lines] == ["span", "event"]
+
+
+# --------------------------------------------------------------- metrics ----
+def test_metrics_snapshot_roundtrips(metrics):
+    obs.count("c.hits", 3)
+    obs.gauge("g.frac", 0.5)
+    for v in (1.0, 2.0, 3.0):
+        obs.observe("h.lat_s", v)
+
+    snap = obs.snapshot()
+    assert snap["counters"]["c.hits"] == 3
+    assert snap["gauges"]["g.frac"] == 0.5
+    h = snap["histograms"]["h.lat_s"]
+    assert h["count"] == 3 and h["min"] == 1.0 and h["max"] == 3.0
+    assert h["p50"] == 2.0
+
+    # pure JSON: survives a serialize→parse cycle unchanged
+    assert json.loads(json.dumps(snap)) == snap
+
+    metrics.reset()
+    assert obs.snapshot()["counters"] == {}
+
+
+def test_histogram_percentiles_and_compaction():
+    h = obs.Histogram(max_samples=64)
+    for v in range(1, 101):
+        h.record(float(v))
+    # count/total/min/max stay exact through compaction
+    assert h.count == 100 and h.total == sum(range(1, 101))
+    assert h.min == 1.0 and h.max == 100.0
+    assert len(h.values) <= 64
+    # nearest-rank percentiles over the retained sample stay ordered and
+    # in-range
+    p50, p99 = h.percentile(50), h.percentile(99)
+    assert 1.0 <= p50 <= p99 <= 100.0
+    assert 30.0 <= p50 <= 70.0
+
+
+def test_views_absorb_existing_stat_objects(metrics):
+    obs.register_view("good", lambda: {"hits": 1})
+    obs.register_view("bad", lambda: 1 / 0)
+    snap = obs.snapshot()
+    assert snap["views"]["good"] == {"hits": 1}
+    # a broken view degrades to an error entry, never breaks the snapshot
+    assert "error" in snap["views"]["bad"]
+    assert json.loads(json.dumps(snap)) == snap
+
+
+def test_count_emits_instant_when_tracing(tracer, metrics):
+    obs.count("cache.hit", key="k")
+    assert metrics.counter("cache.hit").value == 1
+    events = [r for r in tracer.records if r["type"] == "event"]
+    assert events[0]["name"] == "cache.hit"
+    assert events[0]["args"] == {"key": "k"}
+
+
+def test_formatters(metrics):
+    obs.count("cache.hit", 2)
+    obs.observe("serve.decode_step_s", 0.001)
+    text = obs.format_snapshot(obs.snapshot())
+    assert "cache.hit" in text and "serve.decode_step_s" in text
+    assert "p99" in text
+
+    phases = {"decode": {"compile_s": 0.5, "warm": {
+        "calls": 3, "mean_s": 0.001, "p50_s": 0.001, "p99_s": 0.002,
+        "best_s": 0.0009}}}
+    lines = obs.format_phases(phases)
+    assert "decode" in lines and "p99=2.00ms" in lines and "3 steps" in lines
+
+
+# ----------------------------------------------------- cache health events --
+def test_cache_corrupt_counter(metrics, tmp_path):
+    from repro.compiler.cache import CompileCache
+
+    path = tmp_path / "cache.json"
+    path.write_text("{ this is not json")
+    cache = CompileCache(path)
+    assert cache.get("k") is None  # degrade contract unchanged
+    assert metrics.counter("cache.corrupt").value == 1
+
+
+def test_cache_stale_jax_version_counter(metrics, tmp_path):
+    from repro.compiler.cache import CompileCache, _env_fingerprint
+
+    path = tmp_path / "cache.json"
+    cache = CompileCache(path)
+    cache.put("fresh", {"factor": 2})       # stamped with the live env
+    entries = json.loads(path.read_text())
+    entries["entries"]["old"] = {"factor": 4, "env": "jax-0.0.0-older"}
+    path.write_text(json.dumps(entries))
+
+    reread = CompileCache(path)
+    assert reread.get("fresh")["factor"] == 2
+    assert reread.get("fresh")["env"] == _env_fingerprint()
+    assert metrics.counter("cache.stale_jax_version").value == 1
+    assert metrics.counter("cache.corrupt").value == 0
+
+
+# ---------------------------------------------------------------- timers ----
+def test_steptimer_warm_cold_split_and_percentiles():
+    from repro.launch.steps import StepTimer
+
+    timer = StepTimer()
+    for _ in range(6):
+        timer.run("decode", lambda: time.sleep(0.001))
+    st = timer.stats()["decode"]
+
+    # legacy flat keys survive (compat with older BENCH_* consumers)
+    assert st["steps"] == 5 and st["compile_s"] > 0
+    assert st["steady_mean_s"] is not None
+    # explicit warm/cold split + percentiles
+    assert st["cold"]["calls"] == 1
+    assert st["cold"]["total_s"] == st["compile_s"]
+    assert st["warm"]["calls"] == 5
+    assert st["warm"]["p50_s"] <= st["warm"]["p99_s"]
+    assert st["steady_p50_s"] == st["warm"]["p50_s"]
+    assert st["steady_p99_s"] == st["warm"]["p99_s"]
+    assert timer.steady["decode"]  # compat view over the histogram samples
+
+
+# --------------------------------------------------------------- profile ----
+def test_profile_without_logdir_is_a_plain_span(tracer):
+    with obs.profile("window", tag="x"):
+        pass
+    rec = tracer.spans("window")[0]
+    assert rec["cat"] == "profile"
+    assert rec["args"]["profiled"] is False and rec["args"]["tag"] == "x"
+
+
+# ------------------------------------------------- end-to-end serve trace ----
+def test_engine_generate_produces_nested_trace(tracer, metrics, tmp_path,
+                                               monkeypatch):
+    """One Engine.generate() yields warmup/prefill/per-token decode spans
+    with monotonic timestamps, TTFT on the generate span, and latency
+    histograms in the metrics snapshot."""
+    import jax
+    import jax.numpy as jnp
+    from repro.compiler.registry import PlanRegistry, set_default_registry
+    from repro.configs.base import load_arch
+    from repro.models import model as model_mod
+    from repro.serve.engine import Engine, ServeConfig
+
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "cache"))
+    prev = set_default_registry(PlanRegistry())
+    try:
+        cfg = load_arch("qwen3-0.6b", smoke=True)
+        params = model_mod.init_params(cfg, jax.random.PRNGKey(0),
+                                       dtype=jnp.float32)
+        eng = Engine(cfg, params, ServeConfig(batch=2, max_len=16))
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0,
+                                     cfg.vocab_size)
+        eng.generate(prompts, 3)
+    finally:
+        set_default_registry(prev)
+
+    gen = tracer.spans("serve.generate")[0]
+    assert tracer.spans("serve.prefill")
+    decodes = sorted(tracer.spans("serve.decode"), key=lambda r: r["ts"])
+    assert len(decodes) == 3
+    for d in decodes:
+        assert d["parent"] == "serve.generate" and d["depth"] == 1
+        assert gen["ts"] <= d["ts"]
+        assert d["ts"] + d["dur"] <= gen["ts"] + gen["dur"]
+    assert all(a["ts"] + a["dur"] <= b["ts"]
+               for a, b in zip(decodes, decodes[1:]))
+    assert gen["args"]["ttft_s"] > 0
+
+    snap = obs.snapshot()
+    assert snap["counters"]["serve.tokens"] == 6
+    assert snap["histograms"]["serve.ttft_s"]["count"] == 1
+    assert snap["histograms"]["serve.decode_step_s"]["count"] == 3
+    # the engine's stats are published as a snapshot view
+    assert snap["views"]["serve.engine"]["phases"]["decode"]["steps"] >= 1
