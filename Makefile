@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-diff bench bench-compiler bench-smoke \
-	bench-serve bench-serve-smoke trace-smoke
+	bench-serve bench-serve-smoke trace-smoke chaos-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -41,6 +41,15 @@ bench-serve:
 
 bench-serve-smoke:
 	$(PY) -m benchmarks.run --mode serve --smoke
+
+# chaos smoke: the fault-injection matrix (docs/robustness.md) — every
+# injection point on the compile→serve path must degrade one ladder rung
+# and still produce fault-free tokens at ≤5e-6 logit parity, plus the
+# self-healing plan-store contracts (quarantine backoff, corruption
+# recovery, cross-process write merging).  Runs inside tier-1: `make test`
+# picks up tests/test_chaos.py with the rest of the suite.
+chaos-smoke:
+	$(PY) -m pytest -x -q tests/test_chaos.py
 
 # flight-recorder smoke: one traced Engine.generate() through the serve
 # launcher must produce valid Chrome-trace JSON (nested warmup/prefill/

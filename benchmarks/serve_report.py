@@ -338,6 +338,22 @@ def run_report(smoke: bool = False, out_path=None) -> dict:
         emit("serve_obs_overhead", oh["instrumented_us"],
              f"raw={oh['raw_us']}us;frac={oh['overhead_frac']}")
 
+        # ---- robustness row (docs/robustness.md) --------------------------
+        # Silent-degradation tripwire: a request served off the planned path,
+        # a failed warmup bucket or a quarantined plan all mean the ladder
+        # was walked during a supposedly-healthy benchmark run.  The row is
+        # asserted == 0 by tests/test_benchmarks.py.
+        from repro.compiler import default_cache
+        report["robustness"] = {
+            "degraded_requests": report["engine"].get("degraded_requests", 0),
+            "warmup_failed": report["engine"].get("warmup_failed", 0),
+            "quarantined_plans": len(default_cache().quarantine_entries()),
+        }
+        rb = report["robustness"]
+        emit("serve_robustness", float(rb["degraded_requests"]),
+             f"warmup_failed={rb['warmup_failed']};"
+             f"quarantined={rb['quarantined_plans']}")
+
         # unified metrics snapshot: registry hit/miss/fallback counters,
         # emission-tier mix, TTFT / per-token latency histograms.  A report
         # without it means the obs spine went dark — fail loudly rather

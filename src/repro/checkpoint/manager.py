@@ -110,6 +110,12 @@ def available_steps(root: str) -> list:
     return sorted(steps)
 
 
+def verify(ckpt_dir: str) -> bool:
+    """Public manifest/hash verification (see ``_verify``) — the failover
+    loop uses it to pre-screen restore candidates."""
+    return _verify(ckpt_dir)
+
+
 def latest_valid(root: str) -> Optional[str]:
     """Newest checkpoint that passes hash verification (corrupt → skip)."""
     latest_file = os.path.join(root, "LATEST")

@@ -29,9 +29,10 @@ import numpy as np
 from repro import obs
 from repro.core.ir import Graph, NodeKind, PumpSpec
 from repro.core.pump_plan import VMEM_BYTES, plan_kernel_pump
+from repro.testing import faults
 
-from .cache import (CompileCache, default_cache, graph_fingerprint,
-                    request_key)
+from .cache import (CompileCache, QuarantinePolicy, default_cache,
+                    graph_fingerprint, request_key)
 from .lowering import CompiledKernel, LoweringError, lower
 from .pallas_backend import lower_pallas, partition_regions
 from .passes import (PASS_REGISTRY, FifoDepthPass, FusionReport, GraphPass,
@@ -40,6 +41,37 @@ from .passes import (PASS_REGISTRY, FifoDepthPass, FusionReport, GraphPass,
 from .pipeline import PassRecord, Pipeline, PipelineReport
 from .registry import (BucketPolicy, PlanRegistry, default_registry,
                        set_default_registry)
+
+# The formal degradation ladder (docs/robustness.md).  The first three rungs
+# are emission tiers *inside* the pallas backend — lower_pallas already picks
+# per region and falls through pallas → blockloop/carryloop → gather when a
+# region can't be planned.  The cross-layer rungs are what this module and
+# the plan registry own: a pallas-backend failure degrades to the per-node
+# jax lowering (compile_degraded), and a jax failure degrades to the plain-
+# jnp direct functions the registry wrappers / engine carry.  Every step
+# down is counted (``degrade.compile`` / ``registry.fallback`` /
+# ``engine.degraded``) with the reason, never silent.
+DEGRADATION_LADDER = ("pallas", "blockloop", "gather", "jax", "direct")
+
+
+class PlanQuarantined(RuntimeError):
+    """Raised by :func:`compile` when the request's plan key is inside its
+    quarantine backoff window — the caller must degrade a rung instead of
+    re-paying a known-bad compile."""
+
+    def __init__(self, msg: str, *, qkey: str = "", entry: dict = None):
+        super().__init__(msg)
+        self.qkey = qkey
+        self.entry = entry or {}
+
+
+class AutotuneError(RuntimeError):
+    """Every autotune candidate failed to build or measure."""
+
+    def __init__(self, msg: str, *, failures: dict = None):
+        super().__init__(msg)
+        self.failures = failures or {}
+
 
 # memo value: (kernel, plan) — the plan is re-used to write-through to a
 # caller-supplied persistent cache that hasn't seen this request yet
@@ -51,6 +83,18 @@ def clear_memo() -> None:
     """Drop all in-process compiled kernels (test isolation hook)."""
     _KERNEL_MEMO.clear()
     _MEMO_HITS.clear()
+
+
+def forget(cache_key: str) -> int:
+    """Purge every in-process memo entry compiled under ``cache_key`` (all
+    backends).  The memo is populated *before* post-compile validation can
+    run — a kernel that later flunks the registry's spot-check must not be
+    memo-served on the retry, so validation failures call this."""
+    stale = [mk for mk in _KERNEL_MEMO if mk[0] == cache_key]
+    for mk in stale:
+        _KERNEL_MEMO.pop(mk, None)
+        _MEMO_HITS.pop(mk, None)
+    return len(stale)
 
 
 def _cell_sig(value) -> str:
@@ -174,18 +218,33 @@ def _measure_inputs(graph: Graph) -> Dict[str, np.ndarray]:
             if n.kind == NodeKind.MEMORY and not graph.in_edges(n.name)}
 
 
-def _time_kernel(fn, inputs, repeats: int = 5) -> float:
+# wall-clock budget for measuring ONE autotune candidate (compile + repeats).
+# A candidate that blows through it keeps whatever timings it banked so far —
+# a slow-but-finite candidate still competes; the budget bounds warmup tail
+# latency, it does not disqualify.
+AUTOTUNE_CANDIDATE_BUDGET_S = 10.0
+
+
+def _time_kernel(fn, inputs, repeats: int = 5,
+                 budget_s: Optional[float] = None) -> float:
     """Best-of-N wall time in µs (first call compiles and is discarded).
     Five repeats: the candidate factors on the carry kernels sit within a
     few percent of each other on CPU, and best-of-3 let scheduler noise
-    flip the persisted winner between otherwise identical processes."""
+    flip the persisted winner between otherwise identical processes.
+    ``budget_s`` caps the total wall clock spent here; once exceeded the
+    best timing banked so far is returned early (at least one timed run
+    always happens)."""
     import jax
+    t_start = time.perf_counter()
     jax.block_until_ready(fn(inputs))
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(inputs))
         best = min(best, (time.perf_counter() - t0) * 1e6)
+        if budget_s is not None and time.perf_counter() - t_start > budget_s:
+            obs.count("compile.measure_budget_hit")
+            break
     return best
 
 
@@ -229,6 +288,22 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
     key = request_key(graph, factor=factor, mode=mode,
                       vmem_budget=vmem_budget, max_factor=max_factor,
                       estimate=_estimate_sig(estimate), autotune=autotune)
+    if cache is not None:
+        # quarantine gate: a (plan, backend) pair that recently failed
+        # compile or validation is not retried inside its backoff window —
+        # the caller degrades a rung instead (compile_degraded does this
+        # automatically).  The backend is part of the quarantine key because
+        # a NaN pallas kernel does not indict the jax lowering of the same
+        # plan.
+        qkey = f"{key}:{backend}"
+        q = cache.quarantined(qkey)
+        if q is not None:
+            obs.count("cache.quarantine_skip", graph=graph.name,
+                      backend=backend, reason=q.get("reason", ""))
+            raise PlanQuarantined(
+                f"plan {key[:12]}… backend={backend} is quarantined "
+                f"({q.get('reason', 'unknown')}, fail #{q.get('fails', 0)}) — "
+                f"backoff window open", qkey=qkey, entry=q)
     memo_key = (key, backend, jit, pallas_mode, _fn_signature(graph))
     if memoize and memo_key in _KERNEL_MEMO:
         kern, plan = _KERNEL_MEMO[memo_key]
@@ -244,12 +319,24 @@ def compile(graph: Graph, *, factor="auto", mode: str = "T",
     with obs.span("compiler.compile", cat="compile", graph=graph.name,
                   backend=backend, autotune=autotune or "none",
                   factor=str(factor), mode=mode) as _cspan:
-        return _compile_cold(graph, factor=factor, mode=mode,
-                             vmem_budget=vmem_budget, max_factor=max_factor,
-                             estimate=estimate, backend=backend, jit=jit,
-                             pallas_mode=pallas_mode, autotune=autotune,
-                             cache=cache, memoize=memoize, key=key,
-                             memo_key=memo_key, cspan=_cspan)
+        try:
+            return _compile_cold(graph, factor=factor, mode=mode,
+                                 vmem_budget=vmem_budget,
+                                 max_factor=max_factor,
+                                 estimate=estimate, backend=backend, jit=jit,
+                                 pallas_mode=pallas_mode, autotune=autotune,
+                                 cache=cache, memoize=memoize, key=key,
+                                 memo_key=memo_key, cspan=_cspan)
+        except Exception as e:
+            # stamp the request identity so degradation handlers can
+            # quarantine / forget the exact failing plan without recomputing
+            # the key (best-effort: some exotic exceptions reject attrs)
+            try:
+                e.compile_cache_key = key
+                e.compile_backend = backend
+            except Exception:
+                pass
+            raise
 
 
 def _compile_cold(graph: Graph, *, factor, mode, vmem_budget, max_factor,
@@ -299,6 +386,7 @@ def _compile_cold(graph: Graph, *, factor, mode, vmem_budget, max_factor,
         inputs = _measure_inputs(graph)
         timings: Dict[int, float] = {}
         kernels: Dict[int, CompiledKernel] = {}
+        failures: Dict[int, str] = {}
         with obs.span("compiler.autotune", cat="compile", graph=graph.name,
                       backend=backend) as aspan:
             for cand in AUTOTUNE_CANDIDATES:
@@ -306,15 +394,32 @@ def _compile_cold(graph: Graph, *, factor, mode, vmem_budget, max_factor,
                     continue
                 with obs.span("compiler.autotune.candidate", cat="compile",
                               graph=graph.name, factor=cand) as csp:
-                    k = build(cand)
-                    achieved = k.spec.factor  # legality may have clamped it
-                    if achieved in timings:
-                        csp.set(achieved=achieved, skipped="duplicate")
-                        continue
-                    kernels[achieved] = k
-                    timings[achieved] = _time_kernel(k.fn, inputs)
-                    csp.set(achieved=achieved,
-                            best_us=round(timings[achieved], 1))
+                    # one candidate failing (bad lowering at that factor, a
+                    # measurement timeout) must not sink the search — the
+                    # surviving candidates still yield a valid winner
+                    try:
+                        faults.check("compile.measure", graph=graph.name,
+                                     factor=cand)
+                        k = build(cand)
+                        achieved = k.spec.factor  # legality may clamp it
+                        if achieved in timings:
+                            csp.set(achieved=achieved, skipped="duplicate")
+                            continue
+                        t = _time_kernel(k.fn, inputs,
+                                         budget_s=AUTOTUNE_CANDIDATE_BUDGET_S)
+                        kernels[achieved] = k
+                        timings[achieved] = t
+                        csp.set(achieved=achieved, best_us=round(t, 1))
+                    except Exception as e:
+                        failures[cand] = repr(e)
+                        obs.count("compile.measure_failed", graph=graph.name,
+                                  factor=str(cand), error=type(e).__name__)
+                        csp.set(failed=type(e).__name__)
+            aspan.set(failed_candidates=len(failures))
+        if not timings:
+            raise AutotuneError(
+                f"autotune='measure' on {graph.name!r}: every candidate "
+                f"failed — {failures}", failures=failures)
         # statistical ties go to the smallest factor: candidates within the
         # noise band of the best are indistinguishable by measurement, and
         # persisting an arbitrary exotic winner costs VMEM/beats for nothing
@@ -330,6 +435,12 @@ def _compile_cold(graph: Graph, *, factor, mode, vmem_budget, max_factor,
             "timings_us": {str(f): round(t, 1) for f, t in timings.items()},
             "replayed": False,
         }
+        if failures:
+            kern.report.autotune["failed"] = {str(f): err for f, err
+                                              in failures.items()}
+            kern.report.warn(
+                f"autotune: {len(failures)} candidate(s) failed "
+                f"measurement and were excluded from the search")
     else:
         obs.count("compile.build", graph=graph.name, backend=backend)
         kern = build(factor)
@@ -353,6 +464,59 @@ def _compile_cold(graph: Graph, *, factor, mode, vmem_budget, max_factor,
     if memoize and persist:
         _KERNEL_MEMO[memo_key] = (kern, plan)
     return kern
+
+
+def compile_degraded(graph: Graph, *, backend: str = "pallas",
+                     autotune=None, cache=None,
+                     **kw) -> CompiledKernel:
+    """:func:`compile`, walking the cross-backend rungs of
+    :data:`DEGRADATION_LADDER` instead of raising.
+
+    Tries the requested backend first; on failure (or an open quarantine
+    window) records the failing rung in the quarantine ledger, counts
+    ``degrade.compile`` with the reason, and steps down: pallas → per-node
+    jax lowering → jax without measured autotune.  The intra-pallas tiers
+    (blockloop/gather) degrade inside :func:`~.pallas_backend.lower_pallas`
+    before any of this triggers.  Raises only when every rung fails — the
+    caller's last rung (the registry wrappers' / engine's plain-jnp direct
+    functions) is below this function.
+    """
+    store = default_cache() if cache is None else (cache or None)
+    rungs = [(backend, autotune)]
+    if backend != "jax":
+        rungs.append(("jax", autotune))
+    if autotune is not None:
+        rungs.append(("jax", None))
+    last = None
+    degraded_from = None
+    for b, at in rungs:
+        try:
+            kern = compile(graph, backend=b, autotune=at, cache=cache, **kw)
+        except PlanQuarantined as e:
+            # already quarantined — skip the rung without re-recording
+            last = e
+            degraded_from = (b, "quarantined")
+            obs.count("degrade.compile", graph=graph.name, frm=b,
+                      reason="quarantined")
+            continue
+        except Exception as e:
+            last = e
+            reason = type(e).__name__
+            degraded_from = (b, reason)
+            obs.count("degrade.compile", graph=graph.name, frm=b,
+                      reason=reason)
+            qkey = getattr(e, "compile_cache_key", None)
+            if store is not None and qkey:
+                store.record_failure(f"{qkey}:{b}", reason)
+            continue
+        if degraded_from is not None:
+            frm, why = degraded_from
+            kern.report.warn(
+                f"degraded compile: backend={frm} failed ({why}); "
+                f"served by backend={b}"
+                + ("" if at == autotune else " without measured autotune"))
+        return kern
+    raise last
 
 
 def plan_pump(block_bytes_in: int, block_bytes_out: int,
@@ -390,12 +554,15 @@ def plan_pump(block_bytes_in: int, block_bytes_out: int,
 
 
 __all__ = [
-    "compile", "plan_pump", "clear_memo", "AUTOTUNE_CANDIDATES",
+    "compile", "compile_degraded", "plan_pump", "clear_memo", "forget",
+    "AUTOTUNE_CANDIDATES", "AUTOTUNE_CANDIDATE_BUDGET_S",
+    "DEGRADATION_LADDER", "PlanQuarantined", "AutotuneError",
     "Pipeline", "PipelineReport", "PassRecord",
     "GraphPass", "PASS_REGISTRY", "register_pass", "make_pass",
     "StreamingPass", "StreamFusionPass", "MultipumpPass", "FifoDepthPass",
     "FusionReport",
-    "CompileCache", "default_cache", "graph_fingerprint", "request_key",
+    "CompileCache", "QuarantinePolicy", "default_cache",
+    "graph_fingerprint", "request_key",
     "CompiledKernel", "LoweringError", "lower",
     "lower_pallas", "partition_regions",
     "BucketPolicy", "PlanRegistry", "default_registry",

@@ -20,19 +20,47 @@ Compute-node ``fn`` bodies are not part of the structural fingerprint (they
 are opaque callables); plans are fn-independent, and the in-memory kernel
 memo in :mod:`repro.compiler` additionally keys on the fn code location.
 All I/O failures degrade to cache-off behaviour instead of raising.
+
+Self-healing store semantics (docs/robustness.md):
+
+* **Atomic writes + cross-process locking** — every write is tmp+rename
+  (readers never see a torn file) and the read-merge-write cycle holds an
+  ``fcntl`` lock on ``<path>.lock``, so two processes warming the same grid
+  merge their entries instead of last-writer-wins clobbering.
+* **Quarantine with retry budget + exponential backoff** — a plan that
+  fails compilation or flunks the registry's differential/finite spot-check
+  is recorded under its content-hash key (suffixed with the backend rung):
+  each failure doubles the backoff window (``base_s · 2^(fails-1)``, capped
+  at ``cap_s`` once ``budget`` failures are spent), and
+  :func:`repro.compiler.compile` skips a quarantined rung inside its window
+  (``cache.quarantine_skip``) so the hot path stops re-paying a known-bad
+  plan.  A later success clears the entry.
+* **Fault injection** — the read / parse / write seams are injection sites
+  (``cache.load`` / ``cache.json`` / ``cache.save``; see
+  :mod:`repro.testing.faults`), and every degrade they trigger is already a
+  counted health event.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import hashlib
 import json
 import os
 import tempfile
+import time
 from pathlib import Path
 from typing import Dict, Optional
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover — non-POSIX: lockless best effort
+    fcntl = None
 
 from repro import obs
 from repro.core.ir import Graph
 from repro.core.symbolic import AccessPattern, Affine
+from repro.testing import faults
 
 
 def _affine_sig(a: Affine):
@@ -109,32 +137,94 @@ def _default_path() -> Path:
     return Path.home() / ".cache" / "repro" / "compile_cache.json"
 
 
-class CompileCache:
-    """JSON-on-disk key→plan store with hit/miss accounting."""
+@dataclasses.dataclass(frozen=True)
+class QuarantinePolicy:
+    """Backoff schedule for plans that keep failing (docs/robustness.md).
 
-    def __init__(self, path: Optional[os.PathLike | str] = None):
+    The n-th recorded failure of a plan key opens a no-retry window of
+    ``base_s * 2**(n-1)`` seconds, capped at ``cap_s``; once ``budget``
+    failures are spent the window pins at ``cap_s`` (the plan is effectively
+    parked until an operator clears it or a success is recorded)."""
+
+    base_s: float = 0.5
+    cap_s: float = 300.0
+    budget: int = 5
+
+    def window_s(self, fails: int) -> float:
+        if fails >= self.budget:
+            return self.cap_s
+        return min(self.base_s * (2.0 ** max(fails - 1, 0)), self.cap_s)
+
+
+class CompileCache:
+    """JSON-on-disk key→plan store with hit/miss accounting, cross-process
+    merge-on-write locking, and a quarantine ledger (schema version 2; a
+    version-1 file reads as an empty quarantine)."""
+
+    def __init__(self, path: Optional[os.PathLike | str] = None,
+                 quarantine: Optional[QuarantinePolicy] = None):
         self.path = Path(path) if path is not None else _default_path()
+        self.quarantine_policy = quarantine or QuarantinePolicy()
         self.hits = 0
         self.misses = 0
         self._entries: Optional[Dict[str, dict]] = None
+        self._quarantine: Dict[str, dict] = {}
+        # keys whose quarantine entries this process cleared; the merge in
+        # _save must not resurrect them from a stale on-disk copy
+        self._quarantine_cleared: set = set()
 
     # -- persistence ---------------------------------------------------------
+    @contextlib.contextmanager
+    def _lock(self):
+        """Cross-process write lock on a `.lock` sibling.  Lock failures
+        (exotic filesystems, non-POSIX) degrade to the unlocked best-effort
+        behaviour — writes stay atomic either way, the lock only closes the
+        read-merge-write race between concurrent writers."""
+        if fcntl is None:
+            yield
+            return
+        try:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            lockf = open(self.path.with_suffix(self.path.suffix + ".lock"),
+                         "w")
+        except OSError:
+            yield
+            return
+        try:
+            fcntl.flock(lockf, fcntl.LOCK_EX)
+            yield
+        finally:
+            with contextlib.suppress(OSError):
+                fcntl.flock(lockf, fcntl.LOCK_UN)
+            lockf.close()
+
+    def _read_disk(self):
+        """Fresh read of the on-disk store → (entries, quarantine).  All
+        failure modes (missing file, torn write, bitrot, IO error) degrade
+        to an empty store; corruption is counted."""
+        try:
+            faults.check("cache.load", path=str(self.path))
+            with open(self.path) as f:
+                text = f.read()
+            text = faults.mangle("cache.json", text, path=str(self.path))
+            data = json.loads(text)
+            entries = dict(data.get("entries", {}))
+            quarantine = dict(data.get("quarantine", {}))
+        except FileNotFoundError:
+            return {}, {}            # cold store: expected, not a health event
+        except (OSError, ValueError, AttributeError, TypeError) as e:
+            # truncated/corrupted/wrong-schema JSON: cold-compile path.
+            # The degrade is the contract; the *event* must still be
+            # visible — a fleet silently re-measuring every plan because
+            # its shared cache file is corrupt is a real failure mode.
+            obs.count("cache.corrupt", path=str(self.path), error=repr(e))
+            return {}, {}
+        return entries, quarantine
+
     def _load(self) -> Dict[str, dict]:
         if self._entries is None:
-            try:
-                with open(self.path) as f:
-                    data = json.load(f)
-                self._entries = dict(data.get("entries", {}))
-            except FileNotFoundError:
-                self._entries = {}   # cold store: expected, not a health event
-            except (OSError, ValueError, AttributeError, TypeError) as e:
-                # truncated/corrupted/wrong-schema JSON: cold-compile path.
-                # The degrade is the contract; the *event* must still be
-                # visible — a fleet silently re-measuring every plan because
-                # its shared cache file is corrupt is a real failure mode.
-                obs.count("cache.corrupt", path=str(self.path), error=repr(e))
-                self._entries = {}
-            else:
+            self._entries, self._quarantine = self._read_disk()
+            if self._entries:
                 # entries stamped under another jax build can never match a
                 # current request key (the version is folded into the key),
                 # so they are invisible dead weight — count them once per
@@ -148,14 +238,30 @@ class CompileCache:
                               path=str(self.path), env=env)
         return self._entries
 
-    def _save(self) -> None:
+    def _save(self, merge: bool = True) -> None:
         try:
-            self.path.parent.mkdir(parents=True, exist_ok=True)
-            fd, tmp = tempfile.mkstemp(dir=self.path.parent,
-                                       prefix=self.path.name, suffix=".tmp")
-            with os.fdopen(fd, "w") as f:
-                json.dump({"version": 1, "entries": self._load()}, f)
-            os.replace(tmp, self.path)
+            with self._lock():
+                entries = self._load()
+                quarantine = self._quarantine
+                if merge:
+                    # re-read under the lock and merge: another process may
+                    # have written entries since our load, and plans/ledger
+                    # rows are individually valid — union loses nothing
+                    disk_entries, disk_quarantine = self._read_disk()
+                    entries = {**disk_entries, **entries}
+                    quarantine = {**disk_quarantine, **quarantine}
+                    for key in self._quarantine_cleared:
+                        quarantine.pop(key, None)
+                    self._entries, self._quarantine = entries, quarantine
+                faults.check("cache.save", path=str(self.path))
+                self.path.parent.mkdir(parents=True, exist_ok=True)
+                fd, tmp = tempfile.mkstemp(dir=self.path.parent,
+                                           prefix=self.path.name,
+                                           suffix=".tmp")
+                with os.fdopen(fd, "w") as f:
+                    json.dump({"version": 2, "entries": entries,
+                               "quarantine": quarantine}, f)
+                os.replace(tmp, self.path)
         except OSError:
             pass  # read-only filesystem etc.: behave as a process-local cache
 
@@ -183,12 +289,59 @@ class CompileCache:
 
     def clear(self) -> None:
         self._entries = {}
+        self._quarantine = {}
+        self._quarantine_cleared = set()
+        self._save(merge=False)
+
+    # -- quarantine ledger ---------------------------------------------------
+    def quarantined(self, key: str, now: Optional[float] = None
+                    ) -> Optional[dict]:
+        """The quarantine entry for ``key`` if its backoff window is still
+        open, else None.  An expired window does not delete the entry — the
+        failure count persists so the *next* failure backs off harder."""
+        self._load()
+        entry = self._quarantine.get(key)
+        if not isinstance(entry, dict):
+            return None
+        if (now if now is not None else time.time()) < entry.get("until", 0.0):
+            return dict(entry)
+        return None
+
+    def record_failure(self, key: str, reason: str,
+                       now: Optional[float] = None) -> dict:
+        """Record one failure of ``key``; opens/extends its backoff window
+        per the policy and persists the ledger."""
+        self._load()
+        now = now if now is not None else time.time()
+        entry = self._quarantine.get(key)
+        fails = (entry.get("fails", 0) if isinstance(entry, dict) else 0) + 1
+        window = self.quarantine_policy.window_s(fails)
+        entry = {"fails": fails, "until": now + window, "reason": reason,
+                 "last": now}
+        self._quarantine[key] = entry
+        self._quarantine_cleared.discard(key)
+        obs.count("cache.quarantine", key=key, reason=reason,
+                  fails=str(fails))
         self._save()
+        return dict(entry)
+
+    def record_success(self, key: str) -> None:
+        """A key that works again leaves quarantine entirely."""
+        self._load()
+        if self._quarantine.pop(key, None) is not None:
+            self._quarantine_cleared.add(key)
+            self._save()
+
+    def quarantine_entries(self) -> Dict[str, dict]:
+        self._load()
+        return {k: dict(v) for k, v in self._quarantine.items()
+                if isinstance(v, dict)}
 
     @property
     def stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._load())}
+                "entries": len(self._load()),
+                "quarantined": len(self._quarantine)}
 
     def __len__(self) -> int:
         return len(self._load())

@@ -67,6 +67,7 @@ from repro.core.executor import _toposort
 from repro.core.ir import CarrySpec, Graph, NodeKind
 from repro.core.symbolic import (Affine, BlockedAccess, blocked_access,
                                  narrow_block, split_temporal)
+from repro.testing import faults
 
 from .lowering import (LoweringError, _indices, carry_sequence_apply,
                        scatter_indices)
@@ -936,6 +937,7 @@ def lower_pallas(g: Graph, jit: bool = True, pallas_mode: str = "auto",
     """
     if pallas_mode not in ("auto", "interpret", "fallback"):
         raise ValueError(f"unknown pallas_mode {pallas_mode!r}")
+    faults.check("emission.lower", graph=g.name)
     g.validate()
     warn = warn or (lambda msg: None)
     on_tpu = any(d.platform == "tpu" for d in jax.devices())
@@ -998,4 +1000,8 @@ def lower_pallas(g: Graph, jit: bool = True, pallas_mode: str = "auto",
             mems.update(fn(mems))
         return mems
 
+    # chaos seam: lets tests simulate a compiled kernel that runs but
+    # produces garbage (NaNs) or dies at execution time — a no-op (the
+    # original run_fn) unless fault rules are installed at lowering time
+    run_fn = faults.wrap("emission.exec", run_fn, graph=g.name)
     return jax.jit(run_fn) if jit else run_fn

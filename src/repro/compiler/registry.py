@@ -38,6 +38,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 
 from repro import obs
+from repro.testing import faults
 
 
 def _next_pow2(n: int) -> int:
@@ -174,7 +175,7 @@ class PlanRegistry:
 
     def __init__(self, policy: Optional[BucketPolicy] = None, *,
                  pump="measure", ragged_pump="auto", backend: str = "pallas",
-                 cache=None):
+                 cache=None, spot_check: str = "finite"):
         self.policy = policy or BucketPolicy()
         self.pump = pump
         # ragged grouped-GEMM plans are keyed on the per-expert padded-size
@@ -186,8 +187,23 @@ class PlanRegistry:
         self.ragged_pump = ragged_pump
         self.backend = backend
         self._cache = cache
+        # post-compile validation level: 'finite' runs every fresh kernel
+        # once on small deterministic inputs and rejects non-finite output
+        # (a NaN kernel must be caught at plan time, not inside the jit'd
+        # decode step where values can't be branched on); 'diff' adds a
+        # differential check against the numpy reference executor; 'off'
+        # disables validation.
+        self.spot_check = spot_check
         self._plans: Dict[Tuple, Any] = {}
         self.stats = RegistryStats()
+
+    def _store(self):
+        """The persistent CompileCache backing this registry (quarantine
+        ledger access), or None when disk caching is disabled."""
+        if self._cache is None:
+            from .cache import default_cache
+            return default_cache()
+        return self._cache or None
 
     # ------------------------------------------------------------- lookup --
     def _request(self, pump=None) -> Tuple[Any, str, Optional[str]]:
@@ -230,9 +246,40 @@ class PlanRegistry:
                       args=list(builder_args), pump=str(pump)) as sp:
             g, est = BUILDERS[kernel](*builder_args, **builder_kwargs)
             t0 = time.perf_counter()
-            kern = compiler.compile(g, factor=factor, mode=mode, estimate=est,
-                                    backend=self.backend, autotune=autotune,
-                                    cache=self._cache)
+            # compile through the degradation ladder: a pallas-backend
+            # failure (or an open quarantine window on the pallas rung)
+            # degrades to the per-node jax lowering instead of raising —
+            # the wrapper-level plain-jnp fallback stays the last rung
+            kern = compiler.compile_degraded(
+                g, factor=factor, mode=mode, estimate=est,
+                backend=self.backend, autotune=autotune, cache=self._cache)
+            bad = self._spot_check_reason(kern)
+            if bad is not None:
+                # poisoned kernel (compiles fine, computes garbage): purge
+                # the memo so the retry cannot be served the same artifact,
+                # quarantine the rung that produced it, degrade once
+                obs.count("registry.spotcheck_failed", kernel=kernel,
+                          backend=kern.backend, reason=bad)
+                ckey = kern.report.cache_key
+                if ckey:
+                    compiler.forget(ckey)
+                store = self._store()
+                if store is not None and ckey:
+                    store.record_failure(f"{ckey}:{kern.backend}", bad)
+                kern = compiler.compile_degraded(
+                    g, factor=factor, mode=mode, estimate=est,
+                    backend=self.backend, autotune=autotune,
+                    cache=self._cache)
+                bad2 = self._spot_check_reason(kern)
+                if bad2 is not None:
+                    raise RuntimeError(
+                        f"plan registry: {kernel} failed the {bad!r} "
+                        f"spot-check and its degraded recompile failed "
+                        f"{bad2!r} — refusing to install the plan")
+                kern.report.warn(
+                    f"spot-check rejected the first compile ({bad}); "
+                    f"serving the degraded recompile (backend="
+                    f"{kern.backend})")
             dt = time.perf_counter() - t0
             tuned = kern.report.autotune
             if tuned and not tuned.get("replayed"):
@@ -244,8 +291,46 @@ class PlanRegistry:
                           else "registry.plan_compile", kernel=kernel)
             sp.set(factor=kern.spec.factor,
                    measured=bool(tuned and not tuned.get("replayed")))
+        if faults.active():
+            # chaos seam: simulate a plan that fails/corrupts on the serving
+            # path after installation (zero-cost in production: never taken)
+            kern = dataclasses.replace(
+                kern, fn=faults.wrap("registry.exec", kern.fn, kernel=kernel))
         self._plans[key] = kern
         return kern
+
+    def _spot_check_reason(self, kern) -> Optional[str]:
+        """Validate a freshly compiled kernel eagerly; returns the failure
+        reason (``exec:*`` / ``nonfinite`` / ``diff:*``) or None.  Skipped
+        inside jax traces (can't branch on values there — exactly why the
+        check exists at plan time) and when validation is off."""
+        from repro import compiler
+        if (self.spot_check == "off" or kern.fn is None
+                or not compiler._trace_state_clean()):
+            return None
+        import numpy as np
+        inputs = _probe_inputs(kern.graph)
+        try:
+            out = kern.fn(inputs)
+        except Exception as e:  # noqa: BLE001 — any exec failure poisons it
+            return f"exec:{type(e).__name__}"
+        vals = out.items() if isinstance(out, dict) else [("out", out)]
+        for name, a in vals:
+            arr = np.asarray(a)
+            if arr.dtype.kind == "f" and not np.isfinite(arr).all():
+                return "nonfinite"
+        if self.spot_check == "diff":
+            from repro.core import executor
+            ref = executor.run(kern.graph, dict(inputs))
+            for name, a in (out.items() if isinstance(out, dict) else []):
+                if name in inputs or name not in ref:
+                    continue
+                got, want = np.asarray(a, np.float64), \
+                    np.asarray(ref[name], np.float64)
+                if got.shape == want.shape and \
+                        not np.allclose(got, want, rtol=1e-2, atol=1e-3):
+                    return f"diff:{name}"
+        return None
 
     def plans(self) -> List[Dict[str, Any]]:
         """Summaries of every resident plan (benchmark/report surface)."""
@@ -357,7 +442,15 @@ class PlanRegistry:
         qp = _pad_axes(q, {0: bb, 2: sb})
         kp = _pad_axes(k, {0: bb, 2: tb})
         vp = _pad_axes(v, {0: bb, 2: tb})
-        out = kern({"q": qp, "k": kp, "v": vp})["o"]
+        try:
+            out = kern({"q": qp, "k": kp, "v": vp})["o"]
+        except Exception as e:  # noqa: BLE001 — exec failure: degrade a rung
+            self.stats.fallback("flash_attention", why=f"exec: {e}")
+            warnings.warn(f"plan registry: flash_attention kernel execution "
+                          f"fell back to the direct ops path ({e})",
+                          stacklevel=2)
+            from repro.kernels.ops import flash_attention as _flash
+            return _flash(q, k, v, causal=causal, bq=bq, bkv=bkv)
         if (bb, sb) == (b, s):
             return out          # exact bucket: skip the slice dispatch
         return out[:b, :, :s, :]
@@ -395,7 +488,14 @@ class PlanRegistry:
         dtp = _pad_axes(dt, {0: bb, 1: lb})
         bp = _pad_axes(B, {0: bb, 1: lb})
         cp = _pad_axes(C, {0: bb, 1: lb})
-        out = kern({"x": xp, "dt": dtp, "a": A, "bmat": bp, "cmat": cp})
+        try:
+            out = kern({"x": xp, "dt": dtp, "a": A, "bmat": bp, "cmat": cp})
+        except Exception as e:  # noqa: BLE001 — exec failure: degrade a rung
+            self.stats.fallback("ssd_scan", why=f"exec: {e}")
+            warnings.warn(f"plan registry: ssd_scan kernel execution fell "
+                          f"back to the plain jnp scan ({e})", stacklevel=2)
+            y, st = _ssd_scan_reference(x, dt, A, B, C)
+            return (y, st) if final_state else y
         y = out["y"]
         if final_state:
             st = out["state"]
@@ -439,7 +539,14 @@ class PlanRegistry:
         kp = _pad_axes(k_cache[:, :, :t_keep], {0: bb, 2: tb})
         vp = _pad_axes(v_cache[:, :, :t_keep], {0: bb, 2: tb})
         pp = _pad_axes(_pos_vec(pos, b), {0: bb})
-        out = kern({"q": qp, "k": kp, "v": vp, "pos": pp})["o"]
+        try:
+            out = kern({"q": qp, "k": kp, "v": vp, "pos": pp})["o"]
+        except Exception as e:  # noqa: BLE001 — exec failure: degrade a rung
+            self.stats.fallback("decode_attention", why=f"exec: {e}")
+            warnings.warn(f"plan registry: decode_attention kernel execution "
+                          f"fell back to the plain jnp path ({e})",
+                          stacklevel=2)
+            return _decode_reference(q, k_cache, v_cache, pos)
         if bb == b:
             return out
         return out[:b]
@@ -460,11 +567,17 @@ class PlanRegistry:
             warnings.warn(f"plan registry: ssd_decode fell back to the "
                           f"plain jnp path ({e})", stacklevel=2)
             return _ssd_decode_reference(state, x, dt, A, B, C)
-        out = kern({"state": _pad_axes(state, {0: bb}),
-                    "x": _pad_axes(x, {0: bb}),
-                    "dt": _pad_axes(dt, {0: bb}), "a": A,
-                    "bmat": _pad_axes(B, {0: bb}),
-                    "cmat": _pad_axes(C, {0: bb})})
+        try:
+            out = kern({"state": _pad_axes(state, {0: bb}),
+                        "x": _pad_axes(x, {0: bb}),
+                        "dt": _pad_axes(dt, {0: bb}), "a": A,
+                        "bmat": _pad_axes(B, {0: bb}),
+                        "cmat": _pad_axes(C, {0: bb})})
+        except Exception as e:  # noqa: BLE001 — exec failure: degrade a rung
+            self.stats.fallback("ssd_decode", why=f"exec: {e}")
+            warnings.warn(f"plan registry: ssd_decode kernel execution fell "
+                          f"back to the plain jnp path ({e})", stacklevel=2)
+            return _ssd_decode_reference(state, x, dt, A, B, C)
         y, st = out["y"], out["state_out"]
         if bb == b:
             return y, st
@@ -515,15 +628,33 @@ class PlanRegistry:
         requests = list(requests)
         report = []
         surfaced: List[str] = []
+        failed = 0
         with obs.span("registry.warmup", cat="serve",
-                      requests=len(requests)):
+                      requests=len(requests)) as wspan:
             for kernel, spec in requests:
-                args, kwargs, _pads = canon[kernel](**spec)
                 t0 = time.perf_counter()
-                # ragged requests must warm under the same pump policy the
-                # serving wrapper will look them up with
-                pump = self.ragged_pump if kernel == "grouped_gemm" else None
-                kern = self.kernel(kernel, args, kwargs, pump=pump)
+                # per-request isolation: one unplannable bucket (bad shape,
+                # exhausted ladder, injected fault) yields a failure record,
+                # not an aborted grid — warmup always returns a partial-but-
+                # usable report and the surviving buckets still serve hits
+                try:
+                    args, kwargs, _pads = canon[kernel](**spec)
+                    # ragged requests must warm under the same pump policy
+                    # the serving wrapper will look them up with
+                    pump = self.ragged_pump if kernel == "grouped_gemm" \
+                        else None
+                    kern = self.kernel(kernel, args, kwargs, pump=pump)
+                except Exception as e:  # noqa: BLE001
+                    failed += 1
+                    obs.count("registry.warmup_failed", kernel=kernel,
+                              error=type(e).__name__)
+                    report.append({
+                        "kernel": kernel, "args": list(spec.values()),
+                        "factor": None, "measured": False, "replayed": False,
+                        "time_s": round(time.perf_counter() - t0, 4),
+                        "tiers": [], "degraded": [], "error": repr(e),
+                    })
+                    continue
                 for msg in kern.report.warnings:
                     if msg not in surfaced:
                         surfaced.append(msg)
@@ -543,12 +674,30 @@ class PlanRegistry:
                                         for w in v.get("why", [])}),
                 }
                 report.append(rec)
+            wspan.set(failed=failed)
         # compile warnings are deduplicated across the whole sweep: the same
         # degradation note recurs for every bucket of a kernel, and launch
         # output should name each unique condition once, not once per compile
         for msg in surfaced:
             warnings.warn(f"plan warmup: {msg}", stacklevel=2)
         return report
+
+
+def _probe_inputs(g) -> Dict[str, Any]:
+    """Small deterministic non-zero operands for the plan spot-check: a
+    fixed repeating pattern in [-0.75, 0.75] per external input memory
+    (zeros would make the differential check vacuous; integer inputs —
+    decode positions — land at 0, which is always a valid position)."""
+    import numpy as np
+    from repro.core.ir import NodeKind
+    out = {}
+    for n in g.nodes.values():
+        if n.kind != NodeKind.MEMORY or g.in_edges(n.name):
+            continue
+        size = max(int(np.prod(n.shape)) if n.shape else 1, 1)
+        vals = (((np.arange(size) % 7) - 3) / 4.0).reshape(n.shape or ())
+        out[n.name] = vals.astype(n.dtype)
+    return out
 
 
 def _pad_axes(arr, targets: Dict[int, int]):

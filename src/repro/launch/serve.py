@@ -109,6 +109,20 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         print(f"[serve] plan registry: prefill {r['prefill']} | "
               f"decode {r['decode']} | hit_rate={r['hit_rate']} "
               f"fallbacks={r['fallbacks']} measure_s={r['measure_s']}")
+    # robustness surface (docs/robustness.md): degraded requests, failed
+    # warmup buckets and quarantined plans all say "the ladder was walked" —
+    # zero on a healthy run, and a loud launch-output line when not
+    from repro.compiler import default_cache
+    quarantined = default_cache().quarantine_entries()
+    if (stats["degraded_requests"] or stats["warmup_failed"]
+            or quarantined):
+        print(f"[serve] DEGRADED: {stats['degraded_requests']} request(s) "
+              f"served off the planned path, {stats['warmup_failed']} "
+              f"warmup bucket(s) failed, {len(quarantined)} plan(s) "
+              f"quarantined")
+        for key, q in sorted(quarantined.items()):
+            print(f"[serve]   quarantine {key[:20]}…: {q['reason']} "
+                  f"(fail #{q['fails']})")
     print("[serve] first sequence:", out[0][:16].tolist())
 
     if args.metrics:

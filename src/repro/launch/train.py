@@ -19,7 +19,7 @@ from repro.launch import mesh as mesh_mod
 from repro.train.trainer import TrainConfig, train
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", default="train_4k")
@@ -33,7 +33,13 @@ def main() -> None:
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
-    args = ap.parse_args()
+    ap.add_argument("--failover", action="store_true",
+                    help="wire the failover runtime into the loop: per-step "
+                         "heartbeat stamping + straggler pump derating")
+    ap.add_argument("--heartbeat-timeout", type=float, default=300.0,
+                    help="seconds without progress before a worker is "
+                         "considered dead (--failover)")
+    args = ap.parse_args(argv)
 
     cfg = load_arch(args.arch, smoke=args.smoke)
     shape = SHAPES[args.shape]
@@ -51,12 +57,24 @@ def main() -> None:
     tcfg = TrainConfig(n_steps=args.steps, pump_factor=pump,
                        ckpt_root=args.ckpt,
                        param_dtype="float32" if args.smoke else "bfloat16")
-    out = train(cfg, shape, optcfg, tcfg, mesh=mesh)
+    heartbeat = straggler = None
+    if args.failover:
+        from repro.runtime.failover import Heartbeat, StragglerPolicy
+        heartbeat = Heartbeat(timeout_s=args.heartbeat_timeout)
+        straggler = StragglerPolicy()
+    out = train(cfg, shape, optcfg, tcfg, mesh=mesh,
+                heartbeat=heartbeat, straggler=straggler)
     hist = out["history"]
     if hist:
         print(f"[train] done: loss {hist[0]['loss']:.4f} -> "
               f"{hist[-1]['loss']:.4f} over {args.steps} steps "
               f"(pump={out['pump']})")
+    if heartbeat is not None:
+        dead = heartbeat.dead_workers()
+        factors = straggler.pump_factors()
+        print(f"[failover] heartbeat: {len(heartbeat._step)} worker(s) "
+              f"stamped, {len(dead)} dead; straggler pump factors "
+              f"{factors}")
 
 
 if __name__ == "__main__":

@@ -28,12 +28,14 @@ module implements the *framework side* of that contract:
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import manager as ckpt
 
 
@@ -85,6 +87,28 @@ class StragglerPolicy:
         return out
 
 
+def _restore_any(ckpt_root: str, like) -> Optional[tuple]:
+    """Restore the newest checkpoint that actually restores, walking
+    candidates newest-first.  ``latest_valid`` screens manifests by hash,
+    but a checkpoint can still fail *restore* (payload corrupted in a way
+    the manifest misses, torn metadata, injected fault) — a recovery loop
+    that crashes on its own recovery data has negative value, so a failing
+    candidate is counted (``failover.ckpt_skipped``) and the next-older one
+    is tried.  Returns ``(tree, extra)`` or None when no candidate
+    restores."""
+    for s in sorted(ckpt.available_steps(ckpt_root), reverse=True):
+        path = os.path.join(ckpt_root, f"step_{s:08d}")
+        if not ckpt.verify(path):
+            obs.count("failover.ckpt_skipped", step=str(s), why="hash")
+            continue
+        try:
+            return ckpt.restore(path, like)
+        except Exception as e:  # noqa: BLE001 — corrupt payload: try older
+            obs.count("failover.ckpt_skipped", step=str(s),
+                      why=type(e).__name__)
+    return None
+
+
 def run_with_recovery(train_fn: Callable[[Any, int], Any],
                       init_state: Any,
                       n_steps: int,
@@ -96,14 +120,16 @@ def run_with_recovery(train_fn: Callable[[Any, int], Any],
     """Run ``train_fn(state, step) -> state`` with checkpoint/restart.
 
     Any exception from ``train_fn`` (including injected failures) triggers
-    restore-from-latest-valid and resumption at the checkpointed step.
+    restore-from-latest-valid and resumption at the checkpointed step; a
+    corrupt latest checkpoint falls back to the previous valid one (and
+    ultimately to a from-scratch restart) instead of crashing the loop.
     """
     state = init_state
     step = 0
     restarts = 0
-    resumed = ckpt.latest_valid(ckpt_root)
-    if resumed:
-        tree, extra = ckpt.restore(resumed, state_to_tree(state))
+    resumed = _restore_any(ckpt_root, state_to_tree(state))
+    if resumed is not None:
+        tree, extra = resumed
         state = tree_to_state(tree, state)
         step = extra["step"]
 
@@ -116,13 +142,14 @@ def run_with_recovery(train_fn: Callable[[Any, int], Any],
                           extra={"step": step})
         except Exception:  # noqa: BLE001 — any failure → restore path
             restarts += 1
+            obs.count("failover.restart")
             if restarts > max_restarts:
                 raise
-            latest = ckpt.latest_valid(ckpt_root)
-            if latest is None:
+            restored = _restore_any(ckpt_root, state_to_tree(state))
+            if restored is None:
                 state, step = init_state, 0
                 continue
-            tree, extra = ckpt.restore(latest, state_to_tree(state))
+            tree, extra = restored
             state = tree_to_state(tree, state)
             step = extra["step"]
     return state

@@ -33,6 +33,7 @@ from repro.configs.base import ModelConfig
 from repro.launch import mesh as mesh_mod
 from repro.launch.steps import StepTimer
 from repro.models import model as model_mod
+from repro.testing import faults
 
 
 @dataclasses.dataclass
@@ -47,6 +48,11 @@ class ServeConfig:
     warmup: bool = True
     # override cfg.kernel_plan for this engine ('measure' | 'direct' | None)
     kernel_plan: Optional[str] = None
+    # host-side non-finite check on each step's logits, degrading the step
+    # to the plain-jnp fallback instead of emitting garbage tokens.  Costs a
+    # device sync per token, so it is opt-in; chaos runs get it implicitly
+    # whenever fault rules are installed.
+    nan_guard: bool = False
 
 
 class Engine:
@@ -66,6 +72,16 @@ class Engine:
             lambda p, c, b: model_mod.decode_step(cfg, p, b, c))
         self._cache_factory = lambda: model_mod.init_cache(
             cfg, scfg.batch, scfg.max_len, cdt)
+        # the bottom rung of the degradation ladder: a fully compiler-free
+        # config (plain-jnp attention/ssm, no plan registry) the engine can
+        # re-run any failing step through.  Built lazily — fault-free
+        # serving never pays the extra trace/compile.
+        self._direct_cfg = dataclasses.replace(
+            cfg, kernel_plan="direct", attention_impl="xla_chunked",
+            ssm_impl="xla")
+        self._fallback_fn: Optional[Any] = None
+        self.degraded_requests = 0
+        self._req_degraded = False
         self.timer = StepTimer()
         self.warmup_s = 0.0
         self.warmup_report: List[Dict[str, Any]] = []
@@ -116,11 +132,53 @@ class Engine:
                                              self.scfg.max_len, dtype=dtype,
                                              cached=True)
             self.warmup_report = reg.warmup(reqs)
-            sp.set(plans=len(self.warmup_report))
+            # warmup is per-request isolated (PlanRegistry.warmup): a failed
+            # bucket is a record with an "error" string, not an abort — and
+            # the span says how many so launch telemetry shows partial warmup
+            sp.set(plans=len(self.warmup_report),
+                   failed=sum(1 for r in self.warmup_report if "error" in r))
         self.warmup_s += time.perf_counter() - t0
         return self.warmup_report
 
     # ------------------------------------------------------------ serving --
+    def _fallback(self):
+        """The plain-jnp bottom-rung step fn (lazily traced/compiled)."""
+        if self._fallback_fn is None:
+            obs.count("engine.fallback_build")
+            cfg = self._direct_cfg
+            self._fallback_fn = jax.jit(
+                lambda p, c, b: model_mod.decode_step(cfg, p, b, c))
+        return self._fallback_fn
+
+    def _nan_guarded(self) -> bool:
+        return self.scfg.nan_guard or faults.active()
+
+    def _run_step(self, phase: str, cache, batch):
+        """One guarded model step: the planned path, degrading to the
+        plain-jnp fallback on any failure — an exception out of the compiled
+        step, an injected ``engine.decode`` fault, or (guard on) non-finite
+        logits.  The fallback recomputes from the *pre-step* cache, so a
+        poisoned kernel cannot leak NaNs into the carried KV/SSD state.
+        Raises only if the bottom rung itself fails."""
+        try:
+            if phase == "decode":
+                faults.check("engine.decode")
+            with self.mesh:
+                logits, new_cache = self.timer.run(
+                    phase, self._decode, self.params, cache, batch)
+            if self._nan_guarded() and \
+                    not bool(jnp.isfinite(logits[:, -1]).all()):
+                raise FloatingPointError(
+                    f"non-finite logits from the planned {phase} step")
+            return logits, new_cache
+        except Exception as e:  # noqa: BLE001 — serving must not die
+            obs.count("engine.degraded", phase=phase,
+                      reason=type(e).__name__)
+            self._req_degraded = True
+            with self.mesh:
+                return self.timer.run(phase, self._fallback(), self.params,
+                                      cache, batch)
+
     def prefill(self, tokens: jax.Array, enc_out=None):
         """tokens: (B, S_prompt) — returns (cache, last_logits)."""
         cache = self._cache_factory()
@@ -130,9 +188,7 @@ class Engine:
         with obs.span("serve.prefill", cat="serve",
                       batch=int(tokens.shape[0]),
                       prompt_len=int(tokens.shape[1])):
-            with self.mesh:
-                logits, cache = self.timer.run(
-                    "prefill", self._decode, self.params, cache, batch)
+            logits, cache = self._run_step("prefill", cache, batch)
         return cache, logits[:, -1]
 
     def _sample(self, logits, key):
@@ -152,20 +208,25 @@ class Engine:
         tr = obs.get_tracer()
         if tr.enabled:
             with tr.span("serve.decode", cat="serve"):
-                with self.mesh:
-                    logits, cache = self.timer.run(
-                        "decode", self._decode, self.params, cache, batch)
+                logits, cache = self._run_step("decode", cache, batch)
         else:
-            with self.mesh:
-                logits, cache = self.timer.run(
-                    "decode", self._decode, self.params, cache, batch)
+            logits, cache = self._run_step("decode", cache, batch)
         self._step_hist.record(time.perf_counter() - t0)
         return logits, cache
 
     def generate(self, prompt_tokens: jax.Array, n_new: int,
-                 enc_out=None) -> jax.Array:
-        """Greedy/temperature generation.  Returns (B, n_new) tokens."""
+                 enc_out=None, return_logits: bool = False):
+        """Greedy/temperature generation.  Returns (B, n_new) tokens, or
+        with ``return_logits=True`` a ``(tokens, logits)`` pair where
+        ``logits`` is the fp32 (n_new, B, V) stack of the distributions each
+        returned token was sampled from (the chaos suite's parity surface).
+
+        Completion is the contract: any step failure degrades through
+        :meth:`_run_step` to the plain-jnp rung rather than raising, and a
+        request that needed any degraded step is counted in
+        ``degraded_requests`` / the ``serve.generate`` span."""
         t_start = time.perf_counter()
+        self._req_degraded = False
         with obs.span("serve.generate", cat="serve",
                       batch=int(prompt_tokens.shape[0]),
                       prompt_len=int(prompt_tokens.shape[1]),
@@ -173,6 +234,7 @@ class Engine:
             cache, last = self.prefill(prompt_tokens, enc_out)
             key = jax.random.PRNGKey(self.scfg.seed)
             toks = []
+            lgs = [last.astype(jnp.float32)]
             cur = self._sample(last, key)[:, None]
             # time-to-first-token: prefill + first sample, host-visible
             ttft = time.perf_counter() - t_start
@@ -184,11 +246,19 @@ class Engine:
                 if enc_out is not None:
                     batch["enc_out"] = enc_out
                 logits, cache = self._decode_token(cache, batch)
+                lgs.append(logits[:, -1].astype(jnp.float32))
                 key, sub = jax.random.split(key)
                 cur = self._sample(logits[:, -1], sub)[:, None]
             obs.count("serve.tokens",
                       n_new * int(prompt_tokens.shape[0]))
-        return jnp.concatenate(toks, axis=1)
+            if self._req_degraded:
+                self.degraded_requests += 1
+                obs.count("serve.degraded_request")
+                gspan.set(degraded=True)
+        out = jnp.concatenate(toks, axis=1)
+        if return_logits:
+            return out, jnp.stack(lgs[:n_new])
+        return out
 
     # ------------------------------------------------------------ reports --
     def stats(self) -> Dict[str, Any]:
@@ -198,6 +268,9 @@ class Engine:
         return {
             "warmup_s": round(self.warmup_s, 4),
             "plans_warmed": len(self.warmup_report),
+            "warmup_failed": sum(1 for r in self.warmup_report
+                                 if "error" in r),
+            "degraded_requests": self.degraded_requests,
             "phases": self.timer.stats(),
             "registry": reg.stats.as_dict() if reg is not None else None,
         }

@@ -1,0 +1,11 @@
+"""``repro.testing`` — test-only infrastructure shipped with the package.
+
+:mod:`.faults` is the deterministic fault-injection harness the chaos suite
+(``tests/test_chaos.py``, ``make chaos-smoke``) drives; production code
+threads named injection sites through the compile→serve path and this
+package decides — by seeded rule — whether a site fires.  With no rules
+installed every site is a single falsy attribute check.
+"""
+from . import faults
+
+__all__ = ["faults"]

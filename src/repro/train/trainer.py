@@ -17,7 +17,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro import optim
+from repro import obs, optim
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.pump_plan import plan_trainer_pump
 from repro.data.pipeline import DataConfig, DataIterator
@@ -96,11 +96,22 @@ def train(cfg: ModelConfig, shape: ShapeConfig,
           optcfg: optim.AdamWConfig = optim.AdamWConfig(),
           tcfg: TrainConfig = TrainConfig(),
           mesh=None, batch_override: Optional[int] = None,
-          log=print) -> Dict[str, Any]:
-    """Full driver: init → (restore) → loop → checkpoint.  Returns metrics."""
+          log=print, heartbeat=None, straggler=None) -> Dict[str, Any]:
+    """Full driver: init → (restore) → loop → checkpoint.  Returns metrics.
+
+    ``heartbeat`` (:class:`repro.runtime.failover.Heartbeat`) gets this
+    host's step stamped after every update — the liveness signal the
+    monitor side reads.  ``straggler``
+    (:class:`~repro.runtime.failover.StragglerPolicy`) observes per-step
+    wall time and derates this host's pump factor from the EWMAs; the
+    derated factor is gauged (``train.pump_derated``) and logged when it
+    moves, so a slow host is visible before it stalls the whole mesh.
+    """
     init_fn, step_fn, data, pump = make_trainer(
         cfg, shape, optcfg, tcfg, mesh, batch_override)
     state = init_fn(jax.random.PRNGKey(tcfg.seed))
+    worker = jax.process_index()
+    pump_derated = pump
 
     if tcfg.ckpt_root:
         latest = ckpt_mod.latest_valid(tcfg.ckpt_root)
@@ -112,11 +123,30 @@ def train(cfg: ModelConfig, shape: ShapeConfig,
             data.step = extra["data_step"]
             log(f"[trainer] resumed from {latest} at step {state.step}")
 
+    if straggler is not None:
+        # the policy derates from the *resolved* pump factor (the CLI may
+        # have asked for 'auto', resolved only inside make_trainer)
+        straggler.base_pump = pump
     history = []
     t_last = time.time()
+    t_step = time.time()
     while state.step < tcfg.n_steps:
         batch = next(data)
         state, metrics = step_fn(state, batch)
+        if heartbeat is not None:
+            heartbeat.stamp(worker, state.step)
+        if straggler is not None:
+            now = time.time()
+            straggler.observe(worker, now - t_step)
+            t_step = now
+            derated = straggler.pump_factors().get(worker, pump_derated)
+            if derated != pump_derated:
+                log(f"[trainer] straggler policy derated pump "
+                    f"{pump_derated} -> {derated} (worker {worker})")
+                obs.count("train.pump_derate", frm=str(pump_derated),
+                          to=str(derated))
+                pump_derated = derated
+            obs.gauge("train.pump_derated", pump_derated)
         if state.step % tcfg.log_every == 0 or state.step == tcfg.n_steps:
             dt = time.time() - t_last
             t_last = time.time()

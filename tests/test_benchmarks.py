@@ -124,6 +124,14 @@ def test_serve_bench_smoke_writes_json(bench_cache, tmp_path, capsys):
     assert oh["raw_us"] > 0 and oh["instrumented_us"] > 0
     assert oh["overhead_frac"] is not None and oh["overhead_frac"] < 0.10
 
+    # robustness row: a fault-free benchmark run must not have walked the
+    # degradation ladder — a nonzero count here means a kernel silently
+    # regressed to a fallback path and the "speedup" rows above are lies
+    rb = report["robustness"]
+    assert rb["degraded_requests"] == 0
+    assert rb["warmup_failed"] == 0
+    assert rb["quarantined_plans"] == 0
+
     # the embedded metrics snapshot is the report's flight-data: registry
     # counters + serving latency histograms must be present and non-empty
     snap = report["metrics"]

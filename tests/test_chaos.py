@@ -1,0 +1,377 @@
+"""Chaos suite: fault injection across the compile→serve path.
+
+The robustness contract (docs/robustness.md): for every injection point —
+cache IO error, corrupt plan JSON, emission failure, measurement timeout,
+NaN kernel — ``Engine.generate()`` still completes, the tokens match the
+fault-free run (logit parity ≤ 5e-6), and the expected degradation-reason
+counter is incremented.  Plus the self-healing plan-store semantics:
+quarantined plans are not re-attempted inside their backoff window,
+corruption after warmup heals on the next cold process, and concurrent
+cross-process writes merge instead of clobbering.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.compiler.registry import PlanRegistry, set_default_registry
+from repro.configs.base import load_arch
+from repro.models import model as model_mod
+from repro.serve.engine import Engine, ServeConfig
+from repro.testing import faults
+
+ARCH = "qwen3-0.6b"
+BATCH, PROMPT, NEW, MAXLEN = 2, 8, 4, 16
+PARITY = 5e-6
+
+
+def _ctr(name: str) -> int:
+    return obs.snapshot(include_views=False)["counters"].get(name, 0)
+
+
+def _fresh_engine(warmup: bool = True) -> Engine:
+    """Fresh-process simulation: cold kernel memo, fresh registry against
+    the (env-selected) persistent cache, new engine.  clear_memo matters —
+    a memo-served kernel was compiled before the fault rules existed and
+    would bypass every injection seam."""
+    from repro import compiler
+    compiler.clear_memo()
+    set_default_registry(PlanRegistry())
+    cfg = dataclasses.replace(load_arch(ARCH, smoke=True),
+                              attention_impl="pallas")
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg, params, ServeConfig(batch=BATCH, max_len=MAXLEN,
+                                           warmup=warmup))
+
+
+def _prompts(cfg) -> jax.Array:
+    return jax.random.randint(jax.random.PRNGKey(1), (BATCH, PROMPT), 0,
+                              cfg.vocab_size)
+
+
+def _serve(eng: Engine):
+    toks, lgs = eng.generate(_prompts(eng.cfg), NEW, return_logits=True)
+    return np.asarray(toks), np.asarray(lgs)
+
+
+@pytest.fixture(autouse=True)
+def _chaos_env(tmp_path, monkeypatch):
+    """Private persistent cache per test, default-registry isolation, and a
+    guaranteed-clean fault table on the way out."""
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "cache"))
+    old = set_default_registry(None)
+    yield
+    faults.clear()
+    set_default_registry(old)
+
+
+@pytest.fixture(scope="module")
+def baseline(tmp_path_factory):
+    """Fault-free reference run: (tokens, logits) every chaos case must
+    reproduce.  Module-scoped — one warmup+generate pays for all cases."""
+    cache_dir = str(tmp_path_factory.mktemp("baseline-cache"))
+    prev_env = os.environ.get("REPRO_CACHE_DIR")
+    os.environ["REPRO_CACHE_DIR"] = cache_dir
+    prev_reg = set_default_registry(None)
+    try:
+        toks, lgs = _serve(_fresh_engine())
+    finally:
+        if prev_env is None:
+            os.environ.pop("REPRO_CACHE_DIR", None)
+        else:
+            os.environ["REPRO_CACHE_DIR"] = prev_env
+        set_default_registry(prev_reg)
+    return toks, lgs
+
+
+def _assert_parity(baseline, toks, lgs):
+    base_toks, base_lgs = baseline
+    np.testing.assert_array_equal(toks, base_toks)
+    err = float(np.max(np.abs(lgs - base_lgs)))
+    assert err <= PARITY, f"logit parity {err:.2e} > {PARITY:.0e}"
+
+
+# --------------------------------------------------------- the fault matrix --
+# (site, action, rule kwargs, counter that must move) — one row per
+# injection point of the acceptance matrix; docs/robustness.md mirrors it.
+MATRIX = [
+    pytest.param("cache.load", "io_error", {}, "cache.corrupt",
+                 id="cache-io-error"),
+    pytest.param("cache.json", "truncate", {}, "cache.corrupt",
+                 id="cache-json-truncate"),
+    pytest.param("cache.json", "garbage", {}, "cache.corrupt",
+                 id="cache-json-garbage"),
+    pytest.param("emission.lower", "error", {}, "degrade.compile",
+                 id="emission-failure"),
+    pytest.param("compile.measure", "timeout", {"times": 1},
+                 "compile.measure_failed", id="measure-timeout"),
+    pytest.param("emission.exec", "nan", {},
+                 "registry.spotcheck_failed", id="nan-kernel"),
+]
+
+
+@pytest.mark.parametrize("site,action,kwargs,counter", MATRIX)
+def test_generate_completes_under_fault(baseline, tmp_path, site, action,
+                                        kwargs, counter):
+    from repro.compiler.cache import CompileCache, _default_path
+    if site == "cache.json":
+        # the mangle seam needs an existing file to corrupt; seed it with a
+        # throwaway instance so the engine's default_cache still does its
+        # first read with the rules installed
+        CompileCache(_default_path()).put("seed", {"factor": 1})
+    before = _ctr(counter)
+    injected = _ctr("faults.injected")
+    with faults.inject(faults.FaultRule(site, action, **kwargs)):
+        toks, lgs = _serve(_fresh_engine())
+    _assert_parity(baseline, toks, lgs)
+    assert _ctr("faults.injected") > injected, "the fault never fired"
+    assert _ctr(counter) > before, \
+        f"{counter} did not move under a {site}/{action} fault"
+
+
+def test_nan_kernel_is_quarantined_and_degraded(baseline, tmp_path):
+    """The NaN row in detail: plan-time spot-check catches the poisoned
+    pallas kernel, quarantines that rung, and the degraded jax recompile
+    serves the request — degradation happens at *plan* time, so the request
+    itself is never degraded mid-flight."""
+    from repro.compiler import default_cache
+    q_before = _ctr("cache.quarantine")
+    skip_before = _ctr("cache.quarantine_skip")
+    with faults.inject(faults.FaultRule("emission.exec", "nan")):
+        eng = _fresh_engine()
+        toks, lgs = _serve(eng)
+    _assert_parity(baseline, toks, lgs)
+    assert _ctr("cache.quarantine") > q_before
+    # the degraded recompile hit the quarantine gate instead of re-paying
+    # the known-bad pallas rung
+    assert _ctr("cache.quarantine_skip") > skip_before
+    entries = default_cache().quarantine_entries()
+    assert entries and all(k.endswith(":pallas") for k in entries)
+    assert all(e["reason"] == "nonfinite" for e in entries.values())
+    # plan-time healing: the request was served off a good plan, not off
+    # the engine's mid-request fallback
+    assert eng.degraded_requests == 0
+
+
+def test_midrequest_decode_fault_degrades_one_step(baseline, tmp_path):
+    """An exception out of a single decode step re-runs that step through
+    the plain-jnp bottom rung from the pre-step cache: same tokens, one
+    degraded request counted."""
+    before = _ctr("engine.degraded")
+    served = _ctr("serve.degraded_request")
+    rule = faults.FaultRule("engine.decode", "error", after=1, times=1)
+    with faults.inject(rule):
+        eng = _fresh_engine()
+        toks, lgs = _serve(eng)
+    assert rule.fired == 1
+    _assert_parity(baseline, toks, lgs)
+    assert eng.degraded_requests == 1
+    assert eng.stats()["degraded_requests"] == 1
+    assert _ctr("engine.degraded") > before
+    assert _ctr("serve.degraded_request") > served
+
+
+def test_registry_exec_fault_falls_back_one_rung(baseline, tmp_path):
+    """A plan that starts failing on the serving path (after installation)
+    degrades exactly one rung: the registry wrapper's reference fallback,
+    counted per phase — not the engine's whole-step fallback."""
+    before = _ctr("engine.degraded")
+    with faults.inject(faults.FaultRule("registry.exec", "error", times=1)):
+        eng = _fresh_engine()
+        toks, lgs = _serve(eng)
+    _assert_parity(baseline, toks, lgs)
+    reg = eng._registry()
+    assert reg.stats.fallbacks >= 1
+    # one-rung contract: the wrapper absorbed it before the engine could
+    assert _ctr("engine.degraded") == before
+    assert eng.degraded_requests == 0
+
+
+# ------------------------------------------------------ quarantine/backoff --
+def test_quarantine_backoff_window_respected(tmp_path):
+    from repro import compiler
+    from repro.compiler.cache import CompileCache, QuarantinePolicy
+    from repro.core.autopump import BUILDERS
+
+    compiler.clear_memo()
+    pol = QuarantinePolicy(base_s=10.0, cap_s=40.0, budget=3)
+    # exponential backoff, capped once the budget is spent
+    assert [pol.window_s(n) for n in (1, 2, 3, 9)] == [10.0, 20.0, 40.0, 40.0]
+
+    cache = CompileCache(tmp_path / "c.json", quarantine=pol)
+    g, _ = BUILDERS["vecadd"](64, vector_width=8)
+    args = dict(factor=2, backend="pallas", cache=cache, memoize=False)
+    key = compiler.compile(g, **args).report.cache_key
+    qkey = f"{key}:pallas"
+
+    cache.record_failure(qkey, "nonfinite")
+    # inside the window the rung is not re-attempted
+    skip = _ctr("cache.quarantine_skip")
+    with pytest.raises(compiler.PlanQuarantined):
+        compiler.compile(g, **args)
+    assert _ctr("cache.quarantine_skip") > skip
+    # compile_degraded steps past it without re-recording the failure
+    kern = compiler.compile_degraded(g, **args)
+    assert kern.backend == "jax"
+    assert cache.quarantine_entries()[qkey]["fails"] == 1
+    assert any("degraded compile" in w for w in kern.report.warnings)
+
+    # the ledger is persistent: a fresh store (new process) sees the entry
+    assert CompileCache(tmp_path / "c.json",
+                        quarantine=pol).quarantine_entries()[qkey]["fails"] == 1
+
+    # an expired window requalifies the rung but keeps the failure count
+    cache.record_failure(qkey, "nonfinite", now=time.time() - 3600.0)
+    assert cache.quarantined(qkey) is None
+    assert compiler.compile(g, **args).backend == "pallas"
+    assert cache.quarantine_entries()[qkey]["fails"] == 2
+
+    # a recorded success clears the entry entirely
+    cache.record_success(qkey)
+    assert qkey not in cache.quarantine_entries()
+    assert qkey not in CompileCache(tmp_path / "c.json").quarantine_entries()
+
+
+# ------------------------------------------------------- self-healing store --
+def test_plan_store_heals_after_corruption_post_warmup(tmp_path):
+    """Corrupting the store *after* a warm run must cost exactly one cold
+    re-measure in the next process — never an error on the serving path —
+    and the next save rewrites a valid file."""
+    from repro.compiler import cache as cache_mod
+
+    eng = _fresh_engine()
+    first = _serve(eng)
+    path = cache_mod._default_path()
+    assert path.exists() and json.loads(path.read_text())["entries"]
+
+    path.write_text("{not json!")
+    corrupt = _ctr("cache.corrupt")
+    # fresh process: cold memo, fresh CompileCache instance for the path
+    cache_mod._DEFAULT_CACHES.clear()
+    toks, lgs = _serve(_fresh_engine())
+    np.testing.assert_array_equal(toks, first[0])
+    assert float(np.max(np.abs(lgs - first[1]))) <= PARITY
+    assert _ctr("cache.corrupt") > corrupt
+    healed = json.loads(path.read_text())
+    assert healed["version"] == 2 and healed["entries"]
+
+
+def test_concurrent_cross_process_writes_merge(tmp_path):
+    """Two processes writing the same store under the file lock merge their
+    entries; last-writer-wins clobbering would drop one side's keys."""
+    path = tmp_path / "shared" / "compile_cache.json"
+    script = (
+        "import sys\n"
+        "from repro.compiler.cache import CompileCache\n"
+        "c = CompileCache(sys.argv[1])\n"
+        "for i in range(20):\n"
+        "    c.put(f'{sys.argv[2]}-{i}', {'factor': 1})\n"
+    )
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ,
+               PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH",
+                                                            ""))
+    procs = [subprocess.Popen([sys.executable, "-c", script, str(path), tag],
+                              env=env, stderr=subprocess.PIPE)
+             for tag in ("a", "b")]
+    for p in procs:
+        _, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err.decode()
+    from repro.compiler.cache import CompileCache
+    store = CompileCache(path)
+    missing = [f"{tag}-{i}" for tag in ("a", "b") for i in range(20)
+               if f"{tag}-{i}" not in store]
+    assert not missing, f"lost under concurrent write: {missing}"
+
+
+# ------------------------------------------------------------ warmup/engine --
+def test_warmup_isolates_per_request_failures(tmp_path, monkeypatch):
+    """One unplannable bucket yields a failure record with the error string
+    — not an aborted grid — and the engine still serves afterwards."""
+    from repro import compiler
+
+    eng = _fresh_engine(warmup=False)
+    failed = _ctr("registry.warmup_failed")
+
+    def boom(*a, **kw):
+        raise RuntimeError("injected warmup failure")
+
+    with monkeypatch.context() as m:
+        m.setattr(compiler, "compile_degraded", boom)
+        report = eng.warmup()
+    assert report and all("error" in r for r in report)
+    assert all("injected warmup failure" in r["error"] for r in report)
+    assert eng.stats()["warmup_failed"] == len(report)
+    assert _ctr("registry.warmup_failed") > failed
+    # the patch is lifted: serving compiles its plans on demand and works
+    out = eng.generate(_prompts(eng.cfg), 2)
+    assert out.shape == (BATCH, 2)
+
+
+# ------------------------------------------------------------- train rungs --
+def test_recovery_skips_corrupt_latest_checkpoint(tmp_path):
+    """run_with_recovery's except path: a latest checkpoint whose payload
+    fails hash verification is skipped (counted) and the previous valid one
+    restores — the recovery loop never crashes on its own recovery data."""
+    from repro.checkpoint import manager as ckpt
+    from repro.runtime import failover
+
+    root = str(tmp_path / "ckpt")
+    calls = {"fail_at": 10}
+
+    def train_fn(state, step):
+        if step == calls["fail_at"]:
+            calls["fail_at"] = None
+            # corrupt the newest checkpoint, then die: recovery must fall
+            # back to the previous valid one
+            shard = os.path.join(root, "step_00000010", "shard_00000.npz")
+            with open(shard, "r+b") as f:
+                f.seek(10)
+                f.write(b"\xde\xad\xbe\xef")
+            raise failover.FailureInjected("simulated node loss")
+        return {"x": state["x"] + 1.0}
+
+    skipped = _ctr("failover.ckpt_skipped")
+    final = failover.run_with_recovery(
+        train_fn, {"x": jnp.zeros(())}, n_steps=12, ckpt_root=root,
+        ckpt_every=5)
+    assert float(final["x"]) == 12.0       # resumed from step 5, not 10
+    assert _ctr("failover.ckpt_skipped") > skipped
+    # the re-run re-saved step 10: the corrupt checkpoint healed in place
+    assert ckpt.verify(os.path.join(root, "step_00000010"))
+
+
+def test_trainer_wires_heartbeat_and_straggler(tmp_path):
+    """The launch-path failover wiring: train() stamps the heartbeat every
+    step and feeds step times to the straggler policy, gauging the derated
+    pump factor."""
+    from repro import optim
+    from repro.configs.base import ModelConfig, ShapeConfig
+    from repro.runtime.failover import Heartbeat, StragglerPolicy
+    from repro.train.trainer import TrainConfig, train
+
+    tiny = ModelConfig("tiny", "dense", 2, 32, 4, 2, 64, 64, dtype="float32")
+    shape = ShapeConfig("t", 32, 8, "train")
+    hb = Heartbeat(timeout_s=60.0)
+    pol = StragglerPolicy()
+    out = train(tiny, shape, optim.AdamWConfig(lr=1e-3, warmup_steps=1,
+                                               total_steps=5),
+                TrainConfig(n_steps=5, log_every=5),
+                heartbeat=hb, straggler=pol, log=lambda *a, **k: None)
+    worker = jax.process_index()
+    assert hb._step[worker] == 5           # stamped through the last step
+    assert hb.dead_workers() == []
+    assert worker in pol._t                # EWMAs observed
+    # the policy derates from the resolved pump, and the gauge is published
+    assert pol.base_pump == out["pump"]
+    snap = obs.snapshot(include_views=False)
+    assert snap["gauges"].get("train.pump_derated") == out["pump"]
