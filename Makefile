@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-diff bench bench-compiler bench-smoke \
-	bench-serve bench-serve-smoke trace-smoke chaos-smoke
+	bench-serve bench-serve-smoke bench-load-smoke trace-smoke chaos-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -41,6 +41,15 @@ bench-serve:
 
 bench-serve-smoke:
 	$(PY) -m benchmarks.run --mode serve --smoke
+
+# throughput-under-load smoke: a tiny synthetic arrival trace through the
+# continuous-batching scheduler (docs/serving.md) — slot occupancy, queue
+# waits, per-request TTFT and tok/s from the launcher.  The BENCH_serve
+# row for the same protocol ("load", schema 3) is asserted fail-loud by
+# tests/test_benchmarks.py, like the decode rows.
+bench-load-smoke:
+	$(PY) -m repro.launch.serve --arch qwen3-0.6b --smoke --batch 2 \
+		--prompt-len 8 --new 4 --arrival-rate 0.5 --requests 6
 
 # chaos smoke: the fault-injection matrix (docs/robustness.md) — every
 # injection point on the compile→serve path must degrade one ladder rung

@@ -76,6 +76,16 @@ class BucketPolicy:
     def bucket_batch(self, n: int) -> int:
         return max(self.batch_min, _next_pow2(max(n, 1)))
 
+    def bucket_pos(self, pos) -> int:
+        """Decode pos bucket: the seq bucket covering slots ``0..pos``.
+
+        Accepts a scalar or a per-slot ``(B,)`` vector of in-flight
+        positions (continuous batching) — a ragged batch buckets on its
+        *furthest* row, so every lane's prefix fits one shared plan and
+        shorter lanes just mask more."""
+        import numpy as _np
+        return self.bucket_seq(int(_np.max(_np.asarray(pos))) + 1)
+
     def bucket_group(self, n: int) -> int:
         """Ragged group-size bucket: 0, or a pow2 multiple of row_block."""
         if n <= 0:
@@ -521,11 +531,16 @@ class PlanRegistry:
         b, h, d = q.shape
         hkv, t = k_cache.shape[1], k_cache.shape[2]
         try:
+            if jnp.ndim(pos):
+                # per-slot (B,) positions: a ragged in-flight batch from the
+                # continuous-batching scheduler.  Counted so the serving
+                # telemetry shows how much decode traffic is ragged.
+                obs.count("registry.decode.ragged_pos")
             concrete = not isinstance(pos, jax.core.Tracer)
-            # per-row (B,) positions bucket on the furthest row: every row's
-            # own mask still cuts its prefix, shorter rows just mask more
-            t_req = min(int(jnp.max(jnp.asarray(pos))) + 1, t) if concrete \
-                else t
+            # per-row (B,) positions bucket on the furthest row
+            # (BucketPolicy.bucket_pos): every row's own mask still cuts
+            # its prefix, shorter rows just mask more
+            t_req = min(self.policy.bucket_pos(pos), t) if concrete else t
             args, kwargs, (bb, tb) = self.decode_request(
                 b=b, h=h, hkv=hkv, t=t_req, d=d, dtype=str(q.dtype), bkv=bkv)
             kern = self.kernel("decode_attention", args, kwargs)

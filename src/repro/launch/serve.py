@@ -3,6 +3,14 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --batch 4 --prompt-len 16 --new 32
 
+Traffic-shaped mode: ``--arrival-rate R`` switches from one batched
+``generate`` call to the continuous-batching scheduler — a synthetic
+arrival trace (geometric inter-arrival gaps at rate R, ``--requests N``
+requests) drains through ``Engine.serve_stream`` with ``--max-slots``
+decode lanes (default ``--batch``, the warmed plan bucket), printing
+tokens/s, slot occupancy, queue waits and per-request TTFT.  See
+docs/serving.md "Continuous batching".
+
 Observability: ``--trace out.json`` records a Chrome-trace of the whole run
 (warmup → prefill → per-token decode; open at https://ui.perfetto.dev),
 ``--metrics`` prints the unified metrics snapshot (plan-registry hit rates,
@@ -41,6 +49,16 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="override cfg.kernel_plan (measure|direct)")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the plan-registry bucket-grid warmup")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    metavar="R",
+                    help="traffic-shaped mode: drain a synthetic arrival "
+                         "trace (geometric gaps at rate R in (0,1]) through "
+                         "the continuous-batching scheduler")
+    ap.add_argument("--max-slots", type=int, default=None,
+                    help="decode lanes for --arrival-rate mode "
+                         "(default: --batch, the warmed plan bucket)")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="requests in the --arrival-rate trace")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Chrome-trace JSON of the run to PATH")
     ap.add_argument("--metrics", action="store_true",
@@ -67,41 +85,78 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                        temperature=args.temperature,
                        warmup=not args.no_warmup)
     eng = Engine(cfg, params, scfg)
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    enc_out = None
-    if cfg.family == "encdec":
-        from repro.models import encdec
-        frames = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
-        enc_out = encdec.encode(cfg, params, frames)
-
     prof = (obs.profile("serve.generate", logdir=args.profile)
             if args.profile else contextlib.nullcontext())
-    t0 = time.time()
-    with prof:
-        out = eng.generate(prompts, args.new, enc_out=enc_out)
-    dt = time.time() - t0
+
+    if args.arrival_rate is not None:
+        # traffic-shaped mode: synthetic arrivals through the scheduler
+        if cfg.family == "encdec":
+            ap.error("--arrival-rate mode needs a decoder cache "
+                     "(encdec archs are not supported by the scheduler)")
+        from repro.serve import scheduler as sched_mod
+        reqs = sched_mod.synthetic_workload(
+            args.requests, seed=1,
+            prompt_lens=(max(1, args.prompt_len // 2), args.prompt_len),
+            new_tokens=(args.new,), arrival_rate=args.arrival_rate,
+            vocab=cfg.vocab_size)
+        occ = []
+        t0 = time.time()
+        with prof:
+            results = eng.serve_stream(
+                reqs, max_slots=args.max_slots,
+                step_hook=lambda s: occ.append(s["occupancy"]))
+        dt = time.time() - t0
+        total_new = sum(r.n_new for r in reqs)
+        ttft = sorted(r.ttft_s for r in results)
+        waits = [r.queue_wait_steps for r in results]
+        n_deg = sum(1 for r in results if r.degraded)
+        print(f"[serve] streamed {len(results)}/{len(reqs)} requests "
+              f"({total_new} new tokens) in {dt:.2f}s wall "
+              f"— {total_new / dt:.1f} tok/s at rate "
+              f"{args.arrival_rate}")
+        print(f"[serve] slots: peak occupancy {max(occ, default=0)}/"
+              f"{args.max_slots or args.batch} over {len(occ)} steps; "
+              f"queue wait: max {max(waits)} step(s); "
+              f"ttft p50 {ttft[len(ttft) // 2] * 1e3:.1f}ms")
+        if n_deg:
+            print(f"[serve] DEGRADED: {n_deg} request(s) re-served off "
+                  f"the planned path")
+        out = None
+    else:
+        prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                     (args.batch, args.prompt_len), 0,
+                                     cfg.vocab_size)
+        enc_out = None
+        if cfg.family == "encdec":
+            from repro.models import encdec
+            frames = jax.random.normal(
+                jax.random.PRNGKey(2),
+                (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+            enc_out = encdec.encode(cfg, params, frames)
+        t0 = time.time()
+        with prof:
+            out = eng.generate(prompts, args.new, enc_out=enc_out)
+        dt = time.time() - t0
+
     stats = eng.stats()
     dec = stats["phases"].get("decode", {})
     pre = stats["phases"].get("prefill", {})
     steady = dec.get("steady_mean_s")
-    # steady-state tok/s excludes warmup + compile (first prefill/decode):
-    # measured-pump wins are a steady-state property, and one cold compile
-    # can be 1000x a decode step
-    tps = args.batch / steady if steady else float("nan")
-    print(f"[serve] generated {out.shape} in {dt:.2f}s wall")
-    print(f"[serve] warmup: {stats['warmup_s']:.2f}s "
-          f"({stats['plans_warmed']} plans pre-measured); "
-          f"compile: prefill {pre.get('compile_s', 0):.2f}s, "
-          f"decode {dec.get('compile_s', 0):.2f}s")
-    for line in obs.format_phases(stats["phases"]).splitlines():
-        print(f"[serve] {line}")
-    print(f"[serve] steady-state decode: "
-          f"{(steady or float('nan')) * 1e3:.2f} ms/step mean "
-          f"({tps:.1f} tok/s)")
+    if out is not None:
+        # steady-state tok/s excludes warmup + compile (first prefill/
+        # decode): measured-pump wins are a steady-state property, and one
+        # cold compile can be 1000x a decode step
+        tps = args.batch / steady if steady else float("nan")
+        print(f"[serve] generated {out.shape} in {dt:.2f}s wall")
+        print(f"[serve] warmup: {stats['warmup_s']:.2f}s "
+              f"({stats['plans_warmed']} plans pre-measured); "
+              f"compile: prefill {pre.get('compile_s', 0):.2f}s, "
+              f"decode {dec.get('compile_s', 0):.2f}s")
+        for line in obs.format_phases(stats["phases"]).splitlines():
+            print(f"[serve] {line}")
+        print(f"[serve] steady-state decode: "
+              f"{(steady or float('nan')) * 1e3:.2f} ms/step mean "
+              f"({tps:.1f} tok/s)")
     if stats["registry"] is not None:
         # prefill vs decode bucket split: a cold decode bucket (misses > 0
         # after warmup) must be visible at a glance, not buried in a total
@@ -123,7 +178,12 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         for key, q in sorted(quarantined.items()):
             print(f"[serve]   quarantine {key[:20]}…: {q['reason']} "
                   f"(fail #{q['fails']})")
-    print("[serve] first sequence:", out[0][:16].tolist())
+    if out is not None:
+        print("[serve] first sequence:", out[0][:16].tolist())
+    else:
+        first = min(results, key=lambda r: r.rid)
+        print("[serve] first request tokens:",
+              [int(t) for t in first.tokens[:16]])
 
     if args.metrics:
         for line in obs.format_snapshot(obs.snapshot()).splitlines():

@@ -18,6 +18,15 @@ registry buckets the attended prefix on pos and replays the measured pump
 plan — while the plain-jnp O(T) softmax stays as the ``'direct'``
 differential reference.  MLA caches the *compressed* c_kv + rope key
 (576 B/token for deepseek-v3) and uses the absorbed-matmul decode path.
+
+Cache positions come in two shapes.  A scalar ``pos`` is the classic
+one-batch-at-a-time engine: every row is at the same depth.  A **per-slot**
+``pos`` vector ``(B,)`` is the continuous-batching engine
+(:mod:`repro.serve.scheduler`): each cache row is an independent decode
+lane at its own depth, so the single-token write mask, the KV validity
+mask and the rope positions are all per-row.  The vector form is
+decode-only (S == 1) — slot prefill always runs on a fresh scalar-pos
+cache and is scattered into its lane afterwards.
 """
 from __future__ import annotations
 
@@ -31,6 +40,23 @@ from . import layers
 from .layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
 
 NEG_INF = -1e30
+
+
+def _rope_positions(positions):
+    """Broadcast shape for ``apply_rope`` over (B, H, S, D) heads: accepts
+    the classic per-step ``(S,)`` vector or per-slot ``(B, S)`` ragged
+    positions (continuous batching — each batch row at its own depth)."""
+    return positions[None, :] if positions.ndim == 1 \
+        else positions[:, None, :]
+
+
+def _kv_valid_mask(length: int, pos, s: int):
+    """Valid-slot mask for a cache of ``length`` after writing ``s`` tokens
+    at ``pos``: ``(length,)`` for a scalar pos, ``(B, length)`` per-slot."""
+    idx = jnp.arange(length)
+    if jnp.ndim(pos):
+        return idx[None, :] < (pos[:, None] + s)
+    return idx < (pos + s)
 
 
 def _flash_kernel(cfg, q, k, v, *, causal, interpret=True):
@@ -159,10 +185,9 @@ def gqa_apply(p, cfg, x, *, positions, causal=True, cache=None,
         q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
         k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
     if kv_input is None:  # self-attention: rope
-        q = apply_rope(q.swapaxes(1, 2), positions[None, :], cfg.rope_theta
-                       ).swapaxes(1, 2)
-        k = apply_rope(k.swapaxes(1, 2), positions[None, :],
-                       cfg.rope_theta).swapaxes(1, 2)
+        rp = _rope_positions(positions)
+        q = apply_rope(q.swapaxes(1, 2), rp, cfg.rope_theta).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), rp, cfg.rope_theta).swapaxes(1, 2)
 
     q = q.swapaxes(1, 2)   # (B, H, S, hd)
     k = k.swapaxes(1, 2)
@@ -177,18 +202,26 @@ def gqa_apply(p, cfg, x, *, positions, causal=True, cache=None,
             # sequence-sharded) cache, so GSPMD keeps it shard-local —
             # dynamic_update_slice at a traced offset forced one cache
             # shard through collectives per layer per token
-            # (EXPERIMENTS.md §Perf E1).
-            tmask = (jnp.arange(cache["k"].shape[2]) == pos)[None, None, :,
-                                                             None]
+            # (EXPERIMENTS.md §Perf E1).  A per-slot pos vector makes the
+            # mask per-row: each decode lane writes at its own depth.
+            idx = jnp.arange(cache["k"].shape[2])
+            tmask = ((idx[None, :] == pos[:, None])[:, None, :, None]
+                     if jnp.ndim(pos)
+                     else (idx == pos)[None, None, :, None])
             kc = jnp.where(tmask, k.astype(cache["k"].dtype), cache["k"])
             vc = jnp.where(tmask, v.astype(cache["v"].dtype), cache["v"])
         else:
+            if jnp.ndim(pos):
+                raise ValueError(
+                    "per-slot cache positions are decode-only (S == 1): "
+                    "prefill runs on a fresh scalar-pos cache and is "
+                    "scattered into its slot (serve.scheduler.insert_rows)")
             kc = jax.lax.dynamic_update_slice(
                 cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
             vc = jax.lax.dynamic_update_slice(
                 cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
         new_cache = {"k": kc, "v": vc, "pos": pos + s}
-        kv_mask = jnp.arange(kc.shape[2]) < (pos + s)
+        kv_mask = _kv_valid_mask(kc.shape[2], pos, s)
         if s == 1:
             if cfg.attention_impl == "pallas" and cfg.kernel_plan == "measure":
                 # kernelized decode: the plan registry buckets the attended
@@ -233,11 +266,13 @@ def gqa_apply(p, cfg, x, *, positions, causal=True, cache=None,
     return dense(p["wo"], out), new_cache
 
 
-def gqa_cache_init(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+def gqa_cache_init(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   per_slot_pos: bool = False):
     hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    pos_shape = (batch,) if per_slot_pos else ()
     return {"k": jnp.zeros((batch, hkv, max_len, hd), dtype),
             "v": jnp.zeros((batch, hkv, max_len, hd), dtype),
-            "pos": jnp.zeros((), jnp.int32)}
+            "pos": jnp.zeros(pos_shape, jnp.int32)}
 
 
 # --------------------------------------------------------------- MLA module
@@ -286,18 +321,24 @@ def mla_apply(p, cfg, x, *, positions, causal=True, cache=None,
     scale = (dn + dr) ** -0.5
 
     q_nope, q_rope = _mla_q(p, cfg, x)
-    q_rope = apply_rope(q_rope.swapaxes(1, 2), positions[None, :],
+    rp = _rope_positions(positions)
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), rp,
                         cfg.rope_theta).swapaxes(1, 2)
 
     kv_a = dense(p["wkv_a"], x)
     c_kv = rmsnorm(p["kv_norm"], kv_a[..., :kvr], cfg.norm_eps)  # (B,S,kvr)
     k_rope = apply_rope(kv_a[..., None, kvr:].swapaxes(1, 2),
-                        positions[None, :], cfg.rope_theta).swapaxes(1, 2)
+                        rp, cfg.rope_theta).swapaxes(1, 2)
     # k_rope: (B, S, 1, dr) shared over heads
 
     if cache is not None and s > 1:
         # prefill: write the compressed cache, attend over current tokens
         pos = cache["pos"]
+        if jnp.ndim(pos):
+            raise ValueError(
+                "per-slot cache positions are decode-only (S == 1): "
+                "prefill runs on a fresh scalar-pos cache and is "
+                "scattered into its slot (serve.scheduler.insert_rows)")
         ckv_c = jax.lax.dynamic_update_slice(
             cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
         krope_c = jax.lax.dynamic_update_slice(
@@ -331,14 +372,24 @@ def mla_apply(p, cfg, x, *, positions, causal=True, cache=None,
 
     if cache is not None:
         pos = cache["pos"]
-        ckv_c = jax.lax.dynamic_update_slice(
-            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
-        krope_c = jax.lax.dynamic_update_slice(
-            cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype),
-            (0, pos, 0))
+        if jnp.ndim(pos):
+            # per-slot decode lanes: mask-based write at each row's depth
+            wm = (jnp.arange(cache["c_kv"].shape[1])[None, :]
+                  == pos[:, None])[:, :, None]            # (B, T, 1)
+            ckv_c = jnp.where(wm, c_kv.astype(cache["c_kv"].dtype),
+                              cache["c_kv"])
+            krope_c = jnp.where(
+                wm, k_rope[:, :, 0].astype(cache["k_rope"].dtype),
+                cache["k_rope"])
+        else:
+            ckv_c = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
+            krope_c = jax.lax.dynamic_update_slice(
+                cache["k_rope"],
+                k_rope[:, :, 0].astype(cache["k_rope"].dtype), (0, pos, 0))
         new_cache = {"c_kv": ckv_c, "k_rope": krope_c, "pos": pos + s}
         t = ckv_c.shape[1]
-        kv_mask = jnp.arange(t) < (pos + s)
+        kv_mask = _kv_valid_mask(t, pos, s)
         # absorbed decode: w_uk (kvr, h, dn), w_uv (kvr, h, dv).
         # All cache-touching einsums run on the NATIVE (bf16) cache with
         # fp32 accumulation (preferred_element_type) — materializing an
@@ -352,7 +403,8 @@ def mla_apply(p, cfg, x, *, positions, causal=True, cache=None,
                         preferred_element_type=jnp.float32)
         sc += jnp.einsum("bhr,btr->bht", q_rope[:, 0].astype(krope_c.dtype),
                          krope_c, preferred_element_type=jnp.float32)
-        sc = jnp.where(kv_mask[None, None, :], sc * scale, NEG_INF)
+        sc = jnp.where(kv_mask[:, None, :] if kv_mask.ndim == 2
+                       else kv_mask[None, None, :], sc * scale, NEG_INF)
         attn = jax.nn.softmax(sc, axis=-1)
         out_c = jnp.einsum("bht,btk->bhk", attn.astype(ckv_c.dtype), ckv_c,
                            preferred_element_type=jnp.float32)
@@ -377,8 +429,10 @@ def mla_apply(p, cfg, x, *, positions, causal=True, cache=None,
     return dense(p["wo"], out), None
 
 
-def mla_cache_init(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+def mla_cache_init(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   per_slot_pos: bool = False):
     m = cfg.mla
+    pos_shape = (batch,) if per_slot_pos else ()
     return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
             "k_rope": jnp.zeros((batch, max_len, m.rope_head_dim), dtype),
-            "pos": jnp.zeros((), jnp.int32)}
+            "pos": jnp.zeros(pos_shape, jnp.int32)}

@@ -43,7 +43,14 @@ def forward(cfg, params, batch, *, last_only=False):
     return mod.forward(cfg, params, batch["tokens"], last_only=last_only)
 
 
-def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+               per_slot_pos: bool = False):
+    if per_slot_pos and cfg.family == "encdec":
+        raise ValueError("per-slot cache positions (continuous batching) "
+                         "are not supported for the encdec family")
+    if per_slot_pos:
+        return _mod(cfg).init_cache(cfg, batch, max_len, dtype,
+                                    per_slot_pos=True)
     return _mod(cfg).init_cache(cfg, batch, max_len, dtype)
 
 

@@ -48,8 +48,10 @@ def loss_fn(cfg, params, batch):
                       "input_embeds": embeds})
 
 
-def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
-    return transformer.init_cache(cfg, batch, max_len, dtype)
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+               per_slot_pos: bool = False):
+    return transformer.init_cache(cfg, batch, max_len, dtype,
+                                  per_slot_pos=per_slot_pos)
 
 
 def decode_step(cfg, params, tokens, cache):

@@ -222,13 +222,16 @@ def mamba2_apply(p, cfg, x, *, cache=None, interpret=True):
     return dense(p["out_proj"], y), new_cache
 
 
-def mamba2_cache_init(cfg, batch: int, dtype=jnp.bfloat16):
+def mamba2_cache_init(cfg, batch: int, dtype=jnp.bfloat16,
+                      per_slot_pos: bool = False):
     s = cfg.ssm
     d_in = s.expand * cfg.d_model
     n_heads = d_in // s.head_dim
     conv_dim = d_in + 2 * s.n_groups * s.state_dim
+    # the recurrent step itself is position-free (state + conv tail carry
+    # all history), so per-slot mode only changes the pos bookkeeping leaf
     return {
         "state": jnp.zeros((batch, n_heads, s.state_dim, s.head_dim), jnp.float32),
         "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,) if per_slot_pos else (), jnp.int32),
     }

@@ -264,13 +264,20 @@ def loss_fn(cfg, params, batch):
 
 
 # ------------------------------------------------------------------ decode --
-def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+               per_slot_pos: bool = False):
+    """``per_slot_pos=True`` builds the continuous-batching cache: the
+    ``pos`` leaf is a ``(batch,)`` vector so each cache row is an
+    independent decode lane (see :mod:`repro.serve.scheduler`)."""
     def one(kind):
         if kind == "mamba":
-            return ssm_mod.mamba2_cache_init(cfg, batch, dtype)
+            return ssm_mod.mamba2_cache_init(cfg, batch, dtype,
+                                             per_slot_pos=per_slot_pos)
         if cfg.mla:
-            return attn_mod.mla_cache_init(cfg, batch, max_len, dtype)
-        return attn_mod.gqa_cache_init(cfg, batch, max_len, dtype)
+            return attn_mod.mla_cache_init(cfg, batch, max_len, dtype,
+                                           per_slot_pos=per_slot_pos)
+        return attn_mod.gqa_cache_init(cfg, batch, max_len, dtype,
+                                       per_slot_pos=per_slot_pos)
 
     caches = {}
     for name, kind, n in _segments(cfg):
@@ -358,11 +365,19 @@ def plan_requests(cfg, batch: int, max_len: int, *, dtype=None, policy=None,
 
 
 def decode_step(cfg, params, tokens, cache):
-    """tokens: (B, 1) -> (logits (B, 1, V), new_cache)."""
+    """tokens: (B, 1) -> (logits (B, 1, V), new_cache).
+
+    Works for both cache layouts: a scalar per-layer ``pos`` gives the
+    classic ``(S,)`` positions vector; a per-slot ``(B,)`` pos gives
+    ``(B, S)`` ragged positions — ``pos.ndim`` is static, so each layout
+    traces its own specialization of the same jitted callable."""
     x = embed(params["embed"], tokens, cfg.activation_dtype)
     seg0 = _segments(cfg)[0][0]
     pos = cache[seg0]["pos"][0]          # caches are stacked over layers
-    positions = pos[None] + jnp.arange(tokens.shape[1])
+    if pos.ndim:                         # per-slot lanes: (B,) -> (B, S)
+        positions = pos[:, None] + jnp.arange(tokens.shape[1])[None, :]
+    else:
+        positions = pos[None] + jnp.arange(tokens.shape[1])
     x, _, new_caches = _backbone(cfg, params, x, positions, caches=cache)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = (unembed(params["embed"], x) if cfg.tie_embeddings

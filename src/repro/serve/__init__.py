@@ -1,1 +1,1 @@
-from . import engine
+from . import engine, scheduler

@@ -70,8 +70,8 @@ class Engine:
         cdt = jnp.dtype(scfg.cache_dtype)
         self._decode = jax.jit(
             lambda p, c, b: model_mod.decode_step(cfg, p, b, c))
-        self._cache_factory = lambda: model_mod.init_cache(
-            cfg, scfg.batch, scfg.max_len, cdt)
+        self._cache_factory = lambda batch=None: model_mod.init_cache(
+            cfg, batch or scfg.batch, scfg.max_len, cdt)
         # the bottom rung of the degradation ladder: a fully compiler-free
         # config (plain-jnp attention/ssm, no plan registry) the engine can
         # re-run any failing step through.  Built lazily — fault-free
@@ -163,6 +163,8 @@ class Engine:
         try:
             if phase == "decode":
                 faults.check("engine.decode")
+            elif phase == "prefill":
+                faults.check("engine.prefill")
             with self.mesh:
                 logits, new_cache = self.timer.run(
                     phase, self._decode, self.params, cache, batch)
@@ -181,7 +183,7 @@ class Engine:
 
     def prefill(self, tokens: jax.Array, enc_out=None):
         """tokens: (B, S_prompt) — returns (cache, last_logits)."""
-        cache = self._cache_factory()
+        cache = self._cache_factory(int(tokens.shape[0]))
         batch = {"tokens": tokens}
         if enc_out is not None:
             batch["enc_out"] = enc_out
@@ -259,6 +261,28 @@ class Engine:
         if return_logits:
             return out, jnp.stack(lgs[:n_new])
         return out
+
+    # -------------------------------------------------- continuous batching --
+    def serve_stream(self, requests, *, max_slots: Optional[int] = None,
+                     collect_logits: bool = False, step_hook=None):
+        """Serve a *stream* of requests through the continuous-batching
+        scheduler (:mod:`repro.serve.scheduler`): ``max_slots`` decode
+        lanes over one per-slot-pos cache, FIFO admission of arrivals into
+        freed lanes, grouped prefill + batched decode per step.
+
+        ``requests`` is a sequence of :class:`scheduler.Request` (virtual
+        arrival steps — use :func:`scheduler.synthetic_workload` for seeded
+        traces).  Returns ``[CompletedRequest]`` sorted by rid; each
+        request's tokens are identical to running it alone through
+        :meth:`generate` (per-request PRNG key chains).  ``max_slots``
+        defaults to the engine batch — the decode-plan buckets were warmed
+        at that batch, so the default keeps the stream on warm plans.
+        """
+        from . import scheduler as sched_mod
+        sched = sched_mod.Scheduler(self, max_slots=max_slots,
+                                    collect_logits=collect_logits,
+                                    step_hook=step_hook)
+        return sched.run(requests)
 
     # ------------------------------------------------------------ reports --
     def stats(self) -> Dict[str, Any]:

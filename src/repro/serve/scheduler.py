@@ -1,0 +1,413 @@
+"""Continuous-batching scheduler over the :class:`repro.serve.Engine`.
+
+The serving analogue of the paper's multi-pumping: a fixed resource budget
+(``max_slots`` preallocated KV-cache lanes + the warmed decode-plan bucket)
+is kept busy at a higher effective rate by interleaving *independent*
+requests through it, instead of draining one batch at a time.  The step
+loop runs mixed-phase iterations:
+
+    arrivals -> FIFO admission -> grouped prefill -> insert -> batched decode
+
+* **Slot manager** — ``max_slots`` decode lanes over one per-slot-pos cache
+  (``models.model.init_cache(per_slot_pos=True)``: the ``pos`` leaf is a
+  ``(B,)`` vector, so each cache row advances at its own depth).  Free-list
+  allocation with double-alloc/double-free guards; a freed lane keeps
+  masked-out garbage until re-admission overwrites it.
+* **Admission** — waiting requests are admitted FIFO into freed slots
+  between decode steps.  Admitted requests are grouped by *exact* prompt
+  length and prefilled on a fresh scalar-pos cache (token-level padding
+  would corrupt SSM state / the conv tail — the plan registry does its own
+  construction-exact padding internally), then scattered into their lanes
+  with :func:`insert_rows`.  The prefill batch pads up to the engine's
+  warmed batch size so the grouped prefill still hits the warm plan bucket.
+* **Decode** — one jitted ``decode_step`` over the whole slot cache per
+  scheduler step.  Free lanes decode garbage harmlessly (their write masks
+  are all-false once ``pos`` reaches the cache end and their outputs are
+  never read).  Per-request sampling uses per-request PRNG key chains, so
+  every request's tokens are bit-identical to running it alone through
+  :meth:`Engine.generate`.
+
+Time is *virtual*: arrivals are measured in scheduler steps, so a seeded
+:func:`synthetic_workload` replays deterministically — the property the
+invariant harness in ``tests/test_scheduler.py`` is built on (no slot
+leak/double-allocation, FIFO admission, request conservation after every
+step, per-request token parity vs solo generation).
+
+Failure behaviour rides the engine's degradation ladder for free: prefill
+and decode route through :meth:`Engine._run_step`, so an injected fault or
+a non-finite step re-runs on the plain-jnp rung and the affected in-flight
+requests are marked degraded rather than dropped (``sched.slot_free`` is
+this module's own fault site: a fault while reclaiming a lane still frees
+it and counts the request degraded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.testing import faults
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request in a stream.
+
+    ``arrival`` is in virtual scheduler steps (deterministic replay);
+    ``tokens`` is the (S,) prompt.
+    """
+    rid: int
+    tokens: np.ndarray
+    n_new: int
+    arrival: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.tokens).shape[-1])
+
+
+@dataclasses.dataclass
+class CompletedRequest:
+    """Per-request result + latency accounting for one streamed request."""
+    rid: int
+    tokens: np.ndarray                      # (n_new,) generated tokens
+    arrival: int
+    admitted_step: int
+    done_step: int
+    queue_wait_steps: int                   # admitted_step - arrival
+    ttft_s: float                           # arrival -> first token (wall)
+    tpot_s: float                           # mean inter-token wall time
+    degraded: bool = False
+    logits: Optional[np.ndarray] = None     # (n_new, V) fp32 when collected
+
+
+class SlotManager:
+    """Free-list allocator over ``n`` decode lanes with leak guards.
+
+    Double allocation and double free raise immediately — the invariant
+    harness runs with these guards live, so a scheduler bug surfaces as a
+    hard error inside the trace rather than as silent cache corruption.
+    """
+
+    def __init__(self, n: int):
+        if n <= 0:
+            raise ValueError(f"max_slots must be positive, got {n}")
+        self.n = n
+        self._free: List[int] = list(range(n - 1, -1, -1))  # pop() -> slot 0
+        self.owner: Dict[int, int] = {}
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupancy(self) -> int:
+        return self.n - len(self._free)
+
+    def alloc(self, rid: int) -> int:
+        if not self._free:
+            raise RuntimeError("slot allocation with no free slots")
+        slot = self._free.pop()
+        if slot in self.owner:
+            raise RuntimeError(
+                f"slot {slot} double-allocated (owned by request "
+                f"{self.owner[slot]}, requested by {rid})")
+        self.owner[slot] = rid
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self.owner:
+            raise RuntimeError(f"slot {slot} double-freed (no owner)")
+        del self.owner[slot]
+        self._free.append(slot)
+
+
+def synthetic_workload(n_requests: int, *, seed: int = 0,
+                       prompt_lens: Sequence[int] = (4, 8),
+                       new_tokens: Sequence[int] = (2, 4),
+                       arrival_rate: float = 0.5,
+                       vocab: int = 100) -> List[Request]:
+    """Deterministic synthetic request trace.
+
+    Seeded geometric inter-arrival gaps (mean ``1/arrival_rate - 1`` steps
+    between requests) and prompt/completion lengths drawn from the given
+    sets — lengths come from a *set* rather than a continuous range so a
+    trace touches a bounded number of prefill shapes (one jit trace per
+    distinct prompt length).  Same seed, same trace: the test harness
+    replays it through both the scheduler and solo generation.
+    """
+    if not 0.0 < arrival_rate <= 1.0:
+        raise ValueError(f"arrival_rate must be in (0, 1], got {arrival_rate}")
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0
+    for rid in range(n_requests):
+        if rid and arrival_rate < 1.0:
+            t += int(rng.geometric(arrival_rate)) - 1
+        reqs.append(Request(
+            rid=rid,
+            tokens=rng.integers(0, vocab,
+                                size=int(rng.choice(prompt_lens)),
+                                dtype=np.int32),
+            n_new=int(rng.choice(new_tokens)),
+            arrival=t))
+    return reqs
+
+
+def insert_rows(big_cache, small_cache, slots, n_rows: int):
+    """Scatter ``n_rows`` prefilled rows of ``small_cache`` into the
+    per-slot lanes ``slots`` of ``big_cache``.
+
+    Cache leaves are stacked over layers — ``(n_layers, B, ...)`` (the
+    hybrid family adds an ``(n_groups, B, ...)`` ``shared_attn`` group,
+    which the same rule covers).  The ``pos`` leaf is the one asymmetric
+    case: scalar-per-layer ``(n_layers,)`` in the fresh prefill cache vs
+    per-slot ``(n_layers, B)`` in the big cache — each admitted lane's pos
+    is set to its prompt length.  ``small_cache`` may carry padding rows
+    beyond ``n_rows`` (prefill pads the batch up to the warm plan bucket);
+    they are dropped here.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+
+    def one(path, big, small):
+        last = path[-1]
+        key = getattr(last, "key", getattr(last, "name", None))
+        if key == "pos":
+            return big.at[:, slots].set(small[:, None])
+        return big.at[:, slots].set(small[:, :n_rows])
+
+    return jax.tree_util.tree_map_with_path(one, big_cache, small_cache)
+
+
+@dataclasses.dataclass
+class _Lane:
+    """In-flight per-slot decode state."""
+    req: Request
+    key: jax.Array                  # per-request PRNG chain (parity w/ solo)
+    cur: int = 0                    # last sampled token (next decode input)
+    emitted: List[int] = dataclasses.field(default_factory=list)
+    logits: List[np.ndarray] = dataclasses.field(default_factory=list)
+    admitted_step: int = 0
+    admit_wall: float = 0.0
+    first_tok_wall: float = 0.0
+    degraded: bool = False
+
+
+class Scheduler:
+    """The continuous-batching step loop.  Built by
+    :meth:`Engine.serve_stream`; usable directly when a test needs to drive
+    steps one at a time.
+
+    ``step_hook(state_dict)`` (if given) runs after every scheduler step
+    with a snapshot: ``step, occupancy, queue, pending, active, completed,
+    admitted`` (rids admitted this step) — the surface the invariant
+    harness asserts on.
+    """
+
+    def __init__(self, engine, *, max_slots: Optional[int] = None,
+                 collect_logits: bool = False,
+                 step_hook: Optional[Callable[[Dict[str, Any]], None]] = None):
+        from repro.models import model as model_mod
+        cfg = engine.cfg
+        if cfg.family == "encdec":
+            raise ValueError(
+                "continuous batching is not supported for the encdec "
+                "family (cross-attention caches are per-request)")
+        self.engine = engine
+        self.max_slots = int(max_slots or engine.scfg.batch)
+        self.collect_logits = collect_logits
+        self.step_hook = step_hook
+        self.slots = SlotManager(self.max_slots)
+        cdt = jnp.dtype(engine.scfg.cache_dtype)
+        self.cache = model_mod.init_cache(cfg, self.max_slots,
+                                          engine.scfg.max_len, cdt,
+                                          per_slot_pos=True)
+        self.active: Dict[int, _Lane] = {}
+        self.queue: deque = deque()
+        self.pending: List[Request] = []
+        self.completed: Dict[int, CompletedRequest] = {}
+        self.step = 0
+        self._total = 0
+
+    # ------------------------------------------------------------ helpers --
+    def _sample_row(self, logits_row, key) -> int:
+        """Sample one token for one lane — same math as
+        ``Engine._sample`` on a (1, V) batch, so a streamed request's
+        tokens match its solo run exactly (per-request key chain)."""
+        eng = self.engine
+        if eng.scfg.temperature <= 0.0:
+            return int(np.argmax(np.asarray(logits_row)))
+        out = jax.random.categorical(
+            key, jnp.asarray(logits_row)[None] / eng.scfg.temperature)
+        return int(out[0])
+
+    def _finish(self, slot: int, lane: _Lane) -> None:
+        """Complete the lane's request and reclaim its slot.  A fault at
+        the ``sched.slot_free`` site marks the request degraded but the
+        slot is reclaimed regardless — a lane is never leaked."""
+        try:
+            faults.check("sched.slot_free", slot=slot, rid=lane.req.rid)
+        except Exception as e:  # noqa: BLE001 — serving must not die
+            obs.count("sched.slot_free_fault", reason=type(e).__name__)
+            lane.degraded = True
+        self.slots.free(slot)
+        del self.active[slot]
+        now = time.perf_counter()
+        r = lane.req
+        n = len(lane.emitted)
+        tpot = ((now - lane.first_tok_wall) / (n - 1)) if n > 1 else 0.0
+        if lane.degraded:
+            self.engine.degraded_requests += 1
+            obs.count("serve.degraded_request")
+        obs.observe("serve.request_ttft_s",
+                    lane.first_tok_wall - lane.admit_wall)
+        obs.observe("serve.request_tpot_s", tpot)
+        obs.count("serve.stream_tokens", n)
+        self.completed[r.rid] = CompletedRequest(
+            rid=r.rid, tokens=np.asarray(lane.emitted, np.int32),
+            arrival=r.arrival, admitted_step=lane.admitted_step,
+            done_step=self.step,
+            queue_wait_steps=lane.admitted_step - r.arrival,
+            ttft_s=lane.first_tok_wall - lane.admit_wall, tpot_s=tpot,
+            degraded=lane.degraded,
+            logits=(np.stack(lane.logits).astype(np.float32)
+                    if self.collect_logits else None))
+
+    def _admit(self, admitted: List[Request]) -> None:
+        """Grouped prefill + insert for this step's admissions."""
+        eng = self.engine
+        groups: Dict[int, List[Request]] = {}
+        for r in admitted:
+            groups.setdefault(r.prompt_len, []).append(r)
+        for plen, grp in groups.items():
+            toks = np.stack([np.asarray(r.tokens, np.int32) for r in grp])
+            g = len(grp)
+            # pad the prefill batch up to the engine's warmed batch size so
+            # the grouped prefill hits the warm plan bucket (rows are
+            # independent through attention/SSM/dropless-MoE; the padding
+            # rows are dropped before insert)
+            pad_to = eng.scfg.batch if g <= eng.scfg.batch else g
+            if pad_to > g:
+                toks = np.concatenate(
+                    [toks, np.repeat(toks[-1:], pad_to - g, axis=0)])
+            eng._req_degraded = False
+            small, last = eng.prefill(jnp.asarray(toks))
+            degraded = eng._req_degraded
+            now = time.perf_counter()
+            slot_ids = [self.slots.alloc(r.rid) for r in grp]
+            self.cache = insert_rows(self.cache, small, slot_ids, g)
+            last_h = np.asarray(last[:g], np.float32)
+            for i, (r, slot) in enumerate(zip(grp, slot_ids)):
+                lane = _Lane(req=r, key=jax.random.PRNGKey(eng.scfg.seed),
+                             admitted_step=self.step, admit_wall=now,
+                             degraded=degraded)
+                tok0 = self._sample_row(last_h[i], lane.key)
+                lane.emitted.append(tok0)
+                lane.cur = tok0
+                lane.first_tok_wall = time.perf_counter()
+                if self.collect_logits:
+                    lane.logits.append(last_h[i])
+                self.active[slot] = lane
+                obs.observe("sched.queue_wait_steps",
+                            lane.admitted_step - r.arrival)
+                if r.n_new <= 1:
+                    self._finish(slot, lane)
+
+    def _decode(self) -> None:
+        """One batched decode step over every active lane."""
+        eng = self.engine
+        toks = np.zeros((self.max_slots, 1), np.int32)
+        for slot, lane in self.active.items():
+            toks[slot, 0] = lane.cur
+        eng._req_degraded = False
+        logits, self.cache = eng._decode_token(
+            self.cache, {"tokens": jnp.asarray(toks)})
+        degraded = eng._req_degraded
+        rows = np.asarray(logits[:, -1], np.float32)
+        for slot, lane in list(self.active.items()):
+            if degraded:
+                lane.degraded = True
+            lane.key, sub = jax.random.split(lane.key)
+            tok = self._sample_row(rows[slot], sub)
+            lane.emitted.append(tok)
+            if self.collect_logits:
+                lane.logits.append(rows[slot])
+            if len(lane.emitted) >= lane.req.n_new:
+                self._finish(slot, lane)
+            else:
+                lane.cur = tok
+
+    # --------------------------------------------------------------- loop --
+    def submit(self, requests: Sequence[Request]) -> None:
+        max_len = self.engine.scfg.max_len
+        for r in requests:
+            if r.prompt_len + r.n_new > max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt_len {r.prompt_len} + n_new "
+                    f"{r.n_new} exceeds max_len {max_len}")
+            if r.n_new < 1:
+                raise ValueError(f"request {r.rid}: n_new must be >= 1")
+        self.pending.extend(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        self._total += len(requests)
+
+    def run_step(self) -> None:
+        """One scheduler step: arrivals -> admission -> batched decode."""
+        while self.pending and self.pending[0].arrival <= self.step:
+            self.queue.append(self.pending.pop(0))
+        admitted: List[Request] = []
+        while self.queue and len(admitted) < self.slots.free_count:
+            # FIFO: always the queue head; a request never overtakes an
+            # earlier one into a slot
+            admitted.append(self.queue.popleft())
+        if admitted:
+            self._admit(admitted)
+        if self.active:
+            self._decode()
+        obs.gauge("sched.slot_occupancy", self.slots.occupancy)
+        obs.gauge("sched.queue_depth", len(self.queue))
+        # conservation: every submitted request is exactly one of
+        # not-yet-arrived / queued / in-flight / completed
+        accounted = (len(self.pending) + len(self.queue) + len(self.active)
+                     + len(self.completed))
+        if accounted != self._total:
+            raise RuntimeError(
+                f"request conservation violated at step {self.step}: "
+                f"{accounted} accounted vs {self._total} submitted")
+        if self.step_hook is not None:
+            self.step_hook({
+                "step": self.step,
+                "occupancy": self.slots.occupancy,
+                "free": self.slots.free_count,
+                "queue": [r.rid for r in self.queue],
+                "pending": len(self.pending),
+                "active": {s: ln.req.rid for s, ln in self.active.items()},
+                "admitted": [r.rid for r in admitted],
+                "completed": len(self.completed),
+            })
+        self.step += 1
+
+    def run(self, requests: Sequence[Request]) -> List[CompletedRequest]:
+        self.submit(requests)
+        if not self.pending:
+            return []
+        # stall guard: with >=1 active lane every step emits >=1 token, so
+        # total steps are bounded by arrivals span + total work + slack
+        bound = (max(r.arrival for r in self.pending)
+                 + sum(r.n_new for r in self.pending)
+                 + len(self.pending) + self.max_slots + 8)
+        with obs.span("serve.stream", cat="serve", requests=self._total,
+                      max_slots=self.max_slots) as sp:
+            while self.pending or self.queue or self.active:
+                if self.step > bound:
+                    raise RuntimeError(
+                        f"scheduler stalled: step {self.step} exceeded "
+                        f"bound {bound} with {len(self.completed)}/"
+                        f"{self._total} completed")
+                self.run_step()
+            sp.set(steps=self.step, completed=len(self.completed))
+        return [self.completed[rid] for rid in sorted(self.completed)]

@@ -195,6 +195,59 @@ def test_registry_exec_fault_falls_back_one_rung(baseline, tmp_path):
     assert eng.degraded_requests == 0
 
 
+# ---------------------------------------------- continuous-batching chaos --
+def _stream_reqs(cfg):
+    from repro.serve import scheduler as sched
+    return sched.synthetic_workload(4, seed=6, prompt_lens=(4, 8),
+                                    new_tokens=(3,), arrival_rate=0.6,
+                                    vocab=cfg.vocab_size)
+
+
+STREAM_MATRIX = [
+    # a prefill admitting new requests mid-stream fails
+    pytest.param("engine.prefill", {"after": 1, "times": 1},
+                 id="stream-prefill-fault"),
+    # a decode step fails while later arrivals are still queued
+    pytest.param("engine.decode", {"after": 2, "times": 1},
+                 id="stream-decode-fault"),
+    # reclaiming a finished request's slot fails
+    pytest.param("sched.slot_free", {"times": 1},
+                 id="stream-slot-free-fault"),
+]
+
+
+@pytest.mark.parametrize("site,kwargs", STREAM_MATRIX)
+def test_stream_completes_under_fault(tmp_path, site, kwargs):
+    """Scheduler-site injections: whatever fails mid-stream — a grouped
+    prefill, a batched decode with queued requests, a slot reclaim — every
+    in-flight request still completes with the fault-free tokens (the
+    degradation ladder re-runs the step; a slot-free fault still frees the
+    lane) and ``degraded_requests`` counts the affected requests."""
+    eng = _fresh_engine()
+    reqs = _stream_reqs(eng.cfg)
+    clean = {r.rid: r.tokens for r in eng.serve_stream(reqs)}
+    before = eng.degraded_requests
+    served = _ctr("serve.degraded_request")
+    rule = faults.FaultRule(site, "error", **kwargs)
+    with faults.inject(rule):
+        res = eng.serve_stream(reqs)
+    assert rule.fired >= 1, "the fault never fired"
+    assert len(res) == len(reqs), "a request was dropped under fault"
+    for r in res:
+        np.testing.assert_array_equal(r.tokens, clean[r.rid],
+                                      err_msg=f"rid {r.rid} under {site}")
+    n_deg = sum(1 for r in res if r.degraded)
+    assert n_deg >= 1, "no request was marked degraded"
+    assert eng.degraded_requests == before + n_deg
+    assert _ctr("serve.degraded_request") > served
+    if site == "sched.slot_free":
+        # the lane was reclaimed regardless: nothing leaked, so the next
+        # stream on the same engine still has every slot
+        assert _ctr("sched.slot_free_fault") >= 1
+        res2 = eng.serve_stream(reqs)
+        assert len(res2) == len(reqs)
+
+
 # ------------------------------------------------------ quarantine/backoff --
 def test_quarantine_backoff_window_respected(tmp_path):
     from repro import compiler

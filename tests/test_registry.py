@@ -44,6 +44,69 @@ def test_bucket_policy_boundaries():
     assert pol.bucket_group(1) == 16
     assert pol.bucket_group(17) == 32
     assert pol.seq_grid(100) == [16, 32, 64, 128]
+    # per-slot decode positions bucket on the furthest lane
+    assert pol.bucket_pos(0) == 16
+    assert pol.bucket_pos(np.array([3, 40, 7])) == 64
+
+
+# The BucketPolicy properties every dimension must hold.  Written twice on
+# purpose: once property-based through the hypothesis shim (broad random
+# coverage where the container has hypothesis installed, a single skip
+# where it does not) and once as deterministic pow2-boundary sweeps that
+# run everywhere — the invariants themselves are always exercised in
+# tier-1.
+def _check_bucket_invariants(pol: BucketPolicy, n: int, m: int):
+    for fn, floor in ((pol.bucket_seq, pol.seq_min),
+                      (pol.bucket_batch, pol.batch_min)):
+        a, b = fn(min(n, m)), fn(max(n, m))
+        assert a <= b, f"{fn.__name__} not monotone at ({n}, {m})"
+        out = fn(n)
+        assert out >= max(n, 1) and out >= floor, (fn.__name__, n, out)
+        assert fn(out) == out, f"{fn.__name__} not idempotent at {n}"
+    # bucket_pos maps a position (index) to the seq bucket covering slots
+    # 0..pos: monotone, covering, and stable — every position inside a
+    # padded bucket looks up that same bucket (pad-then-lookup idempotence
+    # for the decode dim, where the "shape" is the furthest valid slot)
+    assert pol.bucket_pos(min(n, m)) <= pol.bucket_pos(max(n, m))
+    bp = pol.bucket_pos(n)
+    assert bp >= n + 1 and bp >= pol.seq_min
+    assert pol.bucket_pos(bp - 1) == bp
+    g = pol.bucket_group(n)
+    assert g >= n and pol.bucket_group(g) == g
+    assert g == 0 or g % pol.row_block == 0
+
+
+from hypothesis_compat import given, settings, st  # noqa: E402
+
+
+@given(n=st.integers(min_value=0, max_value=1 << 16),
+       m=st.integers(min_value=0, max_value=1 << 16))
+@settings(max_examples=200, deadline=None)
+def test_bucket_policy_properties(n, m):
+    """Property-based (hypothesis): monotone, covering (bucket ≥ request ≥
+    floor) and pad-then-lookup idempotent on random shape pairs."""
+    _check_bucket_invariants(BucketPolicy(), n, m)
+
+
+def test_bucket_policy_pow2_sweep():
+    """Deterministic sweep of the same invariants over every pow2 boundary
+    (2^k - 1, 2^k, 2^k + 1) up to 2^16, for batch/seq/pos/group dims."""
+    pol = BucketPolicy()
+    pts = sorted({p for k in range(0, 17)
+                  for p in ((1 << k) - 1, 1 << k, (1 << k) + 1) if p >= 0})
+    for n in pts:
+        _check_bucket_invariants(pol, n, n + 1)
+        _check_bucket_invariants(pol, n + 1, n)
+        # lookup after padding lands in the same bucket: a padded call
+        # can never cascade into a bigger plan than the original request
+        assert pol.bucket_seq(pol.bucket_seq(n)) == pol.bucket_seq(n)
+        assert pol.bucket_batch(pol.bucket_batch(n)) == pol.bucket_batch(n)
+    # every seq_grid is exactly the reachable bucket set, sorted, unique
+    for top in (16, 100, 4096):
+        grid = pol.seq_grid(top)
+        assert grid == sorted(set(grid))
+        assert grid[-1] == pol.bucket_seq(top)
+        assert all(pol.bucket_seq(g) == g for g in grid)
 
 
 @pytest.mark.parametrize("s", [13, 16, 17])
