@@ -3,7 +3,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-diff bench bench-compiler bench-smoke \
-	bench-serve bench-serve-smoke bench-load-smoke trace-smoke chaos-smoke
+	bench-serve bench-serve-smoke bench-load-smoke bench-overload-smoke \
+	trace-smoke chaos-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -45,11 +46,23 @@ bench-serve-smoke:
 # throughput-under-load smoke: a tiny synthetic arrival trace through the
 # continuous-batching scheduler (docs/serving.md) — slot occupancy, queue
 # waits, per-request TTFT and tok/s from the launcher.  The BENCH_serve
-# row for the same protocol ("load", schema 3) is asserted fail-loud by
+# row for the same protocol ("load") is asserted fail-loud by
 # tests/test_benchmarks.py, like the decode rows.
 bench-load-smoke:
 	$(PY) -m repro.launch.serve --arch qwen3-0.6b --smoke --batch 2 \
 		--prompt-len 8 --new 4 --arrival-rate 0.5 --requests 6
+
+# overload smoke: the same launcher at 2x the service rate with every
+# overload control on — chunked prefill, lowest-priority preemption, a
+# bounded admission queue and deadline-aware shedding (docs/serving.md
+# "Overload behavior").  The BENCH_serve row for this protocol
+# ("overload", schema 4: p99 TTFT/TPOT + shed rate, chunked+preemptive vs
+# unbounded FIFO) is asserted fail-loud by tests/test_benchmarks.py.
+bench-overload-smoke:
+	$(PY) -m repro.launch.serve --arch qwen3-0.6b --smoke --batch 2 \
+		--prompt-len 8 --new 4 --arrival-rate 2.0 --requests 16 \
+		--prefill-chunk-tokens 4 --preempt lowest_priority \
+		--max-queue 6 --deadline-ms 12
 
 # chaos smoke: the fault-injection matrix (docs/robustness.md) — every
 # injection point on the compile→serve path must degrade one ladder rung

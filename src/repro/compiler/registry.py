@@ -205,6 +205,18 @@ class PlanRegistry:
         # disables validation.
         self.spot_check = spot_check
         self._plans: Dict[Tuple, Any] = {}
+        # wrapper-level fast path: raw call signature -> (plan, padded
+        # dims).  The canonical plan key is derived through bucket math +
+        # a sorted-kwargs tuple build on every lookup; at steady state
+        # that per-call Python cost is the *whole* overhead of the
+        # registry path vs a direct kernel call (the measured ~3%
+        # prefill_flash gap), so warm wrapper calls memoize the full
+        # resolution and skip straight to pad + execute.
+        self._lookup: Dict[Tuple, Any] = {}
+        # in-trace cold misses on a 'measure' policy are served from the
+        # capacity-model plan space (see kernel()); memoized per key so a
+        # long trace pays the warn + re-lookup recursion once, not per call
+        self._trace_memo: Dict[Tuple, Any] = {}
         self.stats = RegistryStats()
 
     def _store(self):
@@ -241,14 +253,22 @@ class PlanRegistry:
             # autotune (in-trace timings are garbage and catastrophically
             # slow): serve this lookup from the capacity-model plan space
             # instead, and leave the measure slot empty so warmup()/an
-            # eager call can still fill it with a real measured plan
+            # eager call can still fill it with a real measured plan.
+            # Memoized per key: only the first in-trace miss pays the
+            # warning + recursive re-lookup.
+            hit = self._trace_memo.get(key)
+            if hit is not None:
+                self.stats.count(kernel, hit=True)
+                return hit
             warnings.warn(
                 f"plan registry: cold miss for {kernel}{tuple(builder_args)}"
                 " inside a jax trace — using capacity-model planning; call "
                 "warmup() at launch to pre-measure this bucket",
                 stacklevel=3)
-            return self.kernel(kernel, builder_args, builder_kwargs,
+            kern = self.kernel(kernel, builder_args, builder_kwargs,
                                pump="auto")
+            self._trace_memo[key] = kern
+            return kern
         self.stats.count(kernel, hit=False)
         from repro.core.autopump import BUILDERS
         factor, mode, autotune = self._request(pump)
@@ -359,6 +379,8 @@ class PlanRegistry:
 
     def reset(self) -> None:
         self._plans.clear()
+        self._lookup.clear()
+        self._trace_memo.clear()
         self.stats = RegistryStats()
 
     # ----------------------------------------------------------- requests --
@@ -438,17 +460,31 @@ class PlanRegistry:
         """Bucketed flash attention.  q: (B, H, S, D); k/v: (B, Hkv, T, D)."""
         b, h, s, d = q.shape
         hkv, t = k.shape[1], k.shape[2]
-        try:
-            args, kwargs, (bb, sb, tb) = self.flash_request(
-                b=b, h=h, hkv=hkv, s=s, t=t, d=d, causal=causal,
-                dtype=str(q.dtype), bq=bq, bkv=bkv)
-            kern = self.kernel("flash_attention", args, kwargs)
-        except Exception as e:  # noqa: BLE001 — serving must not die
-            self.stats.fallback("flash_attention", why=str(e))
-            warnings.warn(f"plan registry: flash_attention fell back to the "
-                          f"direct ops path ({e})", stacklevel=2)
-            from repro.kernels.ops import flash_attention as _flash
-            return _flash(q, k, v, causal=causal, bq=bq, bkv=bkv)
+        lk = (b, h, hkv, s, t, d, causal, str(q.dtype), bq, bkv)
+        hit = self._lookup.get(lk)
+        if hit is not None:
+            # warm fast path: signature -> installed plan, no bucket math
+            kern, bb, sb, tb = hit
+            self.stats.count("flash_attention", hit=True)
+        else:
+            try:
+                args, kwargs, (bb, sb, tb) = self.flash_request(
+                    b=b, h=h, hkv=hkv, s=s, t=t, d=d, causal=causal,
+                    dtype=str(q.dtype), bq=bq, bkv=bkv)
+                kern = self.kernel("flash_attention", args, kwargs)
+            except Exception as e:  # noqa: BLE001 — serving must not die
+                self.stats.fallback("flash_attention", why=str(e))
+                warnings.warn(f"plan registry: flash_attention fell back to "
+                              f"the direct ops path ({e})", stacklevel=2)
+                from repro.kernels.ops import flash_attention as _flash
+                return _flash(q, k, v, causal=causal, bq=bq, bkv=bkv)
+            from repro import compiler
+            if compiler._trace_state_clean():
+                # never memoize a traced resolution: an in-trace measure
+                # miss serves a capacity plan, and freezing that into the
+                # fast path would keep eager calls off the measured plan
+                # warmup later installs
+                self._lookup[lk] = (kern, bb, sb, tb)
         qp = _pad_axes(q, {0: bb, 2: sb})
         kp = _pad_axes(k, {0: bb, 2: tb})
         vp = _pad_axes(v, {0: bb, 2: tb})

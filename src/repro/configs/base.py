@@ -99,6 +99,14 @@ class ModelConfig:
     # cache only at pos 0.  The serve Engine (whose prefill always builds
     # a fresh cache) sets this; chunked multi-segment prefill must not.
     fresh_prefill_kernel: bool = False
+    # continuation prefill (s > 1 into a cache already holding pos > 0
+    # tokens — chunked prefill, preemption resume): attention attends over
+    # the WHOLE cache prefix, not just the current chunk, and the SSM path
+    # seeds the scan from the cached recurrent state + conv tail.  At
+    # pos == 0 every continuation term is exactly zero, so the flag is a
+    # strict superset of the fresh-prefill math; it stays off by default
+    # because the extra terms cost work the fresh path never needs.
+    prefill_continuation: bool = False
     attn_block_kv: int = 1024            # KV chunk for chunked attention
     remat: bool = True
     dtype: str = "bfloat16"

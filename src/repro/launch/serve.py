@@ -5,11 +5,19 @@
 
 Traffic-shaped mode: ``--arrival-rate R`` switches from one batched
 ``generate`` call to the continuous-batching scheduler — a synthetic
-arrival trace (geometric inter-arrival gaps at rate R, ``--requests N``
-requests) drains through ``Engine.serve_stream`` with ``--max-slots``
-decode lanes (default ``--batch``, the warmed plan bucket), printing
-tokens/s, slot occupancy, queue waits and per-request TTFT.  See
-docs/serving.md "Continuous batching".
+arrival trace (``--requests N`` requests; geometric inter-arrival gaps for
+R in (0,1], Bernoulli-packed overload arrivals for R > 1) drains through
+``Engine.serve_stream`` with ``--max-slots`` decode lanes (default
+``--batch``, the warmed plan bucket), printing tokens/s, slot occupancy,
+queue waits and per-request TTFT.  See docs/serving.md "Continuous
+batching".
+
+Overload controls (docs/serving.md "Overload behavior"):
+``--prefill-chunk-tokens`` bounds per-step prefill work,
+``--preempt longest_remaining|lowest_priority`` enables slot preemption,
+``--max-queue`` bounds the admission queue (overflow shed as
+``queue_full``), and ``--deadline-ms`` attaches a completion deadline to
+every synthetic request and turns on deadline-aware shedding.
 
 Observability: ``--trace out.json`` records a Chrome-trace of the whole run
 (warmup → prefill → per-token decode; open at https://ui.perfetto.dev),
@@ -52,13 +60,28 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--arrival-rate", type=float, default=None,
                     metavar="R",
                     help="traffic-shaped mode: drain a synthetic arrival "
-                         "trace (geometric gaps at rate R in (0,1]) through "
-                         "the continuous-batching scheduler")
+                         "trace through the continuous-batching scheduler "
+                         "(geometric gaps for R in (0,1]; R > 1 packs "
+                         "overload arrivals)")
     ap.add_argument("--max-slots", type=int, default=None,
                     help="decode lanes for --arrival-rate mode "
                          "(default: --batch, the warmed plan bucket)")
     ap.add_argument("--requests", type=int, default=8,
                     help="requests in the --arrival-rate trace")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=None,
+                    metavar="T",
+                    help="chunked prefill: cap per-step prefill work at T "
+                         "tokens (long prompts admit over several steps)")
+    ap.add_argument("--preempt", default=None, metavar="POLICY",
+                    choices=("longest_remaining", "lowest_priority"),
+                    help="enable slot preemption under queue pressure "
+                         "(longest_remaining|lowest_priority)")
+    ap.add_argument("--max-queue", type=int, default=None, metavar="N",
+                    help="bound the admission queue at N; overflow is shed "
+                         "with reason queue_full")
+    ap.add_argument("--deadline-ms", type=float, default=None, metavar="MS",
+                    help="attach a MS deadline to every synthetic request "
+                         "and shed provably-unmeetable ones")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Chrome-trace JSON of the run to PATH")
     ap.add_argument("--metrics", action="store_true",
@@ -98,26 +121,46 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
             args.requests, seed=1,
             prompt_lens=(max(1, args.prompt_len // 2), args.prompt_len),
             new_tokens=(args.new,), arrival_rate=args.arrival_rate,
-            vocab=cfg.vocab_size)
+            vocab=cfg.vocab_size,
+            deadlines_ms=((args.deadline_ms,)
+                          if args.deadline_ms is not None else None))
         occ = []
         t0 = time.time()
         with prof:
-            results = eng.serve_stream(
+            results, shed = eng.serve_stream(
                 reqs, max_slots=args.max_slots,
-                step_hook=lambda s: occ.append(s["occupancy"]))
+                step_hook=lambda s: occ.append(s["occupancy"]),
+                prefill_chunk_tokens=args.prefill_chunk_tokens,
+                preempt_policy=args.preempt,
+                max_queue=args.max_queue,
+                deadline_aware=args.deadline_ms is not None,
+                return_shed=True)
         dt = time.time() - t0
         total_new = sum(r.n_new for r in reqs)
-        ttft = sorted(r.ttft_s for r in results)
-        waits = [r.queue_wait_steps for r in results]
+        served_new = sum(len(r.tokens) for r in results) if results else 0
+        ttft = sorted(r.ttft_s for r in results) or [float("nan")]
+        waits = [r.queue_wait_steps for r in results] or [0]
         n_deg = sum(1 for r in results if r.degraded)
         print(f"[serve] streamed {len(results)}/{len(reqs)} requests "
-              f"({total_new} new tokens) in {dt:.2f}s wall "
-              f"— {total_new / dt:.1f} tok/s at rate "
+              f"({served_new}/{total_new} new tokens) in {dt:.2f}s wall "
+              f"— {served_new / dt:.1f} tok/s at rate "
               f"{args.arrival_rate}")
         print(f"[serve] slots: peak occupancy {max(occ, default=0)}/"
               f"{args.max_slots or args.batch} over {len(occ)} steps; "
               f"queue wait: max {max(waits)} step(s); "
               f"ttft p50 {ttft[len(ttft) // 2] * 1e3:.1f}ms")
+        n_pre = sum(r.preemptions for r in results)
+        if n_pre:
+            print(f"[serve] preemptions: {n_pre} across "
+                  f"{sum(1 for r in results if r.preemptions)} request(s) "
+                  f"(policy {args.preempt})")
+        if shed:
+            reasons: dict = {}
+            for s in shed:
+                reasons[s.reason] = reasons.get(s.reason, 0) + 1
+            detail = ", ".join(f"{k}={v}" for k, v in sorted(reasons.items()))
+            print(f"[serve] SHED: {len(shed)}/{len(reqs)} request(s) "
+                  f"rejected by admission control ({detail})")
         if n_deg:
             print(f"[serve] DEGRADED: {n_deg} request(s) re-served off "
                   f"the planned path")

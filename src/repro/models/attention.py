@@ -345,6 +345,29 @@ def mla_apply(p, cfg, x, *, positions, causal=True, cache=None,
             cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype),
             (0, pos, 0))
         new_cache = {"c_kv": ckv_c, "k_rope": krope_c, "pos": pos + s}
+        if cfg.prefill_continuation:
+            # continuation chunk (pos > 0): the current tokens must attend
+            # over the WHOLE written cache, not just this chunk — the
+            # compressed prefix is decompressed through wkv_b (same math
+            # as decode's absorbed path, unabsorbed) and masked to the
+            # valid pos + s slots.  At pos == 0 the mask reduces this to
+            # the chunk-local computation below.
+            t = ckv_c.shape[1]
+            kv = dense(p["wkv_b"], ckv_c.astype(x.dtype)) \
+                .reshape(b, t, h, dn + dv)
+            k_nope, v = kv[..., :dn], kv[..., dn:]
+            k = jnp.concatenate(
+                [k_nope,
+                 jnp.broadcast_to(krope_c[:, :, None, :].astype(x.dtype),
+                                  (b, t, h, dr))], axis=-1)
+            q = jnp.concatenate([q_nope, q_rope], axis=-1)
+            q, k, v = (u.swapaxes(1, 2) for u in (q, k, v))
+            out = chunked_attention(q, k, v, causal=causal,
+                                    q_pos=positions,
+                                    kv_mask=_kv_valid_mask(t, pos, s),
+                                    block=cfg.attn_block_kv, scale=scale)
+            out = out.swapaxes(1, 2).reshape(b, s, h * dv)
+            return dense(p["wo"], out), new_cache
         kv = dense(p["wkv_b"], c_kv).reshape(b, s, h, dn + dv)
         k_nope, v = kv[..., :dn], kv[..., dn:]
         k = jnp.concatenate(

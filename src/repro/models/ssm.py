@@ -172,8 +172,22 @@ def mamba2_apply(p, cfg, x, *, cache=None, interpret=True):
         new_cache = {"state": state.astype(cache["state"].dtype),
                      "conv": new_conv, "pos": cache["pos"] + 1}
     else:
-        conv_out = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
-                                p["conv_b"].astype(x.dtype))
+        cont = cache is not None and cfg.prefill_continuation
+        if cont:
+            # continuation chunk (pos > 0): the causal conv window is
+            # seeded from the cached tail instead of zeros, so token 0 of
+            # this chunk sees the last conv_width-1 tokens of the previous
+            # chunk.  A zero tail (pos == 0) reduces to _causal_conv.
+            window = jnp.concatenate(
+                [cache["conv"].astype(x.dtype), xbc], axis=1)
+            w = p["conv_w"].astype(x.dtype)
+            conv_out = jax.nn.silu(
+                sum(window[:, i:i + l, :] * w[i]
+                    for i in range(s.conv_width))
+                + p["conv_b"].astype(x.dtype))
+        else:
+            conv_out = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                    p["conv_b"].astype(x.dtype))
         xs, B_, C_ = jnp.split(conv_out, [d_in, d_in + gn], axis=-1)
         xh = xs.reshape(b, l, n_heads, s.head_dim)
         Bg = B_.reshape(b, l, s.n_groups, s.state_dim)
@@ -206,14 +220,37 @@ def mamba2_apply(p, cfg, x, *, cache=None, interpret=True):
             s_final = None
         else:
             y, s_final = _ssd_xla(xh, dt, A, Bg, Cg, chunk)
+        if cont:
+            # exact initial-state continuation on top of the zero-init
+            # scan: with s0 the cached state, s_t = s0·exp(Σ_{1..t} A·dt)
+            # + (zero-init part), so y_t gains C_t·s0·exp(cumsum_t) and
+            # the final state gains s0·exp(total decay).  Both terms are
+            # exactly zero at s0 = 0, so a fresh chunk is bit-identical.
+            s0 = cache["state"].astype(jnp.float32)            # (B,H,N,P)
+            lp = jnp.cumsum(A[None, None, :] * dt.astype(jnp.float32),
+                            axis=1)                            # (B,L,H)
+            hpg = n_heads // s.n_groups
+            Ch = jnp.repeat(Cg, hpg, axis=2).astype(jnp.float32)
+            y_init = jnp.einsum("blhn,bhnp->blhp", Ch, s0) \
+                * jnp.exp(lp)[..., None]
+            y = (y.astype(jnp.float32) + y_init).astype(xh.dtype)
+            s_final = s_final.astype(jnp.float32) \
+                + s0 * jnp.exp(lp[:, -1])[..., None, None]
         y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
         y = y.reshape(b, l, d_in)
         new_cache = None
         if cache is not None:
-            # prefill: store final SSD state + conv tail for decoding
+            # prefill: store final SSD state + conv tail for decoding.  A
+            # continuation chunk shorter than the conv window must keep the
+            # earlier tokens' tail entries, so its tail comes off the
+            # seeded window rather than zero-padded current tokens.
             wdt = s.conv_width
-            tail = jnp.pad(xbc, ((0, 0), (max(0, wdt - 1 - l), 0), (0, 0))
-                           )[:, -(wdt - 1):, :]
+            if cont:
+                tail = window[:, -(wdt - 1):, :]
+            else:
+                tail = jnp.pad(xbc,
+                               ((0, 0), (max(0, wdt - 1 - l), 0), (0, 0))
+                               )[:, -(wdt - 1):, :]
             new_cache = {"state": s_final.astype(cache["state"].dtype),
                          "conv": tail.astype(cache["conv"].dtype),
                          "pos": cache["pos"] + l}

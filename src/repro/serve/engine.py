@@ -79,7 +79,17 @@ class Engine:
         self._direct_cfg = dataclasses.replace(
             cfg, kernel_plan="direct", attention_impl="xla_chunked",
             ssm_impl="xla")
+        # continuation prefill (chunked prefill / preemption resume): same
+        # model, but s > 1 steps into a cache already holding pos > 0
+        # tokens — attention must mask over the whole written prefix and
+        # the SSM path seeds from cached state, so the flash fresh-prefill
+        # route is off and prefill_continuation on.  Traced lazily: plain
+        # whole-prompt serving never pays the extra compile.
+        self._cont_cfg = dataclasses.replace(
+            cfg, prefill_continuation=True, fresh_prefill_kernel=False)
+        self._cont_fn: Optional[Any] = None
         self._fallback_fn: Optional[Any] = None
+        self._fallback_cont_fn: Optional[Any] = None
         self.degraded_requests = 0
         self._req_degraded = False
         self.timer = StepTimer()
@@ -150,24 +160,44 @@ class Engine:
                 lambda p, c, b: model_mod.decode_step(cfg, p, b, c))
         return self._fallback_fn
 
+    def _cont(self):
+        """Continuation-prefill step fn (lazily traced/compiled)."""
+        if self._cont_fn is None:
+            cfg = self._cont_cfg
+            self._cont_fn = jax.jit(
+                lambda p, c, b: model_mod.decode_step(cfg, p, b, c))
+        return self._cont_fn
+
+    def _fallback_cont(self):
+        """Bottom-rung continuation prefill: plain-jnp paths with the
+        continuation masking/state-seeding kept on."""
+        if self._fallback_cont_fn is None:
+            obs.count("engine.fallback_build", phase="prefill_chunk")
+            cfg = dataclasses.replace(
+                self._direct_cfg, prefill_continuation=True,
+                fresh_prefill_kernel=False)
+            self._fallback_cont_fn = jax.jit(
+                lambda p, c, b: model_mod.decode_step(cfg, p, b, c))
+        return self._fallback_cont_fn
+
     def _nan_guarded(self) -> bool:
         return self.scfg.nan_guard or faults.active()
 
     def _run_step(self, phase: str, cache, batch):
         """One guarded model step: the planned path, degrading to the
         plain-jnp fallback on any failure — an exception out of the compiled
-        step, an injected ``engine.decode`` fault, or (guard on) non-finite
-        logits.  The fallback recomputes from the *pre-step* cache, so a
-        poisoned kernel cannot leak NaNs into the carried KV/SSD state.
-        Raises only if the bottom rung itself fails."""
+        step, an injected ``engine.decode``/``engine.prefill``/
+        ``engine.prefill_chunk`` fault, or (guard on) non-finite logits.
+        The fallback recomputes from the *pre-step* cache, so a poisoned
+        kernel cannot leak NaNs into the carried KV/SSD state.  Raises only
+        if the bottom rung itself fails."""
+        cont = phase == "prefill_chunk"
         try:
-            if phase == "decode":
-                faults.check("engine.decode")
-            elif phase == "prefill":
-                faults.check("engine.prefill")
+            faults.check(f"engine.{phase}")
+            step_fn = self._cont() if cont else self._decode
             with self.mesh:
                 logits, new_cache = self.timer.run(
-                    phase, self._decode, self.params, cache, batch)
+                    phase, step_fn, self.params, cache, batch)
             if self._nan_guarded() and \
                     not bool(jnp.isfinite(logits[:, -1]).all()):
                 raise FloatingPointError(
@@ -177,9 +207,9 @@ class Engine:
             obs.count("engine.degraded", phase=phase,
                       reason=type(e).__name__)
             self._req_degraded = True
+            fb = self._fallback_cont() if cont else self._fallback()
             with self.mesh:
-                return self.timer.run(phase, self._fallback(), self.params,
-                                      cache, batch)
+                return self.timer.run(phase, fb, self.params, cache, batch)
 
     def prefill(self, tokens: jax.Array, enc_out=None):
         """tokens: (B, S_prompt) — returns (cache, last_logits)."""
@@ -191,6 +221,25 @@ class Engine:
                       batch=int(tokens.shape[0]),
                       prompt_len=int(tokens.shape[1])):
             logits, cache = self._run_step("prefill", cache, batch)
+        return cache, logits[:, -1]
+
+    def prefill_chunk(self, cache, tokens: jax.Array, enc_out=None):
+        """Continuation prefill: advance ``cache`` (scalar-pos, possibly
+        already holding tokens) by one chunk of ``tokens`` (B, S_chunk).
+        Returns ``(cache, last_logits)``.  At pos == 0 this computes the
+        same answer as :meth:`prefill` (without the flash fresh-cache
+        route); at pos > 0 the chunk attends over the whole written prefix
+        and the SSM scan is seeded from the cached recurrent state — the
+        mechanism under the scheduler's chunked prefill and
+        preemption-resume paths."""
+        batch = {"tokens": tokens}
+        if enc_out is not None:
+            batch["enc_out"] = enc_out
+        with obs.span("serve.prefill_chunk", cat="serve",
+                      batch=int(tokens.shape[0]),
+                      chunk_len=int(tokens.shape[1])):
+            obs.count("engine.prefill_chunk")
+            logits, cache = self._run_step("prefill_chunk", cache, batch)
         return cache, logits[:, -1]
 
     def _sample(self, logits, key):
@@ -264,7 +313,13 @@ class Engine:
 
     # -------------------------------------------------- continuous batching --
     def serve_stream(self, requests, *, max_slots: Optional[int] = None,
-                     collect_logits: bool = False, step_hook=None):
+                     collect_logits: bool = False, step_hook=None,
+                     prefill_chunk_tokens: Optional[int] = None,
+                     preempt_policy: Optional[str] = None,
+                     max_queue: Optional[int] = None,
+                     deadline_aware: bool = False,
+                     step_time_ms: float = 1.0,
+                     return_shed: bool = False):
         """Serve a *stream* of requests through the continuous-batching
         scheduler (:mod:`repro.serve.scheduler`): ``max_slots`` decode
         lanes over one per-slot-pos cache, FIFO admission of arrivals into
@@ -277,12 +332,30 @@ class Engine:
         :meth:`generate` (per-request PRNG key chains).  ``max_slots``
         defaults to the engine batch — the decode-plan buckets were warmed
         at that batch, so the default keeps the stream on warm plans.
+
+        Overload controls (see ``docs/serving.md`` § Overload behavior):
+        ``prefill_chunk_tokens`` bounds per-step prefill work (long prompts
+        admit over several steps), ``preempt_policy`` enables slot
+        preemption (``'longest_remaining'`` | ``'lowest_priority'``),
+        ``max_queue`` bounds the admission queue (overflow is shed with
+        reason ``queue_full``), and ``deadline_aware=True`` sheds requests
+        whose ``deadline_ms`` is provably unmeetable.  With
+        ``return_shed=True`` the result is ``(completed, shed)``.
         """
         from . import scheduler as sched_mod
         sched = sched_mod.Scheduler(self, max_slots=max_slots,
                                     collect_logits=collect_logits,
-                                    step_hook=step_hook)
-        return sched.run(requests)
+                                    step_hook=step_hook,
+                                    prefill_chunk_tokens=prefill_chunk_tokens,
+                                    preempt_policy=preempt_policy,
+                                    max_queue=max_queue,
+                                    deadline_aware=deadline_aware,
+                                    step_time_ms=step_time_ms)
+        completed = sched.run(requests)
+        if return_shed:
+            return completed, sorted(sched.shed.values(),
+                                     key=lambda s: s.rid)
+        return completed
 
     # ------------------------------------------------------------ reports --
     def stats(self) -> Dict[str, Any]:

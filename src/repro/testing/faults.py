@@ -52,6 +52,12 @@ each to its expected degradation rung):
 ``emission.exec``    execution of a pallas-backend compiled kernel (wrap)
 ``registry.exec``    plan-registry kernel execution on the serving path
 ``engine.decode``    one engine decode step (mid-request failure)
+``engine.prefill``   one engine whole-prompt prefill step
+``engine.prefill_chunk``  one continuation-prefill chunk (chunked prefill /
+                     preemption resume)
+``sched.slot_free``  scheduler lane reclamation at request completion
+``sched.preempt``    scheduler slot preemption (park + requeue)
+``sched.evict_rows`` cache-row eviction of a preempted lane
 ===================  ======================================================
 """
 from __future__ import annotations

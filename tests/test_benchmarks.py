@@ -66,7 +66,7 @@ def test_serve_bench_smoke_writes_json(bench_cache, tmp_path, capsys):
     report = serve_report.run_report(smoke=True, out_path=out)
     assert out.exists()
     assert json.loads(out.read_text())["smoke"] is True
-    assert report["schema"] >= 3
+    assert report["schema"] >= 4
 
     layers = {e["layer"]: e for e in report["entries"]}
     assert set(layers) == {"attention", "ssm", "moe",
@@ -152,17 +152,35 @@ def test_serve_bench_smoke_writes_json(bench_cache, tmp_path, capsys):
     assert ld["request_ttft_p50_s"] > 0 and ld["request_tpot_p50_s"] > 0
     assert ld["degraded_requests"] == 0
 
-    # prefill flash speedup is *reported*, never silently dropped; when the
-    # registry lands below 1.0x the row must carry its root-cause warning
+    # prefill flash: the carried-over sub-1.0x gap was per-call plan-lookup
+    # overhead, closed by the registry's wrapper-level lookup memo — the
+    # row must now land at parity or better, with no tracked warning (the
+    # report re-rolls the paired minima before giving up, so a miss here
+    # is a real regression, not box noise)
     pf = report["prefill_flash"]
-    assert pf["speedup"] is not None and pf["speedup"] > 0
+    assert pf["speedup"] is not None and pf["speedup"] >= 1.0, pf
     assert pf["plan_measured"] is True and pf["plan_factor"] >= 1
-    if pf["speedup"] < 1.0:
-        assert pf["tracked_warning"], \
-            "sub-1.0x prefill flash with no tracked root-cause warning"
-        assert "plan-lookup" in pf["tracked_warning"]
-    else:
-        assert pf["tracked_warning"] is None
+    assert pf["tracked_warning"] is None
+
+    # schema 4: the overload row exists fail-loud.  Virtual-step TTFT
+    # percentiles are deterministic under the seed contract, so the
+    # acceptance comparison is exact: chunked+preemptive+deadline-aware
+    # scheduling must bound the admitted p99 TTFT at or below the
+    # unbounded-FIFO baseline, and every request must be accounted for as
+    # completed or shed-with-reason
+    ov = report["overload"]
+    assert ov["n_requests"] >= 1 and ov["arrival_rate"] > 1.0
+    fifo, ctl = ov["fifo"], ov["controlled"]
+    assert fifo["completed"] == ov["n_requests"] and fifo["shed"] == 0
+    assert ctl["completed"] + ctl["shed"] == ov["n_requests"]
+    assert ctl["shed"] > 0 and ctl["shed_rate"] > 0
+    assert set(ctl["shed_reasons"]) <= {"queue_full", "deadline_unmeetable"}
+    assert sum(ctl["shed_reasons"].values()) == ctl["shed"]
+    assert ctl["ttft_steps_p99"] <= fifo["ttft_steps_p99"]
+    assert ctl["ttft_steps_p50"] <= fifo["ttft_steps_p50"]
+    for side in (fifo, ctl):
+        assert side["ttft_steps_p50"] <= side["ttft_steps_p99"]
+        assert side["ttft_p99_s"] > 0 and side["wall_s"] > 0
 
     # the embedded metrics snapshot is the report's flight-data: registry
     # counters + serving latency histograms must be present and non-empty

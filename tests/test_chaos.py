@@ -248,6 +248,81 @@ def test_stream_completes_under_fault(tmp_path, site, kwargs):
         assert len(res2) == len(reqs)
 
 
+# ------------------------------------------------- overload-control chaos --
+def _overload_reqs(cfg):
+    """Deterministic overload trace for MAXLEN=16 engines: two low-priority
+    long decodes fill both slots, a high-priority arrival forces a
+    preemption, and the 8-token prompts exceed the 4-token chunk budget so
+    every admission goes through chunked prefill."""
+    from repro.serve import scheduler as sched
+    rng = np.random.default_rng(3)
+    toks = lambda n: rng.integers(0, cfg.vocab_size, n, dtype=np.int64)
+    return [
+        sched.Request(0, toks(8), 6, arrival=0, priority=0),
+        sched.Request(1, toks(8), 6, arrival=0, priority=0),
+        sched.Request(2, toks(4), 3, arrival=2, priority=5),
+        sched.Request(3, toks(8), 2, arrival=3, priority=1),
+    ]
+
+
+def _overload_serve(eng, reqs):
+    return eng.serve_stream(reqs, max_slots=2, prefill_chunk_tokens=4,
+                            preempt_policy="lowest_priority")
+
+
+OVERLOAD_MATRIX = [
+    # one continuation-prefill chunk fails mid-admission
+    pytest.param("engine.prefill_chunk", {"after": 1, "times": 1},
+                 id="overload-prefill-chunk-fault"),
+    # the preemption bookkeeping site fails while evicting a victim
+    pytest.param("sched.preempt", {"times": 1},
+                 id="overload-preempt-fault"),
+    # zeroing the victim's cache rows fails
+    pytest.param("sched.evict_rows", {"times": 1},
+                 id="overload-evict-rows-fault"),
+]
+
+
+@pytest.mark.parametrize("site,kwargs", OVERLOAD_MATRIX)
+def test_overload_stream_completes_under_fault(tmp_path, site, kwargs):
+    """The overload-control sites: a fault in a prefill chunk (degradation
+    ladder re-runs it on the plain-jnp rung) or in the preemption/eviction
+    bookkeeping (absorbed, lane still parked + requeued) never drops a
+    request — tokens match the fault-free overload run *and* each request's
+    solo run, affected requests are counted degraded, and no slot leaks."""
+    eng = _fresh_engine()
+    reqs = _overload_reqs(eng.cfg)
+    clean = {r.rid: r for r in _overload_serve(eng, reqs)}
+    assert sum(r.preemptions for r in clean.values()) >= 1, \
+        "the overload trace must exercise preemption"
+    before = eng.degraded_requests
+    rule = faults.FaultRule(site, "error", **kwargs)
+    with faults.inject(rule):
+        res = _overload_serve(eng, reqs)
+    assert rule.fired >= 1, "the fault never fired"
+    assert len(res) == len(reqs), "a request was dropped under fault"
+    for r in res:
+        np.testing.assert_array_equal(r.tokens, clean[r.rid].tokens,
+                                      err_msg=f"rid {r.rid} under {site}")
+    # solo parity: the faulted overload stream still serves every request
+    # exactly as if it ran alone
+    for req in reqs:
+        solo = np.asarray(eng.generate(
+            jnp.asarray(np.asarray(req.tokens))[None], req.n_new))[0]
+        np.testing.assert_array_equal(clean[req.rid].tokens, solo,
+                                      err_msg=f"rid {req.rid} vs solo")
+    n_deg = sum(1 for r in res if r.degraded)
+    assert n_deg >= 1, "no request was marked degraded"
+    assert eng.degraded_requests == before + n_deg
+    if site != "engine.prefill_chunk":
+        assert _ctr(f"{site}_fault") >= 1
+    # zero slot leaks: the same engine immediately serves the trace again
+    res2 = _overload_serve(eng, reqs)
+    assert len(res2) == len(reqs)
+    for r in res2:
+        np.testing.assert_array_equal(r.tokens, clean[r.rid].tokens)
+
+
 # ------------------------------------------------------ quarantine/backoff --
 def test_quarantine_backoff_window_respected(tmp_path):
     from repro import compiler

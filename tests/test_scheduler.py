@@ -293,6 +293,205 @@ def _timed(fn):
     return time.perf_counter() - t0
 
 
+# ----------------------------------------------------------------- overload --
+class OverloadChecker:
+    """step_hook for overload traces: the InvariantChecker contract extended
+    with shed accounting, preemption re-admission, queue bounds, and the
+    chunked-prefill snapshot keys."""
+
+    def __init__(self, n_requests: int, max_slots: int,
+                 max_queue=None):
+        self.n, self.max_slots, self.max_queue = \
+            n_requests, max_slots, max_queue
+        self.steps = 0
+        self.admissions = {}            # rid -> times admitted into a slot
+        self.preemptions = {}           # rid -> times preempted
+        self.max_occupancy = 0
+        self.saw_prefilling = False
+
+    def __call__(self, snap):
+        self.steps += 1
+        occ = snap["occupancy"]
+        assert 0 <= occ <= self.max_slots, snap
+        assert occ == len(snap["active"]), "occupancy vs active desync"
+        assert occ + snap["free"] == self.max_slots, "slot leak"
+        rids = list(snap["active"].values())
+        assert len(rids) == len(set(rids)), \
+            f"request in two slots at step {snap['step']}: {snap['active']}"
+        if self.max_queue is not None:
+            assert len(snap["queue"]) <= self.max_queue, \
+                f"admission queue bound exceeded: {snap}"
+        assert set(snap["prefilling"]) <= set(snap["active"]), snap
+        self.saw_prefilling |= bool(snap["prefilling"])
+        for rid in snap["admitted"]:
+            self.admissions[rid] = self.admissions.get(rid, 0) + 1
+        for rid in snap["preempted"]:
+            self.preemptions[rid] = self.preemptions.get(rid, 0) + 1
+        self.max_occupancy = max(self.max_occupancy, occ)
+        # conservation, now including sheds
+        assert (snap["pending"] + len(snap["queue"]) + occ
+                + snap["completed"] + snap["shed"]) == self.n, snap
+
+    def finish(self, completed, shed, requests):
+        done = {r.rid for r in completed}
+        dropped = {s.rid for s in shed}
+        # every submitted request completed or was shed, exactly once each
+        assert done | dropped == {r.rid for r in requests}
+        assert not (done & dropped), "request both completed and shed"
+        assert len(completed) + len(shed) == self.n
+        # shed requests never touched a slot; completed ones were admitted
+        # exactly (1 + preemptions) times
+        assert not (dropped & set(self.admissions)), \
+            "a shed request was admitted into a slot"
+        for r in completed:
+            assert self.admissions.get(r.rid) == 1 + r.preemptions, \
+                (r.rid, self.admissions.get(r.rid), r.preemptions)
+            assert self.preemptions.get(r.rid, 0) == r.preemptions
+        for s in shed:
+            assert s.reason in ("queue_full", "deadline_unmeetable"), s
+
+
+def test_overload_invariants_200_steps_with_preemption(engine):
+    """The acceptance trace: 200+ steps at 2x the service rate with chunked
+    prefill, preemption, deadlines and a bounded queue — every invariant
+    holds, every request completes or is shed with a named reason."""
+    reqs = sched.synthetic_workload(
+        130, seed=13, prompt_lens=(2, 4, 8, 16), new_tokens=(2, 4, 6),
+        arrival_rate=0.35, vocab=engine.cfg.vocab_size,
+        prompt_len_weights=(0.35, 0.3, 0.2, 0.15),
+        deadlines_ms=(10, 20, None), priorities=(0, 1, 2))
+    chk = OverloadChecker(len(reqs), max_slots=2, max_queue=8)
+    completed, shed = engine.serve_stream(
+        reqs, max_slots=2, step_hook=chk, prefill_chunk_tokens=4,
+        preempt_policy="lowest_priority", max_queue=8,
+        deadline_aware=True, return_shed=True)
+    chk.finish(completed, shed, reqs)
+    assert chk.steps >= 200, f"trace too short: {chk.steps} steps"
+    assert chk.max_occupancy == 2
+    assert chk.saw_prefilling, "chunked prefill never engaged"
+    assert sum(chk.preemptions.values()) >= 1, \
+        "the trace never exercised preemption"
+    assert shed, "the trace never exercised shedding"
+    # preempted requests are never shed: they were admitted and must finish
+    assert set(chk.preemptions) <= {r.rid for r in completed}
+
+
+def test_chunked_prefill_token_parity(engine):
+    """Chunked prefill is a pure scheduling change: the same trace served
+    with and without a chunk budget yields identical tokens, and both match
+    solo generation."""
+    reqs = sched.synthetic_workload(6, seed=21, prompt_lens=(3, 9, 17),
+                                    new_tokens=(2, 4), arrival_rate=0.6,
+                                    vocab=engine.cfg.vocab_size)
+    plain = {r.rid: r.tokens for r in engine.serve_stream(reqs)}
+    for chunk in (4, 5):                    # aligned and ragged boundaries
+        chunked = {r.rid: r for r in engine.serve_stream(
+            reqs, prefill_chunk_tokens=chunk)}
+        for r in reqs:
+            np.testing.assert_array_equal(
+                chunked[r.rid].tokens, plain[r.rid],
+                err_msg=f"rid {r.rid} chunk={chunk}")
+    long_req = max(reqs, key=lambda r: r.prompt_len)
+    solo = engine.generate(jnp.asarray(np.asarray(long_req.tokens))[None],
+                           long_req.n_new)
+    np.testing.assert_array_equal(plain[long_req.rid], np.asarray(solo)[0])
+
+
+def test_preempted_request_resumes_bit_exact(engine):
+    """A preempted lane (evicted mid-decode, requeued, re-prefilled with
+    its emitted tokens) finishes with exactly the tokens of its solo run."""
+    rng = np.random.default_rng(0)
+    toks = lambda n: rng.integers(0, engine.cfg.vocab_size, n,
+                                  dtype=np.int64)
+    reqs = [
+        # two low-priority long decodes fill both slots at step 0 ...
+        sched.Request(0, toks(4), 10, arrival=0, priority=0),
+        sched.Request(1, toks(4), 10, arrival=0, priority=0),
+        # ... then a high-priority arrival forces a preemption
+        sched.Request(2, toks(4), 2, arrival=2, priority=5),
+    ]
+    completed, shed = engine.serve_stream(
+        reqs, max_slots=2, preempt_policy="lowest_priority",
+        return_shed=True)
+    assert not shed
+    res = {r.rid: r for r in completed}
+    assert sum(r.preemptions for r in completed) >= 1, \
+        "no preemption happened"
+    for r in reqs:
+        solo = engine.generate(
+            jnp.asarray(np.asarray(r.tokens))[None], r.n_new)
+        np.testing.assert_array_equal(res[r.rid].tokens,
+                                      np.asarray(solo)[0],
+                                      err_msg=f"rid {r.rid}")
+
+
+def test_admission_control_sheds_with_named_reasons(engine):
+    """queue_full fires on a bounded queue under burst arrivals;
+    deadline_unmeetable fires on a deadline no admission could meet.
+    Reason-named counters in the obs snapshot move for both."""
+    def ctr(name):
+        return obs.snapshot(include_views=False)["counters"].get(name, 0)
+    before_qf = ctr("sched.shed.queue_full")
+    before_dl = ctr("sched.shed.deadline_unmeetable")
+    rng = np.random.default_rng(1)
+    toks = lambda n: rng.integers(0, engine.cfg.vocab_size, n,
+                                  dtype=np.int64)
+    reqs = [sched.Request(i, toks(4), 6, arrival=0) for i in range(8)]
+    # rid 8: a deadline even immediate admission cannot meet — it arrives
+    # after the step-0 burst so the bounded queue has room and the shed
+    # reason is the deadline, not the overflow
+    reqs.append(sched.Request(8, toks(8), 8, arrival=2, deadline_ms=1.0))
+    completed, shed = engine.serve_stream(
+        reqs, max_slots=2, max_queue=3, deadline_aware=True,
+        return_shed=True)
+    reasons = {s.rid: s.reason for s in shed}
+    assert reasons.get(8) == "deadline_unmeetable"
+    assert "queue_full" in set(reasons.values())
+    assert len(completed) + len(shed) == len(reqs)
+    assert ctr("sched.shed.queue_full") > before_qf
+    assert ctr("sched.shed.deadline_unmeetable") > before_dl
+
+
+def test_overload_workload_shapes():
+    """synthetic_workload's overload extensions: rate > 1 packs arrivals
+    tighter than service, weights skew lengths, deadlines/priorities attach
+    — all under the same seed contract (old signature bit-identical)."""
+    old = sched.synthetic_workload(16, seed=4, arrival_rate=0.5)
+    again = sched.synthetic_workload(16, seed=4, arrival_rate=0.5)
+    assert [r.arrival for r in old] == [r.arrival for r in again]
+    assert all(r.priority == 0 and r.deadline_ms is None for r in old)
+    hot = sched.synthetic_workload(
+        64, seed=4, arrival_rate=3.0, prompt_lens=(2, 16),
+        prompt_len_weights=(0.9, 0.1), deadlines_ms=(5, None),
+        priorities=(0, 1))
+    hot2 = sched.synthetic_workload(
+        64, seed=4, arrival_rate=3.0, prompt_lens=(2, 16),
+        prompt_len_weights=(0.9, 0.1), deadlines_ms=(5, None),
+        priorities=(0, 1))
+    assert [r.arrival for r in hot] == [r.arrival for r in hot2]
+    assert [r.priority for r in hot] == [r.priority for r in hot2]
+    assert [r.deadline_ms for r in hot] == [r.deadline_ms for r in hot2]
+    # rate 3.0 packs ~3 arrivals per step; span well under n_requests
+    assert hot[-1].arrival < 40
+    assert sum(r.prompt_len == 2 for r in hot) > sum(
+        r.prompt_len == 16 for r in hot)
+    assert {r.priority for r in hot} == {0, 1}
+    assert {r.deadline_ms for r in hot} <= {5.0, None}
+    with pytest.raises(ValueError):
+        sched.synthetic_workload(2, prompt_len_weights=(1.0,))
+    with pytest.raises(ValueError):
+        sched.synthetic_workload(2, priorities=())
+
+
+def test_preempt_policy_validation(engine):
+    with pytest.raises(ValueError, match="preempt_policy"):
+        sched.Scheduler(engine, preempt_policy="steal_everything")
+    with pytest.raises(ValueError, match="prefill_chunk_tokens"):
+        sched.Scheduler(engine, prefill_chunk_tokens=0)
+    with pytest.raises(ValueError, match="max_queue"):
+        sched.Scheduler(engine, max_queue=0)
+
+
 # ------------------------------------------------------------- degradation --
 def test_stream_decode_fault_degrades_not_drops(engine):
     """A decode-step fault mid-stream re-runs on the plain-jnp rung: every

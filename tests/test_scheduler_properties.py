@@ -1,0 +1,133 @@
+"""Property-style scheduler tests (overload controls, docs/serving.md).
+
+Three properties that must hold on *any* seeded overload trace, not just
+the curated ones in ``tests/test_scheduler.py``:
+
+* **Conservation under preemption** — every submitted request is completed
+  or shed exactly once; a completed request was admitted into a slot
+  exactly ``1 + preemptions`` times; a shed request never touched a slot.
+* **Chunk-boundary token parity** — serving with any prefill chunk budget
+  yields bit-identical tokens to serving without one.
+* **Admission-queue bound** — with ``max_queue`` set, the queue depth in
+  every per-step snapshot stays within the bound.
+
+Each property is stated twice, following the idiom of
+``tests/test_registry.py``: once as a ``hypothesis`` ``@given`` test over
+random seeds/shapes (skipped when hypothesis is not installed — see
+``hypothesis_compat``), and once as a deterministic seeded sweep that
+always runs, so the properties stay enforced in every container.
+"""
+import dataclasses
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import load_arch
+from repro.models import model as model_mod
+from repro.serve import scheduler as sched
+from repro.serve.engine import Engine, ServeConfig
+
+sys.path.insert(0, str(Path(__file__).parent))
+from hypothesis_compat import given, settings, st  # noqa: E402
+
+_ENGINE = None
+
+
+def _get_engine():
+    """Lazily-built module engine (plain function, not a fixture, so the
+    ``@given`` tests can reach it under real hypothesis too)."""
+    global _ENGINE
+    if _ENGINE is None:
+        cfg = dataclasses.replace(load_arch("qwen3-0.6b", smoke=True),
+                                  attention_impl="xla_chunked",
+                                  kernel_plan="direct")
+        params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+        _ENGINE = Engine(cfg, params,
+                         ServeConfig(batch=2, max_len=32, warmup=False))
+    return _ENGINE
+
+
+def _workload(seed, n=18, rate=2.0, vocab=None):
+    return sched.synthetic_workload(
+        n, seed=seed, prompt_lens=(2, 5, 9, 14), new_tokens=(1, 3, 5),
+        arrival_rate=rate, vocab=vocab or _get_engine().cfg.vocab_size,
+        prompt_len_weights=(0.4, 0.3, 0.2, 0.1),
+        deadlines_ms=(8, 30, None), priorities=(0, 1))
+
+
+def _check_conservation(seed, rate):
+    eng = _get_engine()
+    reqs = _workload(seed, rate=rate)
+    max_queue = 6
+    admissions, preemptions, depth_ok = {}, {}, []
+
+    def hook(snap):
+        depth_ok.append(len(snap["queue"]) <= max_queue)
+        for rid in snap["admitted"]:
+            admissions[rid] = admissions.get(rid, 0) + 1
+        for rid in snap["preempted"]:
+            preemptions[rid] = preemptions.get(rid, 0) + 1
+        assert (snap["pending"] + len(snap["queue"]) + snap["occupancy"]
+                + snap["completed"] + snap["shed"]) == len(reqs), snap
+
+    completed, shed = eng.serve_stream(
+        reqs, max_slots=2, step_hook=hook, prefill_chunk_tokens=4,
+        preempt_policy="lowest_priority", max_queue=max_queue,
+        deadline_aware=True, return_shed=True)
+    done = {r.rid for r in completed}
+    dropped = {s.rid for s in shed}
+    assert done | dropped == {r.rid for r in reqs}
+    assert not (done & dropped)
+    assert all(depth_ok), "admission-queue bound exceeded"
+    assert not (dropped & set(admissions)), "shed request reached a slot"
+    for r in completed:
+        assert admissions.get(r.rid) == 1 + r.preemptions, \
+            (r.rid, admissions.get(r.rid), r.preemptions)
+        assert preemptions.get(r.rid, 0) == r.preemptions
+
+
+def _check_chunk_parity(seed, chunk):
+    eng = _get_engine()
+    reqs = sched.synthetic_workload(
+        5, seed=seed, prompt_lens=(3, 9, 15), new_tokens=(2, 4),
+        arrival_rate=0.7, vocab=eng.cfg.vocab_size)
+    plain = {r.rid: r.tokens for r in eng.serve_stream(reqs)}
+    chunked = eng.serve_stream(reqs, prefill_chunk_tokens=chunk)
+    for r in chunked:
+        np.testing.assert_array_equal(
+            r.tokens, plain[r.rid],
+            err_msg=f"seed={seed} chunk={chunk} rid={r.rid}")
+
+
+# ------------------------------------------------- hypothesis properties ---
+@given(seed=st.integers(min_value=0, max_value=1 << 12),
+       rate=st.sampled_from([1.5, 2.0, 3.0]))
+@settings(max_examples=8, deadline=None)
+def test_conservation_property(seed, rate):
+    """Property: admitted = completed + shed exactly once each, slot
+    admissions match preemption counts, queue bound holds — any seed."""
+    _check_conservation(seed, rate)
+
+
+@given(seed=st.integers(min_value=0, max_value=1 << 12),
+       chunk=st.integers(min_value=2, max_value=9))
+@settings(max_examples=6, deadline=None)
+def test_chunk_parity_property(seed, chunk):
+    """Property: any chunk budget reproduces the unchunked tokens."""
+    _check_chunk_parity(seed, chunk)
+
+
+# ------------------------------------------------- deterministic sweeps ----
+@pytest.mark.parametrize("seed,rate", [(0, 2.0), (7, 1.5), (23, 3.0)])
+def test_conservation_sweep(seed, rate):
+    """Deterministic sweep of the conservation property (always runs)."""
+    _check_conservation(seed, rate)
+
+
+@pytest.mark.parametrize("seed,chunk", [(1, 4), (2, 7)])
+def test_chunk_parity_sweep(seed, chunk):
+    """Deterministic sweep of the chunk-parity property (always runs)."""
+    _check_chunk_parity(seed, chunk)
