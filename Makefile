@@ -4,7 +4,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-diff bench bench-compiler bench-smoke \
 	bench-serve bench-serve-smoke bench-load-smoke bench-overload-smoke \
-	trace-smoke chaos-smoke
+	trace-smoke chaos-smoke tune-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -72,6 +72,24 @@ bench-overload-smoke:
 # picks up tests/test_chaos.py with the rest of the suite.
 chaos-smoke:
 	$(PY) -m pytest -x -q tests/test_chaos.py
+
+# offline-tuner smoke (docs/robustness.md "Artifact lifecycle"): one fleet
+# pass measures the deduped plan grid under heartbeat-stamped leases and
+# publishes the verified plan artifact; a cold replica then serves from it
+# — its warmup must print "0 freshly measured".  The same contract (plus
+# the lease-reclaim / salvage / per-entry-rejection crash cases) is wired
+# into tier-1 via tests/test_tune.py and the BENCH_serve "warm_start" row.
+tune-smoke:
+	rm -rf /tmp/repro_tune_smoke
+	$(PY) -m repro.launch tune --arch qwen3-0.6b --smoke --batch 2 \
+		--max-len 16 --attention-impl pallas --shards 2 \
+		--work-dir /tmp/repro_tune_smoke \
+		--out /tmp/repro_tune_smoke/plans.artifact.json
+	REPRO_CACHE_DIR=/tmp/repro_tune_smoke/replica \
+	$(PY) -m repro.launch serve --arch qwen3-0.6b --smoke --batch 2 \
+		--prompt-len 8 --new 4 --attention-impl pallas \
+		--kernel-plan measure \
+		--plan-artifact /tmp/repro_tune_smoke/plans.artifact.json
 
 # flight-recorder smoke: one traced Engine.generate() through the serve
 # launcher must produce valid Chrome-trace JSON (nested warmup/prefill/

@@ -152,6 +152,19 @@ def _estimate_sig(estimate) -> Optional[Tuple]:
             estimate.flops_per_block, estimate.fixed_overhead_s)
 
 
+def measure_request_key(graph: Graph, estimate=None, *, factor="auto",
+                        mode: str = "T", autotune="measure") -> str:
+    """The persistent-cache key :func:`compile` assigns this request under
+    the plan registry's measured-autotune path (``factor='auto'``,
+    ``autotune='measure'``, default budgets).  The offline tuner
+    (:mod:`repro.tune`) uses it to enumerate and dedupe work, and to key
+    published artifact entries so a replica's replay compile hits them
+    without re-deriving anything."""
+    return request_key(graph, factor=factor, mode=mode,
+                       vmem_budget=VMEM_BYTES, max_factor=16,
+                       estimate=_estimate_sig(estimate), autotune=autotune)
+
+
 def _valid_plan(plan) -> bool:
     """A usable cached plan must at least replay an integer pump factor —
     anything else (truncated write, hand-edited JSON, schema drift) is
@@ -562,7 +575,7 @@ __all__ = [
     "StreamingPass", "StreamFusionPass", "MultipumpPass", "FifoDepthPass",
     "FusionReport",
     "CompileCache", "QuarantinePolicy", "default_cache",
-    "graph_fingerprint", "request_key",
+    "graph_fingerprint", "request_key", "measure_request_key",
     "CompiledKernel", "LoweringError", "lower",
     "lower_pallas", "partition_regions",
     "BucketPolicy", "PlanRegistry", "default_registry",

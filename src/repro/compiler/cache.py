@@ -282,10 +282,83 @@ class CompileCache:
     def put(self, key: str, value: dict) -> None:
         value = dict(value)
         # stamp the toolchain identity so a later load can count entries
-        # orphaned by a jax upgrade (see _load's stale scan)
+        # orphaned by a jax upgrade (see _load's stale scan), and a creation
+        # time so prune() can age entries out
         value.setdefault("env", _env_fingerprint())
+        value.setdefault("created", time.time())
         self._load()[key] = value
         self._save()
+
+    def put_many(self, values: Dict[str, dict]) -> None:
+        """Install a batch of entries under one locked merge-write (the
+        artifact-preload path: N ``put`` calls would pay N read-merge-write
+        cycles on the shared file)."""
+        if not values:
+            return
+        entries = self._load()
+        now = time.time()
+        for key, value in values.items():
+            value = dict(value)
+            value.setdefault("env", _env_fingerprint())
+            value.setdefault("created", now)
+            entries[key] = value
+        self._save()
+
+    def prune(self, max_age_s: Optional[float] = None,
+              now: Optional[float] = None) -> Dict[str, int]:
+        """Garbage-collect the persistent store under the fcntl lock.
+
+        Three classes of dead weight accumulate forever without this:
+        entries stamped under another jax build (their version is folded
+        into the request key, so no current request can ever hit them),
+        entries older than ``max_age_s`` (when given), and quarantine rows
+        whose backoff window has expired (kept by :meth:`quarantined` so
+        repeat failures back off harder — but an operator-invoked prune is
+        the explicit "forgive history" point).  The whole read-evict-write
+        cycle runs inside :meth:`_lock`, so a concurrent writer's fresh
+        entries are never lost; evictions are counted via ``obs``
+        (``cache.pruned`` per category) and returned."""
+        now = now if now is not None else time.time()
+        evicted = {"stale_env": 0, "aged": 0, "corrupt": 0, "quarantine": 0}
+        env = _env_fingerprint()
+        try:
+            with self._lock():
+                entries, quarantine = self._read_disk()
+                keep: Dict[str, dict] = {}
+                for key, value in entries.items():
+                    if not isinstance(value, dict):
+                        evicted["corrupt"] += 1
+                    elif value.get("env") not in (None, env):
+                        evicted["stale_env"] += 1
+                    elif (max_age_s is not None
+                          and now - value.get("created", now) > max_age_s):
+                        evicted["aged"] += 1
+                    else:
+                        keep[key] = value
+                q_keep: Dict[str, dict] = {}
+                for key, value in quarantine.items():
+                    if (isinstance(value, dict)
+                            and now < value.get("until", 0.0)):
+                        q_keep[key] = value
+                    else:   # window expired (or row corrupt): GC it
+                        evicted["quarantine"] += 1
+                if sum(evicted.values()):
+                    faults.check("cache.save", path=str(self.path))
+                    self.path.parent.mkdir(parents=True, exist_ok=True)
+                    fd, tmp = tempfile.mkstemp(dir=self.path.parent,
+                                               prefix=self.path.name,
+                                               suffix=".tmp")
+                    with os.fdopen(fd, "w") as f:
+                        json.dump({"version": 2, "entries": keep,
+                                   "quarantine": q_keep}, f)
+                    os.replace(tmp, self.path)
+                self._entries, self._quarantine = keep, q_keep
+        except OSError:
+            return evicted    # read-only store: nothing evicted, no crash
+        for kind, n in evicted.items():
+            if n:
+                obs.count("cache.pruned", n, kind=kind, path=str(self.path))
+        return evicted
 
     def clear(self) -> None:
         self._entries = {}

@@ -664,6 +664,63 @@ class PlanRegistry:
                 return jnp.zeros((0, f), x.dtype)
             return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
 
+    # ----------------------------------------------------------- artifact --
+    def preload_artifact(self, path) -> Dict[str, Any]:
+        """Warm-start from a published plan artifact (:mod:`repro.tune`):
+        verify each manifest entry, install the verified plans into this
+        registry's backing store, and let the subsequent :meth:`warmup`
+        *replay* them — zero autotune measurements on the replica.
+
+        Degrades per entry, never whole-artifact: a ``corrupt`` (hash
+        mismatch), ``stale`` (other jax build), ``missing`` (no manifest
+        row) or ``invalid`` entry is rejected (``artifact.rejected``) and
+        recorded in the store's quarantine ledger under ``<key>:artifact``
+        — a suffix :func:`repro.compiler.compile` never gates on, so the
+        local re-measure through the existing degradation ladder proceeds
+        and only the artifact provenance is marked bad.  An unreadable or
+        wrong-schema artifact degrades to an empty preload (full local
+        warmup), counted ``artifact.load_failed``."""
+        from repro.tune import artifact as artifact_mod
+        report: Dict[str, Any] = {"path": str(path), "total": 0,
+                                  "verified": 0, "rejected": 0,
+                                  "missing": 0, "reasons": {}}
+        try:
+            doc = artifact_mod.load(path)
+        except Exception as e:  # noqa: BLE001 — unreadable artifact:
+            # the replica simply tunes locally, as if no artifact existed
+            obs.count("artifact.load_failed", path=str(path),
+                      error=type(e).__name__)
+            report["error"] = repr(e)
+            return report
+        store = self._store()
+        entries = doc["entries"]
+        manifest = doc["manifest"]
+        report["total"] = len(entries)
+        report["missing"] = len(doc.get("missing", []))
+        verified: Dict[str, dict] = {}
+        for key, plan in entries.items():
+            try:
+                reason = artifact_mod.verify_entry(key, plan,
+                                                   manifest.get(key))
+            except Exception as e:  # noqa: BLE001 — injected/exotic
+                # verification failure: treat as a rejected entry
+                reason = f"verify-error:{type(e).__name__}"
+            if reason is None:
+                verified[key] = plan
+                obs.count("artifact.verified", key=key)
+            else:
+                report["rejected"] += 1
+                report["reasons"][reason] = \
+                    report["reasons"].get(reason, 0) + 1
+                obs.count("artifact.rejected", key=key, reason=reason)
+                if store is not None:
+                    store.record_failure(f"{key}:artifact",
+                                         f"artifact:{reason}")
+        report["verified"] = len(verified)
+        if store is not None and verified:
+            store.put_many(verified)
+        return report
+
     # ------------------------------------------------------------- warmup --
     def warmup(self, requests) -> List[Dict[str, Any]]:
         """Pre-measure the bucket grid: ``requests`` is an iterable of
@@ -711,11 +768,18 @@ class PlanRegistry:
                         surfaced.append(msg)
                 tuned = kern.report.autotune or {}
                 emission = kern.report.emission or {}
+                # the winner's measured kernel time (µs) rides along —
+                # fresh *and* replayed plans carry timings_us, so the
+                # engine can seed the scheduler's step-time model from
+                # real plan speed (Engine.measured_step_time_ms)
+                winner_us = tuned.get("timings_us", {}).get(
+                    str(tuned.get("winner")))
                 rec = {
                     "kernel": kernel, "args": list(args),
                     "factor": kern.spec.factor,
                     "measured": tuned.get("policy") == "measure",
                     "replayed": bool(tuned.get("replayed")),
+                    "winner_us": winner_us,
                     "time_s": round(time.perf_counter() - t0, 4),
                     # per-region emission tiers + the degradation reason
                     # strings, so a warmup record alone answers "did this

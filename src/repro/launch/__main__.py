@@ -1,0 +1,22 @@
+"""Subcommand dispatch: ``python -m repro.launch {tune,serve} ...``.
+
+The per-module entry points stay directly runnable
+(``python -m repro.launch.serve``); this wrapper only routes."""
+from __future__ import annotations
+
+import sys
+
+
+def main(argv=None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    commands = {"tune": "repro.launch.tune", "serve": "repro.launch.serve"}
+    if not argv or argv[0] not in commands:
+        known = ", ".join(sorted(commands))
+        sys.exit(f"usage: python -m repro.launch {{{known}}} [args...]")
+    import importlib
+    mod = importlib.import_module(commands[argv[0]])
+    mod.main(argv[1:])
+
+
+if __name__ == "__main__":
+    main()

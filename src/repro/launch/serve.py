@@ -57,6 +57,11 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="override cfg.kernel_plan (measure|direct)")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the plan-registry bucket-grid warmup")
+    ap.add_argument("--plan-artifact", default=None, metavar="PATH",
+                    help="warm-start from a published plan artifact "
+                         "(python -m repro.launch tune): verified entries "
+                         "replay with zero autotune measurements; "
+                         "rejected/missing entries re-measure locally")
     ap.add_argument("--arrival-rate", type=float, default=None,
                     metavar="R",
                     help="traffic-shaped mode: drain a synthetic arrival "
@@ -106,8 +111,20 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     scfg = ServeConfig(batch=args.batch,
                        max_len=args.prompt_len + args.new + 1,
                        temperature=args.temperature,
-                       warmup=not args.no_warmup)
+                       warmup=not args.no_warmup,
+                       plan_artifact=args.plan_artifact)
     eng = Engine(cfg, params, scfg)
+    if eng.artifact_report is not None:
+        a = eng.artifact_report
+        if "error" in a:
+            print(f"[serve] plan artifact UNREADABLE ({a['error']}) — "
+                  f"tuning locally")
+        else:
+            print(f"[serve] plan artifact: {a['verified']}/{a['total']} "
+                  f"entr(ies) verified, {a['rejected']} rejected"
+                  + (f" ({a['reasons']})" if a["rejected"] else "")
+                  + (f", {a['missing']} unmeasured upstream"
+                     if a["missing"] else ""))
     prof = (obs.profile("serve.generate", logdir=args.profile)
             if args.profile else contextlib.nullcontext())
 
@@ -192,7 +209,8 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         tps = args.batch / steady if steady else float("nan")
         print(f"[serve] generated {out.shape} in {dt:.2f}s wall")
         print(f"[serve] warmup: {stats['warmup_s']:.2f}s "
-              f"({stats['plans_warmed']} plans pre-measured); "
+              f"({stats['plans_warmed']} plans warmed, "
+              f"{stats['warmup_measured']} freshly measured); "
               f"compile: prefill {pre.get('compile_s', 0):.2f}s, "
               f"decode {dec.get('compile_s', 0):.2f}s")
         for line in obs.format_phases(stats["phases"]).splitlines():

@@ -48,6 +48,11 @@ class ServeConfig:
     warmup: bool = True
     # override cfg.kernel_plan for this engine ('measure' | 'direct' | None)
     kernel_plan: Optional[str] = None
+    # path to a published plan artifact (repro.tune): warmup verifies and
+    # installs its entries first, so every artifact-covered bucket replays
+    # with zero autotune measurements (docs/robustness.md "Artifact
+    # lifecycle").  None = tune locally at warmup, the classic path.
+    plan_artifact: Optional[str] = None
     # host-side non-finite check on each step's logits, degrading the step
     # to the plain-jnp fallback instead of emitting garbage tokens.  Costs a
     # device sync per token, so it is opt-in; chaos runs get it implicitly
@@ -95,6 +100,7 @@ class Engine:
         self.timer = StepTimer()
         self.warmup_s = 0.0
         self.warmup_report: List[Dict[str, Any]] = []
+        self.artifact_report: Optional[Dict[str, Any]] = None
         # capture the registry once: stats()/warmup() must keep talking to
         # the instance this engine's model layers were warmed against, even
         # if the process default is swapped later (tests/benchmarks do)
@@ -137,6 +143,15 @@ class Engine:
         t0 = time.perf_counter()
         with obs.span("serve.warmup", cat="serve", batch=self.scfg.batch,
                       max_len=self.scfg.max_len) as sp:
+            if self.scfg.plan_artifact:
+                # warm start: verified artifact entries land in the plan
+                # store first, so the grid below *replays* them — zero
+                # measurements for every verified bucket; rejected/missing
+                # entries fall through to the local measured path
+                self.artifact_report = reg.preload_artifact(
+                    self.scfg.plan_artifact)
+                sp.set(artifact_verified=self.artifact_report["verified"],
+                       artifact_rejected=self.artifact_report["rejected"])
             # cached=True: only the plans this cached serving loop can execute
             reqs = transformer.plan_requests(self.cfg, self.scfg.batch,
                                              self.scfg.max_len, dtype=dtype,
@@ -149,6 +164,47 @@ class Engine:
                    failed=sum(1 for r in self.warmup_report if "error" in r))
         self.warmup_s += time.perf_counter() - t0
         return self.warmup_report
+
+    # ------------------------------------------------- step-time estimate --
+    def measured_step_time_ms(self) -> Optional[float]:
+        """Measured decode-step estimate (ms) for the scheduler's virtual
+        clock, or None when nothing has been measured yet.
+
+        Preference order: the p50 of real decode steps this engine has
+        already served (the ``serve.decode_step_s`` histogram — at least
+        three samples, so one cold compile outlier cannot be the estimate),
+        else a floor estimate from the measured plan timings the warmup /
+        artifact carried (winner kernel time per decode kernel × the layer
+        count that runs it).  The plan-derived floor excludes XLA glue
+        around the kernels, so it under-estimates — still far closer to
+        real plan speed than a constant, which is the point: deadline-aware
+        shedding should reflect what the measured plans can actually do."""
+        if self._step_hist.count >= 3:
+            p50 = self._step_hist.percentile(50)
+            if p50:
+                return p50 * 1e3
+        # plan-derived floor: worst (largest-bucket) winner per decode
+        # kernel, scaled by how many layers run it
+        best: Dict[str, float] = {}
+        for rec in self.warmup_report:
+            us = rec.get("winner_us")
+            kern = rec.get("kernel")
+            if us and kern in ("decode_attention", "ssd_decode"):
+                best[kern] = max(best.get(kern, 0.0), float(us))
+        if not best:
+            return None
+        cfg = self.cfg
+        if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+            n_attn = cfg.n_layers // cfg.hybrid_attn_every
+        elif cfg.family == "ssm":
+            n_attn = 0
+        else:
+            n_attn = cfg.n_layers
+        n_ssm = cfg.n_layers - n_attn if cfg.family in ("ssm", "hybrid") \
+            else 0
+        ms = (best.get("decode_attention", 0.0) * n_attn
+              + best.get("ssd_decode", 0.0) * n_ssm) / 1e3
+        return ms or None
 
     # ------------------------------------------------------------ serving --
     def _fallback(self):
@@ -318,7 +374,7 @@ class Engine:
                      preempt_policy: Optional[str] = None,
                      max_queue: Optional[int] = None,
                      deadline_aware: bool = False,
-                     step_time_ms: float = 1.0,
+                     step_time_ms: Optional[float] = None,
                      return_shed: bool = False):
         """Serve a *stream* of requests through the continuous-batching
         scheduler (:mod:`repro.serve.scheduler`): ``max_slots`` decode
@@ -341,8 +397,21 @@ class Engine:
         reason ``queue_full``), and ``deadline_aware=True`` sheds requests
         whose ``deadline_ms`` is provably unmeetable.  With
         ``return_shed=True`` the result is ``(completed, shed)``.
+
+        ``step_time_ms`` maps wall-clock deadlines onto the scheduler's
+        virtual step clock.  ``None`` (the default) seeds it from measured
+        timings (:meth:`measured_step_time_ms` — served-step p50, else the
+        warmup/artifact plan timings), falling back to the 1.0 ms constant
+        only when nothing has been measured — so ``deadline_unmeetable``
+        sheds reflect real plan speed, not a guess.
         """
         from . import scheduler as sched_mod
+        if step_time_ms is None:
+            measured = self.measured_step_time_ms()
+            step_time_ms = measured if measured else 1.0
+            obs.count("sched.step_time_seeded",
+                      source="measured" if measured else "constant",
+                      step_time_ms=round(step_time_ms, 4))
         sched = sched_mod.Scheduler(self, max_slots=max_slots,
                                     collect_logits=collect_logits,
                                     step_hook=step_hook,
@@ -367,6 +436,12 @@ class Engine:
             "plans_warmed": len(self.warmup_report),
             "warmup_failed": sum(1 for r in self.warmup_report
                                  if "error" in r),
+            # fresh measurements paid at warmup: the warm-start assertion
+            # surface — an artifact-loaded replica must show 0 here
+            "warmup_measured": sum(1 for r in self.warmup_report
+                                   if r.get("measured")
+                                   and not r.get("replayed")),
+            "artifact": self.artifact_report,
             "degraded_requests": self.degraded_requests,
             "phases": self.timer.stats(),
             "registry": reg.stats.as_dict() if reg is not None else None,

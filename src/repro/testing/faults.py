@@ -58,6 +58,10 @@ each to its expected degradation rung):
 ``sched.slot_free``  scheduler lane reclamation at request completion
 ``sched.preempt``    scheduler slot preemption (park + requeue)
 ``sched.evict_rows`` cache-row eviction of a preempted lane
+``tune.lease``       one lease-ledger mutation (init/claim/heartbeat/
+                     complete — the offline tuner's work partitioning)
+``artifact.load``    plan-artifact read/parse (check *and* text mangle)
+``artifact.verify``  per-entry artifact manifest verification
 ===================  ======================================================
 """
 from __future__ import annotations

@@ -1,0 +1,29 @@
+"""``repro.tune`` — fault-tolerant offline autotuning.
+
+Splits plan tuning from serving: an offline worker fleet measures the
+(kernel × bucket × pump-factor) grid once, publishes a verified plan
+artifact, and every serving replica warm-starts from it with **zero**
+autotune measurements (``launch.serve --plan-artifact``).
+
+* :mod:`.grid` — enumerate the warmup grid, dedupe by compile-cache
+  content hash (measure one representative per group).
+* :mod:`.lease` — file-backed lease ledger: workers claim shards under
+  heartbeat-stamped leases; an expired lease (dead worker) is reclaimed.
+* :mod:`.worker` — the claim → measure → complete loop.
+* :mod:`.artifact` — schema-versioned artifact with a per-entry verified
+  manifest; partial-result salvage.
+
+See docs/robustness.md "Artifact lifecycle" for the failure matrix.
+"""
+from . import artifact, grid, lease, worker
+from .artifact import ARTIFACT_SCHEMA, load, publish, verify_entry
+from .grid import WorkGroup, WorkItem, enumerate_work, shard_groups
+from .lease import LeaseLedger
+from .worker import TunerWorker, WorkerReport, run_fleet
+
+__all__ = [
+    "artifact", "grid", "lease", "worker",
+    "ARTIFACT_SCHEMA", "load", "publish", "verify_entry",
+    "WorkGroup", "WorkItem", "enumerate_work", "shard_groups",
+    "LeaseLedger", "TunerWorker", "WorkerReport", "run_fleet",
+]

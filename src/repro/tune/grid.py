@@ -1,0 +1,118 @@
+"""Tuning-grid enumeration + content-hash dedupe.
+
+The offline tuner measures exactly the plans a serving replica would warm:
+:func:`repro.models.transformer.plan_requests` enumerates the
+(kernel × bucket) grid, each request canonicalizes through the same
+``PlanRegistry`` request builders the serving wrappers use, and the
+compile-cache content hash (:func:`repro.compiler.measure_request_key`)
+keys the work.  Two requests that hash to the same key are *the same
+measurement* — the grid groups them and the tuner measures one
+representative per group, the hash-grouped dedupe structure of DaCe's
+distributed cutout tuner (arXiv 2210.04598): results land in the shared
+store under the group key, so every member replays the one measurement.
+
+Shards partition the groups round-robin; a shard is the unit of lease in
+:mod:`.lease` (one worker owns one shard at a time).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro import obs
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkItem:
+    """One (kernel, bucket) measurement request, canonicalized.
+
+    ``args``/``kwargs`` are the registry-canonical builder arguments (the
+    exact key the serving wrapper will look the plan up under) and ``key``
+    the compile-cache content hash of the measured-autotune request."""
+
+    kernel: str
+    spec: Tuple[Tuple[str, Any], ...]       # the plan_requests shape kwargs
+    args: Tuple
+    kwargs: Tuple[Tuple[str, Any], ...]
+    key: str
+
+    def builder_kwargs(self) -> Dict[str, Any]:
+        return dict(self.kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkGroup:
+    """All work items sharing one content hash: measure ``items[0]`` (the
+    representative), and every member is served by the same cache entry."""
+
+    key: str
+    items: Tuple[WorkItem, ...]
+
+    @property
+    def representative(self) -> WorkItem:
+        return self.items[0]
+
+
+def enumerate_work(cfg, batch: int, max_len: int, *, dtype=None,
+                   policy=None) -> List[WorkGroup]:
+    """The deduped tuning grid for one serving shape.
+
+    Deterministic in ``(cfg, batch, max_len, dtype)`` — every tuner worker
+    re-derives the identical group list from the config, so shards can be
+    referenced by index across processes without shipping the work list."""
+    from repro.compiler import measure_request_key
+    from repro.compiler.registry import PlanRegistry
+    from repro.core.autopump import BUILDERS
+    from repro.models import transformer
+
+    if not getattr(cfg, "fresh_prefill_kernel", True):
+        # mirror the Engine's construction-time normalization: its prefill
+        # always builds a fresh cache, so it serves with the flash prefill
+        # route on — the tuner must cover that grid or the replica pays
+        # the prefill measurements locally
+        cfg = dataclasses.replace(cfg, fresh_prefill_kernel=True)
+    reg = PlanRegistry(policy)          # bucket math only; never compiles
+    canon = {"flash_attention": reg.flash_request,
+             "ssd_scan": reg.ssd_request,
+             "grouped_gemm": reg.grouped_request,
+             "decode_attention": reg.decode_request,
+             "ssd_decode": reg.ssd_decode_request}
+    groups: Dict[str, List[WorkItem]] = {}
+    reqs = transformer.plan_requests(cfg, batch, max_len, dtype=dtype,
+                                     policy=reg.policy, cached=True)
+    for kernel, spec in reqs:
+        args, kwargs, _pads = canon[kernel](**spec)
+        g, est = BUILDERS[kernel](*args, **kwargs)
+        key = measure_request_key(g, est)
+        item = WorkItem(kernel=kernel, spec=tuple(sorted(spec.items())),
+                        args=tuple(args),
+                        kwargs=tuple(sorted(kwargs.items())), key=key)
+        groups.setdefault(key, []).append(item)
+    out = [WorkGroup(key=key, items=tuple(items))
+           for key, items in groups.items()]
+    deduped = sum(len(g.items) - 1 for g in out)
+    if deduped:
+        obs.count("tune.grid_deduped", deduped)
+    obs.count("tune.grid_groups", len(out))
+    return out
+
+
+def shard_groups(groups: List[WorkGroup],
+                 n_shards: int) -> Dict[str, List[WorkGroup]]:
+    """Round-robin partition of the group list into named shards.  Group
+    order is the enumeration order (deterministic), so every worker derives
+    the same shard → groups mapping independently."""
+    n = max(1, min(int(n_shards), len(groups)) if groups else 1)
+    shards: Dict[str, List[WorkGroup]] = {f"shard-{i}": [] for i in range(n)}
+    for i, group in enumerate(groups):
+        shards[f"shard-{i % n}"].append(group)
+    return shards
+
+
+def shard_keys(shards: Dict[str, List[WorkGroup]]) -> Dict[str, List[str]]:
+    """The ledger-facing view: shard name → group content hashes."""
+    return {name: [g.key for g in groups] for name, groups in shards.items()}
+
+
+__all__ = ["WorkItem", "WorkGroup", "enumerate_work", "shard_groups",
+           "shard_keys"]

@@ -1,0 +1,198 @@
+"""Tuner worker: claim shards, measure representatives, survive being shot.
+
+A worker is a loop over the lease ledger::
+
+    claim shard -> for each group: measure representative (heartbeating
+    between measurements) -> complete shard -> claim next -> ... until the
+    ledger has nothing claimable
+
+Measurements run through a private :class:`PlanRegistry` backed by the
+*shared* :class:`CompileCache` store — the same measured-autotune path a
+serving replica's warmup uses, so results persist under the content-hash
+key with merge-on-write cross-process safety.  Re-measuring a reclaimed
+shard is therefore idempotent: keys the dead worker already finished are
+replays (no timing runs), only the genuinely unmeasured remainder pays.
+
+Failure handling: a lost heartbeat abandons the shard (the new owner has
+it), a ledger I/O fault (``tune.lease`` injection, flaky filesystem)
+retries after a backoff, and a failed measurement records the key as
+failed but keeps the shard progressing — one unplannable bucket must not
+wedge the fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from repro import obs
+from repro.compiler.cache import CompileCache
+from repro.compiler.registry import PlanRegistry
+
+from . import grid as grid_mod
+from .lease import LeaseLedger
+
+
+@dataclasses.dataclass
+class WorkerReport:
+    worker: str
+    shards_done: List[str] = dataclasses.field(default_factory=list)
+    shards_lost: List[str] = dataclasses.field(default_factory=list)
+    measured: int = 0
+    replayed: int = 0
+    failed: Dict[str, str] = dataclasses.field(default_factory=dict)
+    lease_errors: int = 0
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class TunerWorker:
+    """One fleet member.  ``shards`` is the shard → [WorkGroup] map every
+    worker derives deterministically from the config (see
+    :func:`repro.tune.grid.shard_groups`)."""
+
+    def __init__(self, worker_id: str, ledger: LeaseLedger,
+                 store: CompileCache,
+                 shards: Dict[str, List[grid_mod.WorkGroup]], *,
+                 backend: str = "pallas", claim_retries: int = 3,
+                 retry_sleep_s: float = 0.05,
+                 measure_hook=None):
+        self.worker_id = worker_id
+        self.ledger = ledger
+        self.store = store
+        self.shards = shards
+        self.claim_retries = claim_retries
+        self.retry_sleep_s = retry_sleep_s
+        # test seam: called before each measurement (two-process tests park
+        # a worker here to die mid-lease)
+        self._measure_hook = measure_hook
+        self._reg = PlanRegistry(pump="measure", backend=backend,
+                                 cache=store, spot_check="finite")
+
+    # ------------------------------------------------------------------ run --
+    def run(self) -> WorkerReport:
+        """Drain the ledger: claim + measure until nothing is claimable.
+        Ledger faults degrade to bounded retries, never a crash."""
+        rep = WorkerReport(worker=self.worker_id)
+        with obs.span("tune.worker", cat="tune", worker=self.worker_id):
+            while True:
+                claimed = self._claim(rep)
+                if claimed is None:
+                    break
+                shard, keys = claimed
+                self._run_shard(rep, shard, keys)
+        return rep
+
+    def _claim(self, rep: WorkerReport):
+        for attempt in range(self.claim_retries):
+            try:
+                return self.ledger.claim(self.worker_id)
+            except Exception as e:  # noqa: BLE001 — ledger fault: retry
+                rep.lease_errors += 1
+                obs.count("tune.lease_error", worker=self.worker_id,
+                          op="claim", error=type(e).__name__)
+                if attempt + 1 < self.claim_retries:
+                    time.sleep(self.retry_sleep_s)
+        return None
+
+    def _heartbeat(self, rep: WorkerReport, shard: str) -> bool:
+        try:
+            return self.ledger.heartbeat(self.worker_id, shard)
+        except Exception as e:  # noqa: BLE001 — ledger fault ≠ lost lease:
+            # the lease may still be ours on disk; keep measuring (results
+            # are idempotent either way) and let complete() arbitrate
+            rep.lease_errors += 1
+            obs.count("tune.lease_error", worker=self.worker_id,
+                      op="heartbeat", error=type(e).__name__)
+            return True
+
+    def _run_shard(self, rep: WorkerReport, shard: str,
+                   keys: List[str]) -> None:
+        groups = {g.key: g for g in self.shards.get(shard, [])}
+        with obs.span("tune.shard", cat="tune", shard=shard,
+                      worker=self.worker_id, keys=len(keys)) as sp:
+            for key in keys:
+                group = groups.get(key)
+                if group is None:     # ledger/grid drift: count, skip
+                    obs.count("tune.unknown_key", shard=shard, key=key)
+                    continue
+                if not self._heartbeat(rep, shard):
+                    rep.shards_lost.append(shard)
+                    sp.set(lost=True)
+                    return            # reclaimed: the new owner has it
+                self._measure(rep, group)
+            try:
+                done = self.ledger.complete(self.worker_id, shard)
+            except Exception as e:  # noqa: BLE001 — ledger fault on the
+                # final write: the measurements are safely in the store;
+                # the shard stays leased and expires back to the pool,
+                # where the next claim replays it for free
+                rep.lease_errors += 1
+                obs.count("tune.lease_error", worker=self.worker_id,
+                          op="complete", error=type(e).__name__)
+                done = False
+            if done:
+                rep.shards_done.append(shard)
+            else:
+                rep.shards_lost.append(shard)
+            sp.set(done=done)
+
+    def _measure(self, rep: WorkerReport, group: grid_mod.WorkGroup) -> None:
+        """Measure one group representative through the registry's
+        measured-autotune path; the result lands in the shared store under
+        the group's content hash (every member replays it)."""
+        item = group.representative
+        if self._measure_hook is not None:
+            self._measure_hook(item)
+        try:
+            kern = self._reg.kernel(item.kernel, item.args,
+                                    item.builder_kwargs())
+        except Exception as e:  # noqa: BLE001 — one bad bucket ≠ dead fleet
+            rep.failed[group.key] = repr(e)
+            obs.count("tune.measure_failed", kernel=item.kernel,
+                      error=type(e).__name__)
+            return
+        tuned = kern.report.autotune or {}
+        if tuned and not tuned.get("replayed"):
+            rep.measured += 1
+        else:
+            rep.replayed += 1
+
+
+def run_fleet(cfg, batch: int, max_len: int, *, ledger_path, store_path,
+              out_path=None, dtype=None, n_shards: int = 4,
+              worker_id: str = "worker-0", ttl_s: float = 30.0,
+              backend: str = "pallas",
+              measure_hook=None) -> Dict:
+    """One worker's end-to-end tuner pass: derive the grid, register the
+    shards, drain the ledger, and (when ``out_path`` is given and at least
+    one shard is done) publish the artifact — publishing is salvage-aware,
+    so a partially-tuned ledger still yields a usable artifact."""
+    from . import artifact as artifact_mod
+    groups = grid_mod.enumerate_work(cfg, batch, max_len, dtype=dtype)
+    shards = grid_mod.shard_groups(groups, n_shards)
+    ledger = LeaseLedger(ledger_path, ttl_s=ttl_s)
+    for attempt in range(3):
+        try:
+            ledger.init_shards(grid_mod.shard_keys(shards))
+            break
+        except Exception as e:  # noqa: BLE001 — ledger fault: bounded retry;
+            # even a dead ledger only costs parallelism (claim yields None
+            # and publish still salvages whatever the store holds)
+            obs.count("tune.lease_error", worker=worker_id, op="init",
+                      error=type(e).__name__)
+            time.sleep(0.05)
+    store = CompileCache(store_path)
+    worker = TunerWorker(worker_id, ledger, store, shards, backend=backend,
+                         measure_hook=measure_hook)
+    rep = worker.run()
+    out = {"worker": rep.as_dict(), "ledger": ledger.states(),
+           "groups": len(groups),
+           "work_items": sum(len(g.items) for g in groups)}
+    if out_path is not None:
+        out["artifact"] = artifact_mod.publish(store, groups, out_path)
+    return out
+
+
+__all__ = ["TunerWorker", "WorkerReport", "run_fleet"]

@@ -66,7 +66,7 @@ def test_serve_bench_smoke_writes_json(bench_cache, tmp_path, capsys):
     report = serve_report.run_report(smoke=True, out_path=out)
     assert out.exists()
     assert json.loads(out.read_text())["smoke"] is True
-    assert report["schema"] >= 4
+    assert report["schema"] >= 5
 
     layers = {e["layer"]: e for e in report["entries"]}
     assert set(layers) == {"attention", "ssm", "moe",
@@ -181,6 +181,26 @@ def test_serve_bench_smoke_writes_json(bench_cache, tmp_path, capsys):
     for side in (fifo, ctl):
         assert side["ttft_steps_p50"] <= side["ttft_steps_p99"]
         assert side["ttft_p99_s"] > 0 and side["wall_s"] > 0
+
+    # schema 5: the warm-start row exists fail-loud.  An offline tuner
+    # fleet published a complete verified artifact, and the cold replica
+    # preloading it did ZERO fresh autotune measurements at warmup — both
+    # by the engine's own warmup accounting and by the registry.measure
+    # counter delta.  A nonzero count means replicas silently re-tune and
+    # the offline fleet is decorative.
+    ws = report["warm_start"]
+    assert ws["artifact_complete"] is True
+    assert ws["artifact_entries"] == ws["groups"] >= 1
+    assert ws["grid_dedupe"] >= 0
+    assert ws["artifact_verified"] == ws["artifact_entries"]
+    assert ws["artifact_rejected"] == 0
+    assert ws["replica_warmup_measured"] == 0, ws
+    assert ws["replica_measure_delta"] == 0, ws
+    assert ws["plans_warmed"] >= 1
+    assert ws["tune_s"] > 0 and ws["replica_warmup_s"] > 0
+    # the scheduler's virtual clock can seed from the artifact's measured
+    # winner timings before a single step has been served
+    assert ws["step_time_seed_ms"] is not None and ws["step_time_seed_ms"] > 0
 
     # the embedded metrics snapshot is the report's flight-data: registry
     # counters + serving latency histograms must be present and non-empty

@@ -503,3 +503,118 @@ def test_trainer_wires_heartbeat_and_straggler(tmp_path):
     assert pol.base_pump == out["pump"]
     snap = obs.snapshot(include_views=False)
     assert snap["gauges"].get("train.pump_derated") == out["pump"]
+
+
+# ------------------------------------------------------- artifact warm start --
+# Offline-tuner chaos (docs/robustness.md "Artifact lifecycle"): the
+# warm-start path must degrade exactly like every other rung — an unreadable
+# or corrupt artifact costs measurements, never correctness or availability.
+ARTIFACT_MATRIX = [
+    pytest.param("artifact.load", "io_error", "artifact.load_failed",
+                 id="artifact-io-error"),
+    pytest.param("artifact.load", "garbage", "artifact.load_failed",
+                 id="artifact-garbage"),
+    pytest.param("artifact.verify", "error", "artifact.rejected",
+                 id="artifact-verify-error"),
+]
+
+
+@pytest.fixture(scope="module")
+def tuned_artifact(tmp_path_factory):
+    """Fault-free tuner fleet pass: the complete verified artifact every
+    artifact-chaos case warm-starts from.  Module-scoped like `baseline` —
+    one measured grid pays for all cases."""
+    from repro import compiler
+    from repro.tune.worker import run_fleet
+    work = tmp_path_factory.mktemp("tuner")
+    prev_env = os.environ.get("REPRO_CACHE_DIR")
+    os.environ["REPRO_CACHE_DIR"] = str(work / "cache")
+    prev_reg = set_default_registry(None)
+    try:
+        compiler.clear_memo()
+        cfg = dataclasses.replace(load_arch(ARCH, smoke=True),
+                                  attention_impl="pallas")
+        out = run_fleet(cfg, BATCH, MAXLEN,
+                        ledger_path=work / "ledger.json",
+                        store_path=work / "tuner_cache.json",
+                        out_path=work / "plans.artifact.json", n_shards=2,
+                        worker_id="chaos-tuner")
+        assert out["artifact"]["complete"] is True
+    finally:
+        if prev_env is None:
+            os.environ.pop("REPRO_CACHE_DIR", None)
+        else:
+            os.environ["REPRO_CACHE_DIR"] = prev_env
+        set_default_registry(prev_reg)
+    return work / "plans.artifact.json"
+
+
+def _warm_engine(artifact_path) -> Engine:
+    """_fresh_engine with the plan artifact preloaded at warmup."""
+    from repro import compiler
+    compiler.clear_memo()
+    set_default_registry(PlanRegistry())
+    cfg = dataclasses.replace(load_arch(ARCH, smoke=True),
+                              attention_impl="pallas")
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg, params,
+                  ServeConfig(batch=BATCH, max_len=MAXLEN,
+                              plan_artifact=str(artifact_path)))
+
+
+@pytest.mark.parametrize("site,action,counter", ARTIFACT_MATRIX)
+def test_serve_completes_under_artifact_fault(baseline, tuned_artifact,
+                                              site, action, counter):
+    """A faulted artifact load/verify degrades to local measurement — the
+    replica warms up the classic way, serves fault-free tokens at parity,
+    and the degradation is counted, never silent."""
+    before = _ctr(counter)
+    injected = _ctr("faults.injected")
+    with faults.inject(faults.FaultRule(site, action)):
+        eng = _warm_engine(tuned_artifact)
+        toks, lgs = _serve(eng)
+    _assert_parity(baseline, toks, lgs)
+    assert _ctr("faults.injected") > injected, "the fault never fired"
+    assert _ctr(counter) > before, \
+        f"{counter} did not move under a {site}/{action} fault"
+    stats = eng.stats()
+    assert stats["warmup_failed"] == 0
+    if site == "artifact.verify":
+        # per-entry degrade: every entry rejected, none preloaded, and the
+        # local re-measure served the whole grid anyway
+        assert stats["artifact"]["rejected"] == stats["artifact"]["total"] > 0
+        assert stats["artifact"]["verified"] == 0
+    else:
+        # whole-file degrade: the preload reports the load error and the
+        # warmup proceeds exactly as if no artifact existed
+        assert "error" in stats["artifact"]
+        assert stats["artifact"]["verified"] == 0
+
+
+def test_tuner_survives_lease_faults(baseline, tmp_path):
+    """Ledger I/O faults mid-fleet (`tune.lease` io_error) cost bounded
+    retries, not the run: the fleet still completes the grid, publishes a
+    complete artifact, and a replica warm-starts from it with zero
+    measurements at full parity."""
+    from repro.tune.worker import run_fleet
+    cfg = dataclasses.replace(load_arch(ARCH, smoke=True),
+                              attention_impl="pallas")
+    rule = faults.FaultRule("tune.lease", "io_error", times=2)
+    with faults.inject(rule):
+        out = run_fleet(cfg, BATCH, MAXLEN,
+                        ledger_path=tmp_path / "ledger.json",
+                        store_path=tmp_path / "tuner_cache.json",
+                        out_path=tmp_path / "plans.artifact.json",
+                        n_shards=2, worker_id="chaos-tuner")
+    assert rule.fired >= 1, "the lease fault never fired"
+    assert out["artifact"]["complete"] is True
+    assert not out["worker"]["failed"]
+
+    # warm-start replica in a genuinely cold cache dir: zero measurements
+    os.environ["REPRO_CACHE_DIR"] = str(tmp_path / "replica-cache")
+    measured = _ctr("registry.measure")
+    eng = _warm_engine(tmp_path / "plans.artifact.json")
+    toks, lgs = _serve(eng)
+    _assert_parity(baseline, toks, lgs)
+    assert eng.stats()["warmup_measured"] == 0
+    assert _ctr("registry.measure") == measured

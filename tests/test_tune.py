@@ -1,0 +1,475 @@
+"""Tier-1 wiring for the offline tuner (`make tune-smoke`).
+
+Covers the four layers of the fault-tolerant autotuning pipeline
+(docs/robustness.md "Artifact lifecycle"):
+
+* grid enumeration — deterministic, content-hash-deduped work groups;
+* the lease ledger — claim/heartbeat/expiry-reclaim/complete semantics,
+  driven with explicit clocks so the crash cases are exact, plus a real
+  two-process SIGKILL: the survivor reclaims the dead worker's shard and
+  the published artifact is complete and manifest-valid;
+* the artifact — publish/load/verify round trip, partial-result salvage,
+  and per-entry rejection (corrupt / stale) degrading to local re-measure;
+* the replica — `ServeConfig.plan_artifact` warm start doing ZERO autotune
+  measurements at warmup (the `make tune-smoke` acceptance).
+"""
+import dataclasses
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.compiler.cache import CompileCache
+from repro.compiler.registry import PlanRegistry, set_default_registry
+from repro.configs.base import load_arch
+from repro.models import model as model_mod
+from repro.serve.engine import Engine, ServeConfig
+from repro.testing import faults
+from repro.tune import artifact as artifact_mod
+from repro.tune import grid as grid_mod
+from repro.tune.lease import LeaseLedger
+from repro.tune.worker import run_fleet
+
+ARCH = "qwen3-0.6b"
+BATCH, MAXLEN = 2, 16
+
+
+def _ctr(name: str) -> int:
+    return obs.snapshot(include_views=False)["counters"].get(name, 0)
+
+
+def _cfg():
+    return dataclasses.replace(load_arch(ARCH, smoke=True),
+                               attention_impl="pallas")
+
+
+def _replica(artifact_path, cache_dir, monkeypatch) -> Engine:
+    """Fresh-replica simulation: cold kernel memo, its own empty persistent
+    cache, a fresh default registry, and the artifact preloaded at warmup."""
+    from repro import compiler
+    compiler.clear_memo()
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(cache_dir))
+    set_default_registry(PlanRegistry())
+    cfg = _cfg()
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg, params,
+                  ServeConfig(batch=BATCH, max_len=MAXLEN,
+                              plan_artifact=str(artifact_path)))
+
+
+@pytest.fixture(autouse=True)
+def _tune_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "cache"))
+    old = set_default_registry(None)
+    yield
+    faults.clear()
+    set_default_registry(old)
+
+
+# ------------------------------------------------------------------- grid --
+def test_grid_is_deterministic_and_deduped():
+    cfg = _cfg()
+    a = grid_mod.enumerate_work(cfg, BATCH, MAXLEN)
+    b = grid_mod.enumerate_work(cfg, BATCH, MAXLEN)
+    assert [g.key for g in a] == [g.key for g in b]
+    assert a, "smoke grid enumerated no work"
+    for g in a:
+        # every member of a group shares the representative's content hash
+        assert all(item.key == g.key for item in g.items)
+        assert g.representative is g.items[0]
+    # groups are distinct measurements
+    assert len({g.key for g in a}) == len(a)
+
+
+def test_grid_shards_partition_everything():
+    groups = grid_mod.enumerate_work(_cfg(), BATCH, MAXLEN)
+    shards = grid_mod.shard_groups(groups, 3)
+    flat = [g.key for lst in shards.values() for g in lst]
+    assert sorted(flat) == sorted(g.key for g in groups)
+    keys = grid_mod.shard_keys(shards)
+    assert set(keys) == set(shards)
+    assert all(keys[s] == [g.key for g in shards[s]] for s in shards)
+
+
+def test_grid_dedupes_equal_decode_buckets():
+    """Two decode positions in the same bucket hash to one measurement."""
+    from repro.compiler import measure_request_key
+    from repro.core.autopump import BUILDERS
+    reg = PlanRegistry()
+    keys = []
+    for t in (9, 12):      # both bucket to the same padded decode shape
+        args, kwargs, _ = reg.decode_request(b=BATCH, h=2, hkv=1, t=t,
+                                             d=16, dtype="float32")
+        g, est = BUILDERS["decode_attention"](*args, **kwargs)
+        keys.append(measure_request_key(g, est))
+    assert keys[0] == keys[1]
+
+
+# ------------------------------------------------------------------ lease --
+def test_lease_claim_heartbeat_complete(tmp_path):
+    led = LeaseLedger(tmp_path / "ledger.json", ttl_s=10.0)
+    led.init_shards({"shard-0": ["k0"], "shard-1": ["k1"]})
+    assert led.states() == {"pending": 2}
+
+    got = led.claim("a", now=100.0)
+    assert got == ("shard-0", ["k0"])
+    assert led.claim("b", now=100.0) == ("shard-1", ["k1"])
+    # nothing claimable while both leases are live
+    assert led.claim("c", now=101.0) is None
+
+    assert led.heartbeat("a", "shard-0", now=105.0) is True
+    assert led.complete("a", "shard-0", now=106.0) is True
+    assert led.complete("b", "shard-1", now=106.0) is True
+    assert led.all_done()
+    assert led.done_keys() == ["k0", "k1"]
+    # init after completion is a no-op — finished work is never reopened
+    led.init_shards({"shard-0": ["k0"], "shard-1": ["k1"]})
+    assert led.states() == {"done": 2}
+
+
+def test_lease_expiry_reclaim_blocks_double_publish(tmp_path):
+    """The crash story with an explicit clock: worker a dies mid-lease,
+    worker b reclaims after expiry, and a's late heartbeat/complete are
+    rejected — the reclaimed shard can only be published once."""
+    led = LeaseLedger(tmp_path / "ledger.json", ttl_s=10.0)
+    led.init_shards({"shard-0": ["k0"]})
+    assert led.claim("a", now=100.0) == ("shard-0", ["k0"])
+
+    # before expiry the lease holds; at expiry it is claimable
+    assert led.claim("b", now=105.0) is None
+    reclaimed = _ctr("tune.lease_reclaimed")
+    assert led.claim("b", now=110.5) == ("shard-0", ["k0"])
+    assert _ctr("tune.lease_reclaimed") > reclaimed
+
+    # the dead worker wakes up late: every mutation is rejected
+    lost = _ctr("tune.lease_lost")
+    assert led.heartbeat("a", "shard-0", now=111.0) is False
+    assert led.complete("a", "shard-0", now=111.0) is False
+    assert _ctr("tune.lease_lost") >= lost + 2
+    # the new owner still completes normally
+    assert led.complete("b", "shard-0", now=112.0) is True
+    assert led.snapshot()["shard-0"]["attempts"] == 2
+
+
+def test_lease_release_returns_shard_to_pool(tmp_path):
+    led = LeaseLedger(tmp_path / "ledger.json", ttl_s=10.0)
+    led.init_shards({"shard-0": ["k0"]})
+    assert led.claim("a", now=100.0) is not None
+    led.release("a", "shard-0")
+    assert led.states() == {"pending": 1}
+    assert led.claim("b", now=101.0) == ("shard-0", ["k0"])
+    # release by a non-owner is a no-op
+    led.release("a", "shard-0")
+    assert led.snapshot()["shard-0"]["owner"] == "b"
+
+
+def test_lease_corrupt_ledger_degrades_to_empty(tmp_path):
+    path = tmp_path / "ledger.json"
+    led = LeaseLedger(path, ttl_s=10.0)
+    led.init_shards({"shard-0": ["k0"]})
+    path.write_text("{not json!")
+    before = _ctr("tune.ledger_corrupt")
+    assert led.snapshot() == {}
+    assert _ctr("tune.ledger_corrupt") > before
+    # init_shards rebuilds it — nothing measured lives here, so no loss
+    led.init_shards({"shard-0": ["k0"]})
+    assert led.states() == {"pending": 1}
+
+
+# -------------------------------------------------------- tune-smoke round --
+def test_tune_smoke_artifact_replica_zero_measurements(tmp_path, monkeypatch):
+    """`make tune-smoke`: one fleet pass measures the deduped grid and
+    publishes a complete verified artifact; a fresh replica preloading it
+    warms up with ZERO autotune measurements and still serves."""
+    cfg = _cfg()
+    art = tmp_path / "plans.artifact.json"
+    out = run_fleet(cfg, BATCH, MAXLEN,
+                    ledger_path=tmp_path / "ledger.json",
+                    store_path=tmp_path / "tuner_cache.json",
+                    out_path=art, n_shards=2, worker_id="tuner-a")
+    assert out["artifact"]["complete"] is True
+    assert out["artifact"]["entries"] == out["groups"] >= 1
+    assert set(out["ledger"]) == {"done"}
+    assert out["worker"]["measured"] == out["groups"]
+    assert not out["worker"]["failed"]
+
+    measured_before = _ctr("registry.measure")
+    eng = _replica(art, tmp_path / "replica-cache", monkeypatch)
+    stats = eng.stats()
+    assert stats["artifact"]["verified"] == stats["artifact"]["total"] >= 1
+    assert stats["artifact"]["rejected"] == 0
+    # the acceptance bar: the artifact-loaded replica measures nothing
+    assert stats["warmup_measured"] == 0
+    assert stats["warmup_failed"] == 0
+    assert _ctr("registry.measure") == measured_before
+
+    # and it serves: tokens come out, step-time seed comes from the
+    # artifact's measured timings (satellite: scheduler virtual clock)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (BATCH, 8), 0,
+                                 cfg.vocab_size)
+    toks = eng.generate(prompts, 3)
+    assert np.asarray(toks).shape == (BATCH, 3)
+    seed_ms = eng.measured_step_time_ms()
+    assert seed_ms is not None and seed_ms > 0
+
+
+def test_step_time_seeds_from_measured_timings(tmp_path, monkeypatch):
+    """serve_stream with step_time_ms=None seeds the scheduler clock from
+    measured plan timings, not the 1.0 ms constant."""
+    from repro.serve import scheduler as sched_mod
+    cfg = _cfg()
+    art = tmp_path / "plans.artifact.json"
+    run_fleet(cfg, BATCH, MAXLEN, ledger_path=tmp_path / "ledger.json",
+              store_path=tmp_path / "tuner_cache.json", out_path=art,
+              n_shards=1)
+    eng = _replica(art, tmp_path / "replica-cache", monkeypatch)
+    # before any served step the estimate already exists: the plan-derived
+    # floor from the artifact's measured winner timings — so serve_stream's
+    # default seed is "measured", not the 1.0 ms constant
+    assert (eng.measured_step_time_ms() or 0) > 0
+    reqs = sched_mod.synthetic_workload(2, seed=0, prompt_lens=(4,),
+                                        new_tokens=(2,),
+                                        arrival_rate=1.0,
+                                        vocab=cfg.vocab_size)
+    before = _ctr("sched.step_time_seeded")
+    res = eng.serve_stream(reqs)
+    assert len(res) == 2
+    assert _ctr("sched.step_time_seeded") > before
+
+
+# --------------------------------------------------------------- artifact --
+def test_publish_salvages_partial_store(tmp_path):
+    """A fleet killed at 60%: publish never demands completeness — the
+    measured entries ship (complete=false, the gap listed), and a replica
+    re-measures only the gap."""
+    cfg = _cfg()
+    store_path = tmp_path / "tuner_cache.json"
+    run_fleet(cfg, BATCH, MAXLEN, ledger_path=tmp_path / "ledger.json",
+              store_path=store_path, n_shards=1)
+    groups = grid_mod.enumerate_work(cfg, BATCH, MAXLEN)
+    store = CompileCache(store_path)
+
+    # copy all but the last group into a fresh store: the "killed" fleet
+    partial = CompileCache(tmp_path / "partial_cache.json")
+    for g in groups[:-1]:
+        partial.put(g.key, store.get(g.key))
+    lost = groups[-1].key
+
+    salvaged = _ctr("artifact.salvaged")
+    art = tmp_path / "partial.artifact.json"
+    summary = artifact_mod.publish(partial, groups, art)
+    assert summary["complete"] is False
+    assert summary["missing"] == 1
+    assert summary["entries"] == len(groups) - 1
+    assert _ctr("artifact.salvaged") > salvaged
+
+    doc = artifact_mod.load(art)
+    assert doc["complete"] is False and doc["missing"] == [lost]
+    assert lost not in doc["entries"]
+    # every shipped entry is manifest-valid
+    for key, plan in doc["entries"].items():
+        assert artifact_mod.verify_entry(key, plan,
+                                         doc["manifest"][key]) is None
+
+
+def test_partial_artifact_replica_measures_only_the_gap(tmp_path,
+                                                        monkeypatch):
+    cfg = _cfg()
+    store_path = tmp_path / "tuner_cache.json"
+    run_fleet(cfg, BATCH, MAXLEN, ledger_path=tmp_path / "ledger.json",
+              store_path=store_path, n_shards=1)
+    groups = grid_mod.enumerate_work(cfg, BATCH, MAXLEN)
+    store = CompileCache(store_path)
+    partial = CompileCache(tmp_path / "partial_cache.json")
+    for g in groups[:-1]:
+        partial.put(g.key, store.get(g.key))
+    art = tmp_path / "partial.artifact.json"
+    artifact_mod.publish(partial, groups, art)
+
+    measured_before = _ctr("registry.measure")
+    eng = _replica(art, tmp_path / "replica-cache", monkeypatch)
+    stats = eng.stats()
+    assert stats["warmup_failed"] == 0
+    # exactly one fresh measurement: the one missing bucket; everything the
+    # artifact covered replays
+    assert _ctr("registry.measure") - measured_before == 1
+    assert stats["warmup_measured"] >= 1
+
+
+def test_verify_entry_reasons():
+    env = "jax-test"
+    plan = {"factor": 2, "mode": "T", "env": env}
+    man = {"sha256": artifact_mod.entry_hash(plan), "env": env}
+    assert artifact_mod.verify_entry("k", plan, man, env=env) is None
+    assert artifact_mod.verify_entry("k", plan, None, env=env) == "missing"
+    assert artifact_mod.verify_entry("k", "junk", man, env=env) == "invalid"
+    assert artifact_mod.verify_entry("k", {"mode": "T"}, man,
+                                     env=env) == "invalid"
+    tampered = dict(plan, factor=8)
+    assert artifact_mod.verify_entry("k", tampered, man, env=env) == "corrupt"
+    stale = dict(plan, env="jax-0.0.0")
+    man_stale = {"sha256": artifact_mod.entry_hash(stale)}
+    assert artifact_mod.verify_entry("k", stale, man_stale,
+                                     env=env) == "stale"
+
+
+def test_tampered_artifact_degrades_per_entry(tmp_path, monkeypatch):
+    """Bitrot one entry (hash mismatch) in a published artifact: the replica
+    rejects *that entry* (quarantining its artifact provenance), preloads
+    the rest, re-measures the rejected bucket locally, and serves."""
+    from repro.compiler import default_cache
+    cfg = _cfg()
+    art = tmp_path / "plans.artifact.json"
+    run_fleet(cfg, BATCH, MAXLEN, ledger_path=tmp_path / "ledger.json",
+              store_path=tmp_path / "tuner_cache.json", out_path=art,
+              n_shards=1)
+    doc = json.loads(art.read_text())
+    bad_key = sorted(doc["entries"])[0]
+    doc["entries"][bad_key]["factor"] = 999      # sha256 now mismatches
+    art.write_text(json.dumps(doc))
+
+    rejected = _ctr("artifact.rejected")
+    eng = _replica(art, tmp_path / "replica-cache", monkeypatch)
+    stats = eng.stats()
+    assert stats["artifact"]["rejected"] == 1
+    assert stats["artifact"]["reasons"] == {"corrupt": 1}
+    assert stats["artifact"]["verified"] == stats["artifact"]["total"] - 1
+    assert _ctr("artifact.rejected") > rejected
+    # provenance quarantined under the :artifact suffix — never the
+    # backend rung, so the local re-measure is not gated
+    q = default_cache().quarantine_entries()
+    assert f"{bad_key}:artifact" in q
+    assert stats["warmup_failed"] == 0
+    toks = eng.generate(jax.random.randint(jax.random.PRNGKey(1),
+                                           (BATCH, 8), 0, cfg.vocab_size), 3)
+    assert np.asarray(toks).shape == (BATCH, 3)
+
+
+def test_stale_env_artifact_rejected_as_stale(tmp_path, monkeypatch):
+    cfg = _cfg()
+    art = tmp_path / "plans.artifact.json"
+    run_fleet(cfg, BATCH, MAXLEN, ledger_path=tmp_path / "ledger.json",
+              store_path=tmp_path / "tuner_cache.json", out_path=art,
+              n_shards=1)
+    doc = json.loads(art.read_text())
+    for key, plan in doc["entries"].items():
+        plan["env"] = "jax-0.0.0-other-build"
+        # keep the hash valid so the *env* check is what rejects
+        doc["manifest"][key]["sha256"] = artifact_mod.entry_hash(plan)
+    art.write_text(json.dumps(doc))
+    eng = _replica(art, tmp_path / "replica-cache", monkeypatch)
+    stats = eng.stats()
+    assert stats["artifact"]["verified"] == 0
+    assert stats["artifact"]["rejected"] == stats["artifact"]["total"]
+    assert set(stats["artifact"]["reasons"]) == {"stale"}
+    # full local warmup still happened
+    assert stats["warmup_failed"] == 0
+    assert stats["plans_warmed"] >= 1
+
+
+# ------------------------------------------------------------ cache prune --
+def test_cache_prune_gc(tmp_path):
+    from repro.compiler.cache import _env_fingerprint
+    cache = CompileCache(tmp_path / "c.json")
+    now = time.time()
+    cache.put("fresh", {"factor": 1})
+    cache.put("aged", {"factor": 1, "created": now - 1000.0})
+    cache.put("stale", {"factor": 1, "env": "jax-0.0.0-other"})
+    cache.record_failure("flaky", "boom", now=now)
+    until = cache.quarantine_entries()["flaky"]["until"]
+
+    pruned = _ctr("cache.pruned")
+    ev = cache.prune(max_age_s=500.0, now=now)
+    assert ev["stale_env"] == 1 and ev["aged"] == 1
+    assert ev["quarantine"] == 0          # window still open: kept
+    assert _ctr("cache.pruned") > pruned
+    assert cache.get("fresh") is not None
+    assert cache.get("aged") is None and cache.get("stale") is None
+    assert "flaky" in cache.quarantine_entries()
+
+    # a second prune past the backoff window forgives the quarantine row
+    ev2 = cache.prune(now=until + 1.0)
+    assert ev2["quarantine"] == 1 and ev2["aged"] == 0
+    assert cache.quarantine_entries() == {}
+    assert cache.get("fresh") is not None
+
+    # cold re-read: the evictions persisted to disk
+    cold = CompileCache(tmp_path / "c.json")
+    assert cold.get("fresh") is not None and cold.get("aged") is None
+
+
+def test_cache_prune_survives_readonly_store(tmp_path):
+    cache = CompileCache(tmp_path / "missing" / "c.json")
+    assert cache.prune(max_age_s=1.0) == {"stale_env": 0, "aged": 0,
+                                          "corrupt": 0, "quarantine": 0}
+
+
+# ------------------------------------------- two-process SIGKILL reclaim --
+_DOOMED_WORKER = """
+import sys, time
+from repro.tune.lease import LeaseLedger
+led = LeaseLedger(sys.argv[1], ttl_s=0.5)
+got = led.claim("doomed")
+print("CLAIMED", got[0] if got else "nothing", flush=True)
+time.sleep(600)      # park mid-lease until SIGKILLed
+"""
+
+
+def test_sigkill_mid_lease_survivor_completes(tmp_path):
+    """The headline crash test: a second OS process claims a shard and is
+    SIGKILLed mid-lease.  After the TTL the in-process survivor reclaims
+    it, finishes the whole grid, and publishes a complete artifact whose
+    every entry verifies against its manifest — no lost work, no
+    double-publish."""
+    cfg = _cfg()
+    ledger_path = tmp_path / "ledger.json"
+    groups = grid_mod.enumerate_work(cfg, BATCH, MAXLEN)
+    assert len(groups) >= 2, "need >=2 shards for a meaningful kill"
+    shards = grid_mod.shard_groups(groups, 2)
+    led = LeaseLedger(ledger_path, ttl_s=0.5)
+    led.init_shards(grid_mod.shard_keys(shards))
+
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(root / "src"))
+    proc = subprocess.Popen([sys.executable, "-c", _DOOMED_WORKER,
+                             str(ledger_path)],
+                            stdout=subprocess.PIPE, text=True, env=env)
+    try:
+        line = proc.stdout.readline().strip()
+        assert line.startswith("CLAIMED shard-"), line
+        dead_shard = line.split()[1]
+        proc.kill()                      # SIGKILL: no cleanup, no release
+        proc.wait(timeout=30)
+        assert proc.returncode == -signal.SIGKILL
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=30)
+    assert led.snapshot()[dead_shard]["owner"] == "doomed"
+
+    time.sleep(0.6)                      # let the dead lease expire
+    reclaimed = _ctr("tune.lease_reclaimed")
+    out = run_fleet(cfg, BATCH, MAXLEN, ledger_path=ledger_path,
+                    store_path=tmp_path / "tuner_cache.json",
+                    out_path=tmp_path / "plans.artifact.json",
+                    n_shards=2, worker_id="survivor", ttl_s=0.5)
+    assert _ctr("tune.lease_reclaimed") > reclaimed
+    assert led.all_done()
+    assert led.snapshot()[dead_shard]["owner"] == "survivor"
+    assert led.snapshot()[dead_shard]["attempts"] == 2
+    assert out["artifact"]["complete"] is True
+    assert out["artifact"]["entries"] == len(groups)
+
+    doc = artifact_mod.load(tmp_path / "plans.artifact.json")
+    assert sorted(doc["entries"]) == sorted(g.key for g in groups)
+    for key, plan in doc["entries"].items():
+        assert artifact_mod.verify_entry(key, plan,
+                                         doc["manifest"][key]) is None
